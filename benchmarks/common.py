@@ -1,0 +1,26 @@
+"""Benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["time_call", "emit"]
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall seconds of fn(*args) after warmup (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,31 @@
+"""Fig. 10 analogue: strong scaling of the distributed 1-degree
+preprocessing (paper: near-linear speedup on R-MAT SCALE 23 EF 32)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_call
+from repro.core.distributed import one_degree_reduce_distributed
+from repro.graphs import rmat_graph
+
+
+def run() -> None:
+    g = rmat_graph(11, 16, seed=0)
+    base = None
+    for p in (1, 2, 4, 8):
+        if p > jax.device_count():
+            continue
+        mesh = jax.make_mesh(
+            (p,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+        )
+
+        def job():
+            return one_degree_reduce_distributed(g, mesh, "data")
+
+        sec = time_call(job, warmup=1, iters=3)
+        base = base or sec
+        emit(f"fig10/preproc_p{p}", sec * 1e6, f"speedup={base/sec:.2f}x;m={g.num_edges}")
+
+
+if __name__ == "__main__":
+    run()

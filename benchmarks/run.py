@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run --only table4
+
+Needs 8 host devices for the distributed benchmarks, so it sets the XLA
+flag before importing jax (this entrypoint only — tests see 1 device).
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig4_scaling,
+        fig9_overlap,
+        fig10_preprocessing,
+        table2_single_device,
+        table3_subcluster,
+        table4_one_degree,
+        table5_heuristics,
+    )
+
+    suites = {
+        "table2": table2_single_device.run,
+        "table3": table3_subcluster.run,
+        "table4": table4_one_degree.run,
+        "table5": table5_heuristics.run,
+        "fig4": fig4_scaling.run,
+        "fig9": fig9_overlap.run,
+        "fig10": fig10_preprocessing.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and args.only not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Table 2 analogue: single-device BC time per source-round across graph
+classes (road-network-like long diameter vs. scale-free short diameter)
+and engines (dense MXU path / sparse segment-sum path / fused Pallas).
+
+The paper compares MGBC against McLaughlin, Sariyüce and Gunrock on one
+GPU; without those codes (or a GPU) the meaningful reproduction is the
+per-round cost profile across the same topology classes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import betweenness_centrality
+from repro.graphs import grid_graph, gnp_graph, rmat_graph, road_like_graph
+
+
+def run() -> None:
+    graphs = {
+        "roadnet_like": road_like_graph(16, 16, spur_fraction=0.4, seed=0),
+        "grid_20x20": grid_graph(20, 20),
+        "rmat_s9_ef8": rmat_graph(9, 8, seed=0),
+        "gnp_400_p02": gnp_graph(400, 0.02, seed=0),
+    }
+    for name, g in graphs.items():
+        for engine in ("dense", "sparse"):
+            def job():
+                return betweenness_centrality(
+                    g, batch_size=32, heuristics="h0", engine_kind=engine
+                )
+
+            sec = time_call(job, warmup=1, iters=3)
+            res = job()
+            per_round_us = sec / max(res.rounds_run, 1) * 1e6
+            teps = g.num_edges * res.forward_columns / sec
+            emit(
+                f"table2/{name}/{engine}",
+                per_round_us,
+                f"total_s={sec:.3f};MTEPS={teps/1e6:.1f};n={g.n};m={g.num_edges}",
+            )
+
+
+if __name__ == "__main__":
+    run()

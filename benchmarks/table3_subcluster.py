@@ -1,0 +1,48 @@
+"""Table 3 analogue: sub-clustering — replication (fr) vs distribution (fd).
+
+Paper: Orkut BC total time vs fr at fixed p.  Here p = 8 host devices:
+fr=1 runs one 2x4 fine-grained grid; fr=2 runs two 2x2 sub-clusters;
+fr=4 runs four 1x2 sub-clusters (max replication possible with a 2-D
+grid per replica).  More replication ⇒ fewer devices per traversal but
+more concurrent rounds — the paper's observed trade-off.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_call
+from repro.core.distributed import distributed_betweenness_centrality
+from repro.graphs import rmat_graph
+
+
+def _mesh(shape, names):
+    return jax.make_mesh(
+        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
+    )
+
+
+def run() -> None:
+    if jax.device_count() < 8:
+        emit("table3/skipped", 0.0, "needs 8 host devices")
+        return
+    g = rmat_graph(8, 8, seed=0)
+    configs = {
+        "fr1_fd8": ((2, 4), ("data", "model"), None),
+        "fr2_fd4": ((2, 2, 2), ("pod", "data", "model"), "pod"),
+        "fr4_fd2": ((4, 1, 2), ("pod", "data", "model"), "pod"),
+    }
+    for name, (shape, names, rep) in configs.items():
+        mesh = _mesh(shape, names)
+
+        def job():
+            return distributed_betweenness_centrality(
+                g, mesh, replica_axis=rep, batch_size=16, heuristics="h0"
+            )
+
+        sec = time_call(job, warmup=1, iters=2)
+        teps = g.num_edges * g.n / sec
+        emit(f"table3/{name}", sec * 1e6, f"MTEPS={teps/1e6:.1f};n={g.n}")
+
+
+if __name__ == "__main__":
+    run()

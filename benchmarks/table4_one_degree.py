@@ -1,0 +1,51 @@
+"""Table 4 analogue: impact of the 1-degree reduction.
+
+Paper: R-MAT graphs at several edge factors + com-youtube; reports the
+1-degree fraction, total/mean time with the heuristic on vs off, the
+preprocessing cost and the speedup.  Lower edge factor ⇒ more leaves ⇒
+bigger win (their EF4 1.8x vs EF32 1.3x) — the trend this benchmark
+reproduces.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, time_call
+from repro.core import betweenness_centrality
+from repro.core.heuristics.one_degree import one_degree_reduce
+from repro.graphs import rmat_graph, road_like_graph
+
+
+def run() -> None:
+    graphs = {
+        "rmat_s9_ef4": rmat_graph(9, 4, seed=0),
+        "rmat_s9_ef8": rmat_graph(9, 8, seed=0),
+        "rmat_s9_ef16": rmat_graph(9, 16, seed=0),
+        "youtube_like": road_like_graph(10, 10, spur_fraction=2.0, seed=0),
+    }
+    for name, g in graphs.items():
+        t0 = time.perf_counter()
+        prep = one_degree_reduce(g)
+        prep_s = time.perf_counter() - t0
+        frac = prep.num_removed / g.n * 100
+
+        t_off = time_call(
+            lambda: betweenness_centrality(g, batch_size=32, heuristics="h0"),
+            warmup=1,
+            iters=3,
+        )
+        t_on = time_call(
+            lambda: betweenness_centrality(g, batch_size=32, heuristics="h1"),
+            warmup=1,
+            iters=3,
+        )
+        emit(
+            f"table4/{name}",
+            t_on * 1e6,
+            f"speedup={t_off/t_on:.2f}x;one_degree_pct={frac:.1f};"
+            f"prep_s={prep_s:.4f};t_off_s={t_off:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

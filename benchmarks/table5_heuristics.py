@@ -1,0 +1,48 @@
+"""Table 5 / Fig. 12 analogue: H0-H3 on a road-network-like graph.
+
+Reports, per heuristic mode: total time, explicit (traversed) sources,
+1-degree-skipped vertices and 2-degree-derived vertices — the exact
+accounting of the paper's Table 5 (their RoadNet-PA run), including the
+H3 effect where the 1-degree pass *creates* new 2-degree vertices.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, time_call
+from repro.core import betweenness_centrality, brandes_reference
+import numpy as np
+
+from repro.graphs import road_like_graph, suburb_graph
+
+
+def run() -> None:
+    graphs = {
+        "road": road_like_graph(14, 14, spur_fraction=0.6, seed=0),
+        # leaf-on-3-degree topology: the paper's H3>H2 composition regime
+        "suburb": suburb_graph(7, 7, leaf_fraction=0.6, seed=0),
+    }
+    for gname, g in graphs.items():
+        ref = brandes_reference(g)
+        derived_h2 = None
+        for h in ("h0", "h1", "h2", "h3", "h1t", "h3t"):  # *t = tree contraction
+            def job():
+                return betweenness_centrality(g, batch_size=32, heuristics=h)
+
+            sec = time_call(job, warmup=1, iters=3)
+            res = job()
+            np.testing.assert_allclose(res.bc, ref, rtol=1e-4, atol=1e-4)
+            sch = res.schedule
+            if h == "h2":
+                derived_h2 = sch.num_derived
+            extra = ""
+            if h == "h3" and derived_h2 is not None:
+                extra = f";derived_gain_vs_h2={sch.num_derived - derived_h2}"
+            emit(
+                f"table5/{gname}/{h}",
+                sec * 1e6,
+                f"explicit={sch.num_explicit};leaf_skipped={sch.num_leaf_skipped};"
+                f"derived2deg={sch.num_derived};n={g.n}" + extra,
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Distributed MGBC: 2-D decomposition + sub-clustering on a device mesh.
+
+    PYTHONPATH=src python examples/bc_distributed.py
+
+Runs the paper's full stack on 8 host devices: two sub-clusters (fr=2),
+each a 2x2 grid (fd=4), R-MAT input, heuristics on — then verifies
+against the oracle.  The same code drives the 16x16(x2) production mesh.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+import jax
+
+from repro.core import brandes_reference
+from repro.core.distributed import distributed_betweenness_centrality
+from repro.graphs import rmat_graph
+
+graph = rmat_graph(8, 8, seed=1)
+print(f"R-MAT SCALE 8, EF 8: n={graph.n}, m={graph.num_edges}")
+
+mesh = jax.make_mesh(
+    (2, 2, 2),
+    ("pod", "data", "model"),
+    axis_types=(jax.sharding.AxisType.Auto,) * 3,
+)
+print(f"mesh: {dict(mesh.shape)} — fr=2 sub-clusters of fd=4 (2x2 grids)")
+
+bc, schedule = distributed_betweenness_centrality(
+    graph,
+    mesh,
+    replica_axis="pod",
+    batch_size=16,
+    heuristics="h3",
+)
+print(
+    f"{len(schedule.rounds)} rounds "
+    f"({schedule.num_explicit} explicit sources, "
+    f"{schedule.num_derived} derived by the 2-degree heuristic, "
+    f"{schedule.num_leaf_skipped} leaves removed)"
+)
+np.testing.assert_allclose(bc, brandes_reference(graph), rtol=1e-5, atol=1e-5)
+print("distributed result matches Brandes oracle ✓")

@@ -1,0 +1,66 @@
+"""GNN training with the paper's 2-D decomposition (models/gnn2d.py).
+
+    PYTHONPATH=src python examples/gnn_products.py
+
+Trains a reduced GraphCast-style processor on a synthetic products-like
+graph, full-batch, with message passing distributed exactly like MGBC's
+traversal (expand/fold collectives) over an 8-device mesh.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.data.graphs import full_graph_batch, to_2d_batch
+from repro.graphs import rmat_graph
+from repro.models import gnn as gnn_mod
+from repro.models.gnn2d import make_gnn2d_loss_fn
+from repro.optim import adamw
+
+R, C = 2, 4
+cfg = dataclasses.replace(get_arch("gin-tu").arch, n_layers=3, d_hidden=32)
+graph = rmat_graph(10, 8, seed=3)
+d_feat, n_classes = 32, 16
+
+batch = full_graph_batch(cfg, graph, graph.n, 2 * graph.num_arcs, d_feat,
+                         n_classes, n_classes, seed=0)
+# learnable labels: a linear probe of the node features
+probe = np.random.default_rng(1).standard_normal((d_feat, n_classes))
+batch["labels"] = np.argmax(batch["node_feat"] @ probe, axis=1).astype(np.int32)
+b2d = to_2d_batch(batch, graph.n, R, C)
+chunk = b2d["node_feat"].shape[0] // (R * C)
+
+mesh = jax.make_mesh((R, C), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+loss_fn, _ = make_gnn2d_loss_fn(
+    cfg, mesh, "full_graph", chunk=chunk, max_arcs=b2d["src_local"].shape[2]
+)
+params = gnn_mod.init_params(cfg, d_feat, n_classes, jax.random.PRNGKey(0))
+opt = adamw(3e-3)
+state = opt.init(params)
+
+@jax.jit
+def step(params, state, batch):
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
+    params, state = opt.update(grads, state, params)
+    return params, state, loss
+
+jb = jax.tree.map(jnp.asarray, b2d)
+t0 = time.time()
+losses = []
+for i in range(60):
+    params, state, loss = step(params, state, jb)
+    losses.append(float(loss))
+    if i % 10 == 0 or i == 59:
+        print(f"step {i:3d}  loss {losses[-1]:.4f}")
+print(f"{time.time()-t0:.1f}s — node classification on n={graph.n}, "
+      f"m={graph.num_edges} with 2-D distributed message passing ✓")
+assert losses[-1] < 0.6 * losses[0], (losses[0], losses[-1])

@@ -1,0 +1,28 @@
+"""Quickstart: exact betweenness centrality in five lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import betweenness_centrality, brandes_reference
+from repro.graphs import road_like_graph
+
+# a road-network-like graph: long diameter, many 1-/2-degree vertices
+graph = road_like_graph(10, 10, spur_fraction=0.5, seed=7)
+print(f"graph: n={graph.n} vertices, m={graph.num_edges} edges")
+
+# MGBC with all heuristics (H3 = 1-degree reduction + 2-degree DMF)
+result = betweenness_centrality(graph, batch_size=32, heuristics="h3")
+
+print(
+    f"rounds: {result.rounds_run}; forward BFS columns: "
+    f"{result.forward_columns} (of {graph.n} vertices — the rest were "
+    f"handled by the heuristics)"
+)
+top = np.argsort(result.bc)[::-1][:5]
+for v in top:
+    print(f"  vertex {int(v):4d}   BC = {result.bc[int(v)]:9.1f}")
+
+# exactness: identical to the textbook Brandes oracle
+np.testing.assert_allclose(result.bc, brandes_reference(graph), rtol=1e-5, atol=1e-5)
+print("matches Brandes oracle ✓")

@@ -1,0 +1,9 @@
+"""repro — Scalable Betweenness Centrality on multi-pod TPU systems.
+
+A production-grade JAX reproduction (and extension) of Vella, Carbone &
+Bernaschi, "Algorithms and Heuristics for Scalable Betweenness Centrality
+Computation on Multi-GPU Systems" (2016), plus the training/serving
+substrate for the ten assigned architectures.  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Checkpointing substrate: sharded npz save/restore, async writer,
+retention, exact resume."""
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointManager
+
+__all__ = ["Checkpointer", "CheckpointManager"]

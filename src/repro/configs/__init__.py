@@ -1,0 +1,21 @@
+"""Architecture configs (one module per assigned arch + the paper's own).
+
+Importing this package populates the registry.
+"""
+from repro.configs import (  # noqa: F401
+    bc_rmat,
+    codeqwen15_7b,
+    deepseek_coder_33b,
+    dlrm_rm2,
+    gat_cora,
+    gemma_7b,
+    gin_tu,
+    granite_moe_1b_a400m,
+    graphcast,
+    llama4_maverick_400b_a17b,
+    meshgraphnet,
+)
+from repro.configs.base import *  # noqa: F401,F403
+from repro.configs.registry import ArchBundle, get_arch, list_archs
+
+__all__ = ["ArchBundle", "get_arch", "list_archs"]

@@ -1,0 +1,19 @@
+"""The paper's own workload: MGBC on R-MAT graphs (paper §4.1/4.3).
+
+SCALE 23/25, EF 16 — the strong-scaling configurations of Figs. 4-6.
+Dry-run cells lower one full BC round (forward counting + dependency
+accumulation, 2-D partitioned) with a static level bound.
+"""
+from repro.configs.base import BC_SHAPES, BCArch
+from repro.configs.registry import register
+
+ARCH = BCArch(
+    name="bc-rmat",
+    scale=23,
+    edge_factor=16,
+    batch_size=16,
+    heuristics="h3",
+    max_levels=12,  # R-MAT EF16 diameter ~6-8 (paper Table 1); was 24 — §Perf iteration A
+)
+
+register(ARCH, BC_SHAPES)

@@ -1,0 +1,22 @@
+"""DLRM RM2 (arXiv:1906.00091; paper tier).
+
+13 dense + 26 sparse features, embed_dim=64, bottom MLP 13-512-256-64,
+top MLP 512-512-256-1, dot interaction.  10M rows per table (RM2-class);
+lookups go through the EmbeddingBag built in models/dlrm.py.
+"""
+from repro.configs.base import DLRM_SHAPES, DLRMArch
+from repro.configs.registry import register
+
+ARCH = DLRMArch(
+    name="dlrm-rm2",
+    n_dense=13,
+    n_sparse=26,
+    embed_dim=64,
+    bot_mlp=(512, 256, 64),
+    top_mlp=(512, 256, 1),
+    interaction="dot",
+    rows_per_table=10_485_760,  # 10x2^20: divides the 256/512-chip meshes
+    hot_size=1,
+)
+
+register(ARCH, DLRM_SHAPES)

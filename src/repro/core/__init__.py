@@ -1,0 +1,17 @@
+"""The paper's primary contribution: Multi-GPU (here: multi-pod TPU)
+exact Betweenness Centrality — MGBC.
+
+Layers (paper §3):
+  engine.py       node-level parallelism — multi-source frontier-matrix
+                  traversal (active-edge analogue on the MXU)
+  distributed.py  cluster-level — 2-D decomposition over a device mesh
+                  (expand/fold collectives) + sub-cluster replication
+  scheduler.py    source rounds: the unit of jit, checkpoint, elasticity
+  heuristics/     1-degree reduction and 2-degree DMF
+  bc.py           single-device driver (semantic reference)
+  brandes_ref.py  numpy oracle (Algorithm 1)
+"""
+from repro.core.bc import BCResult, betweenness_centrality
+from repro.core.brandes_ref import brandes_reference
+
+__all__ = ["BCResult", "betweenness_centrality", "brandes_reference"]

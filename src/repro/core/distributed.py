@@ -1,0 +1,374 @@
+"""Distributed MGBC: 2-D decomposition + sub-clustering (paper §3.2-3.3).
+
+Communication structure per traversal level, per sub-cluster (an R×C
+grid of devices; see graphs/partition.py for the chunk layout):
+
+  expand (vertical, paper Alg. 2 line 15):
+      all_gather(frontier-σ chunk, axis=row)  →  F[cols_j]  on every
+      device of grid column j — O(√p) partners.
+  local compute (node level):
+      gather F[src_local] + segment_sum into dst_local — the TPU
+      replacement for the CUDA active-edge kernel.
+  fold (horizontal, Alg. 2 line 19):
+      psum_scatter(partials, axis=col) — sums the C partial
+      contributions and delivers each device exactly its owned chunk.
+
+The backward sweep is the mirror image with g = (1+δ+ω)/σ masked to
+depth lvl+1.  Unlike the paper (which exchanges d and σ between the two
+phases, §3.2), *all* state here stays owner-sharded and only
+frontier-σ / g ever travel — the depth test of the edge's far endpoint
+is folded into the gathered quantity.  This removes one exchange per
+round entirely (recorded as a beyond-paper optimization in
+EXPERIMENTS.md §Perf).
+
+Sub-clustering (paper §3.3): a leading mesh axis carries ``fr`` graph
+replicas, each processing different source rounds; BC is additive so the
+final merge is one psum (or a host-side sum over the replica dim, which
+is what we do to keep the round function replica-local).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.bc import apply_reduction_corrections
+from repro.core.heuristics.two_degree import derive_two_degree_columns
+from repro.core.scheduler import Schedule, build_schedule
+from repro.graphs.graph import Graph
+from repro.graphs.partition import TwoDPartition, partition_2d
+
+__all__ = [
+    "DistributedBCPlan",
+    "make_distributed_round_fn",
+    "distributed_betweenness_centrality",
+    "one_degree_reduce_distributed",
+]
+
+
+def one_degree_reduce_distributed(
+    graph: Graph, mesh: Mesh, axis_name: str | tuple[str, ...] = "data"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Distributed 1-degree preprocessing (paper Alg. 6, §3.4.1).
+
+    The paper 1-D-partitions edges, sorts by source and scans; the
+    data-parallel equivalent shards the arc list over ``axis_name``,
+    computes degrees with a local segment-sum + psum, then marks arcs
+    incident to a leaf and accumulates ω the same way.  Near-linear
+    scaling (paper Fig. 10) follows from the arc shards being independent
+    except for two n-sized all-reduces.
+
+    Returns (omega int64 [n], arc_removed bool [m2]) — identical to the
+    host-side :func:`repro.core.heuristics.one_degree.one_degree_reduce`.
+    """
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    p = 1
+    for a in axes:
+        p *= mesh.shape[a]
+    n = graph.n
+    src_p, dst_p, m2 = graph.padded_arcs(multiple=p)
+
+    def body(src, dst):
+        ones = jnp.ones_like(src, dtype=jnp.float32)
+        deg = jax.lax.psum(
+            jax.ops.segment_sum(ones, src, num_segments=n + 1), axes
+        )
+        leaf = deg == 1.0  # sentinel vertex n has huge degree, never a leaf
+        removed = leaf[src] | leaf[dst]
+        omega = jax.lax.psum(
+            jax.ops.segment_sum(leaf[src].astype(jnp.float32), dst, num_segments=n + 1),
+            axes,
+        )
+        return omega[:n], removed
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axes), P(axes)),
+        out_specs=(P(), P(axes)),
+        check_vma=False,
+    )
+    omega, removed = jax.jit(fn)(jnp.asarray(src_p), jnp.asarray(dst_p))
+    return (
+        np.asarray(omega, np.int64),
+        np.asarray(removed)[:m2],
+    )
+
+
+@dataclasses.dataclass
+class DistributedBCPlan:
+    """Everything needed to run distributed rounds on a mesh."""
+
+    mesh: Mesh
+    partition: TwoDPartition
+    replica_axis: str | None
+    row_axis: str
+    col_axis: str
+    round_fn: object  # jitted round function
+    n_replicas: int
+
+
+def _grid_axes(mesh: Mesh, row_axis: str, col_axis: str, replica_axis: str | None):
+    R = mesh.shape[row_axis]
+    C = mesh.shape[col_axis]
+    fr = mesh.shape[replica_axis] if replica_axis is not None else 1
+    return R, C, fr
+
+
+def make_distributed_round_fn(
+    partition: TwoDPartition,
+    mesh: Mesh,
+    *,
+    row_axis: str = "data",
+    col_axis: str = "model",
+    replica_axis: str | None = None,
+    num_levels: int | None = None,
+    fuse_backward_payload: bool = True,
+):
+    """Build the sub-cluster-parallel, 2-D-distributed round function.
+
+    The returned jitted function maps
+      (src_local  i32 [R, C, max_arcs]   — sharded (row, col),
+       dst_local  i32 [R, C, max_arcs]   — sharded (row, col),
+       omega      f32 [n_pad]            — sharded ((col, row)),
+       sources    i32 [fr, s]            — sharded (replica),
+       derived    i32 [fr, k, 3]         — sharded (replica))
+      -> (bc  f32 [fr, n_pad]  — sharded (replica, (col, row)),
+          ns  f32 [fr, s+k]    — sharded (replica),
+          roots i32 [fr, s+k]  — sharded (replica))
+
+    ``fuse_backward_payload`` keeps σ-frontier and g exchanges as a single
+    gathered tensor each (the paper's overlap/fusion idea, §3.2 Fig. 2);
+    setting it False splits the backward gather into two half-width
+    collectives to mimic the paper's unfused σ/d exchange for the
+    Fig. 9 benchmark.
+    """
+    R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
+    if (R, C) != (partition.R, partition.C):
+        raise ValueError(
+            f"mesh grid {(R, C)} != partition grid {(partition.R, partition.C)}"
+        )
+    chunk = partition.chunk
+    n_pad = partition.n_pad
+    grid_axes = (row_axis, col_axis)
+
+    def body(src_local, dst_local, omega, sources, derived):
+        # strip the sharded leading dims: local views
+        src_local = src_local[0, 0]  # [max_arcs]
+        dst_local = dst_local[0, 0]
+        sources = sources[0]  # [s]
+        derived = derived[0]  # [k, 3]
+        omega_o = omega  # [chunk] owned slice
+        s = sources.shape[0]
+
+        i = jax.lax.axis_index(row_axis)
+        j = jax.lax.axis_index(col_axis)
+        base = (j * R + i) * chunk  # first owned global vertex id
+        owned_ids = base + jnp.arange(chunk, dtype=jnp.int32)  # [chunk]
+
+        def spmv(x_owned):
+            """A @ x for the owned chunks: expand → local → fold."""
+            x_col = jax.lax.all_gather(x_owned, row_axis, tiled=True)  # [R*chunk, s]
+            msgs = x_col[src_local]  # [max_arcs, s]
+            partial = jax.ops.segment_sum(
+                msgs, dst_local, num_segments=C * chunk + 1
+            )[: C * chunk]
+            return jax.lax.psum_scatter(
+                partial, col_axis, scatter_dimension=0, tiled=True
+            )  # [chunk, s]
+
+        # ---------------------------------------------------- forward
+        src_onehot = (
+            (owned_ids[:, None] == sources[None, :]) & (sources[None, :] >= 0)
+        ).astype(jnp.float32)
+        sigma = src_onehot
+        depth = jnp.where(src_onehot > 0, 0, -1).astype(jnp.int32)
+
+        def fwd_level(lvl, sigma, depth):
+            frontier = sigma * (depth == lvl - 1)
+            t = spmv(frontier)
+            newly = (t > 0) & (depth < 0)
+            depth = jnp.where(newly, lvl, depth)
+            sigma = sigma + jnp.where(newly, t, 0.0)
+            alive = jax.lax.psum(newly.any().astype(jnp.int32), grid_axes) > 0
+            return sigma, depth, alive
+
+        if num_levels is None:
+
+            def cond(carry):
+                _, _, lvl, alive = carry
+                return alive & (lvl <= n_pad)
+
+            def fbody(carry):
+                sigma, depth, lvl, _ = carry
+                sigma, depth, alive = fwd_level(lvl, sigma, depth)
+                return sigma, depth, lvl + 1, alive
+
+            sigma, depth, _, _ = jax.lax.while_loop(
+                cond, fbody, (sigma, depth, jnp.int32(1), jnp.bool_(True))
+            )
+        else:
+
+            def fbody(k, carry):
+                sigma, depth = carry
+                sigma, depth, _ = fwd_level(k + 1, sigma, depth)
+                return sigma, depth
+
+            sigma, depth = jax.lax.fori_loop(0, num_levels, fbody, (sigma, depth))
+
+        # ------------------------------------- derived 2-degree columns
+        sigma_c, depth_c = derive_two_degree_columns(
+            sigma, depth, derived, row_ids=owned_ids
+        )
+        c_idx = derived[:, 0]
+        sigma_all = jnp.concatenate([sigma, sigma_c], axis=1)
+        depth_all = jnp.concatenate([depth, depth_c], axis=1)
+
+        # ---------------------------------------------------- backward
+        max_depth = jax.lax.pmax(jnp.max(depth_all), grid_axes)
+        omega_col = omega_o.astype(jnp.float32)[:, None]
+        delta0 = jnp.zeros_like(sigma_all)
+        safe_sigma = jnp.where(sigma_all > 0, sigma_all, 1.0)
+
+        def bwd_level(lvl, delta):
+            g = jnp.where(
+                depth_all == lvl + 1, (1.0 + delta + omega_col) / safe_sigma, 0.0
+            )
+            if fuse_backward_payload:
+                t = spmv(g)
+            else:  # paper-style split payload (benchmark mode)
+                half = g.shape[1] // 2
+                t = jnp.concatenate([spmv(g[:, :half]), spmv(g[:, half:])], axis=1)
+            return delta + jnp.where(depth_all == lvl, sigma_all * t, 0.0)
+
+        if num_levels is None:
+
+            def bcond(carry):
+                _, lvl = carry
+                return lvl >= 1
+
+            def bbody(carry):
+                delta, lvl = carry
+                return bwd_level(lvl, delta), lvl - 1
+
+            delta, _ = jax.lax.while_loop(bcond, bbody, (delta0, max_depth - 1))
+        else:
+
+            def bbody(k, delta):
+                return bwd_level(num_levels - 1 - k, delta)
+
+            delta = jax.lax.fori_loop(0, num_levels - 1, bbody, delta0)
+
+        # ------------------------------------------------- BC + n_s
+        roots = jnp.concatenate([sources, c_idx])
+        omega_root_local = jnp.where(
+            (roots[None, :] == owned_ids[:, None]), omega_col, 0.0
+        ).sum(axis=0)
+        omega_root = jax.lax.psum(omega_root_local, grid_axes)
+        mult = jnp.where(roots >= 0, omega_root + 1.0, 0.0)
+
+        root_onehot = owned_ids[:, None] == roots[None, :]
+        weighted = jnp.where(root_onehot, 0.0, delta * mult[None, :])
+        bc_owned = weighted.sum(axis=1)  # [chunk]
+
+        ns_local = ((depth_all >= 0) * (1.0 + omega_col)).sum(axis=0)
+        ns = jax.lax.psum(ns_local, grid_axes)  # [s+k]
+
+        return bc_owned[None], ns[None], roots[None]
+
+    # sharding specs
+    rep = (replica_axis,) if replica_axis is not None else (None,)
+    in_specs = (
+        P(row_axis, col_axis, None),
+        P(row_axis, col_axis, None),
+        P((col_axis, row_axis)),
+        P(*rep, None),
+        P(*rep, None, None),
+    )
+    out_specs = (
+        P(*rep, (col_axis, row_axis)),
+        P(*rep, None),
+        P(*rep, None),
+    )
+    shmapped = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+    return jax.jit(shmapped)
+
+
+def distributed_betweenness_centrality(
+    graph: Graph,
+    mesh: Mesh,
+    *,
+    row_axis: str = "data",
+    col_axis: str = "model",
+    replica_axis: str | None = None,
+    batch_size: int = 16,
+    heuristics: str = "h0",
+    num_levels: int | None = None,
+) -> tuple[np.ndarray, Schedule]:
+    """Run the full distributed BC computation on ``mesh``.
+
+    Rounds are dealt ``fr`` at a time (one per sub-cluster); the replica
+    sum happens host-side so a straggling/preempted replica's round can be
+    re-issued (fault tolerance path, see distributed/fault_tolerance.py).
+    """
+    schedule, prep, residual, omega_i = build_schedule(
+        graph, batch_size=batch_size, heuristics=heuristics
+    )
+    R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
+    part = partition_2d(residual, R, C)
+
+    round_fn = make_distributed_round_fn(
+        part,
+        mesh,
+        row_axis=row_axis,
+        col_axis=col_axis,
+        replica_axis=replica_axis,
+        num_levels=num_levels,
+    )
+
+    n_pad = part.n_pad
+    omega_pad = np.zeros(n_pad, np.float32)
+    omega_pad[: graph.n] = omega_i
+    # reorder omega into chunk-owner layout: flat position = chunk-id*chunk + off
+    # chunk ids are contiguous in vertex order, so identity layout works.
+    omega_dev = jnp.asarray(omega_pad)
+
+    s = schedule.batch_size
+    k = schedule.derived_per_round
+    bc = np.zeros(graph.n, np.float64)
+    ns_by_root: dict[int, float] = {}
+
+    rounds = list(schedule.rounds)
+    for start in range(0, len(rounds), fr):
+        block = rounds[start : start + fr]
+        srcs = np.full((fr, s), -1, np.int32)
+        ders = np.full((fr, k, 3), -1, np.int32)
+        for r, rnd in enumerate(block):
+            srcs[r] = rnd.sources
+            ders[r] = rnd.derived
+        bc_r, ns_r, roots_r = round_fn(
+            jnp.asarray(part.src_local),
+            jnp.asarray(part.dst_local),
+            omega_dev,
+            jnp.asarray(srcs),
+            jnp.asarray(ders),
+        )
+        bc += np.asarray(bc_r, np.float64).sum(axis=0)[: graph.n]
+        roots_np = np.asarray(roots_r)
+        ns_np = np.asarray(ns_r, np.float64)
+        for r in range(len(block)):
+            for root, nv in zip(roots_np[r], ns_np[r]):
+                if root >= 0:
+                    ns_by_root[int(root)] = float(nv)
+
+    if prep is not None:
+        apply_reduction_corrections(bc, prep, schedule, ns_by_root)
+
+    return bc, schedule

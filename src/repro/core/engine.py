@@ -1,0 +1,280 @@
+"""Single-device traversal engine: multi-source BFS + dependency sweep.
+
+TPU-native formulation of the paper's node-level parallelism (§3.1):
+instead of queue-based frontiers with prefix-sum/binary-search data→thread
+mapping (a GPU construct), one BFS level is a *masked matrix product* over
+a frontier matrix ``F ∈ R^{n×s}`` holding ``s`` concurrent sources:
+
+    forward level ℓ:   t = A @ (σ ⊙ [d = ℓ-1])
+                       newly discovered:  d < 0 and t > 0  →  d := ℓ
+                       path counts:       σ += t  on  d = ℓ
+
+    backward level ℓ:  g = (1 + δ + ω) / σ  on  d = ℓ+1
+                       δ += σ ⊙ (A @ g)     on  d = ℓ          (checking
+                       successors — Madduri et al., no predecessor lists)
+
+Both sweeps share the depth array ``d`` as the level structure: the paper's
+"reuse the forward prefix-sum offsets in the backward sweep" optimization is
+inherited structurally (there are no offsets to recompute).
+
+Two interchangeable operators provide ``A @ x``:
+
+* dense  — ``[n, n]`` 0/1 matrix on the MXU (small graphs, Pallas kernel
+  target, and the per-block compute of the distributed engine);
+* sparse — padded symmetric arc list + gather/``segment_sum`` (the TPU
+  replacement for the paper's atomic scatter-adds).
+
+ω is the 1-degree reduction weight vector (zeros when the heuristic is
+off); the formulas above then reduce to plain Brandes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Operator = Callable[[jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "make_dense_operator",
+    "make_sparse_operator",
+    "forward_counting",
+    "backward_accumulation",
+    "forward_counting_fused",
+    "backward_accumulation_fused",
+    "ForwardState",
+]
+
+
+class ForwardState(NamedTuple):
+    sigma: jnp.ndarray  # f32 [n, s] shortest-path counts
+    depth: jnp.ndarray  # i32 [n, s] discovery level (-1 = unreached)
+    max_depth: jnp.ndarray  # i32 [] deepest level discovered
+
+
+def make_dense_operator(adjacency: jnp.ndarray) -> Operator:
+    """``A @ x`` with a dense [n, n] 0/1 adjacency (undirected ⇒ symmetric)."""
+
+    def apply(x: jnp.ndarray) -> jnp.ndarray:
+        return adjacency @ x
+
+    return apply
+
+
+def make_sparse_operator(src: jnp.ndarray, dst: jnp.ndarray, n: int) -> Operator:
+    """``A @ x`` via arc-list gather + segment-sum.
+
+    ``src``/``dst`` are the padded symmetric arc arrays; padding arcs use
+    the sentinel vertex ``n`` on both endpoints, which reads from / writes
+    to a discarded extra row. ``out[v] = Σ_{(u,v) arcs} x[u]``.
+    """
+
+    def apply(x: jnp.ndarray) -> jnp.ndarray:
+        x_pad = jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
+        msgs = x_pad[src]
+        out = jax.ops.segment_sum(msgs, dst, num_segments=n + 1)
+        return out[:n]
+
+    return apply
+
+
+def _forward_level(operator: Operator, lvl, sigma, depth):
+    frontier = sigma * (depth == lvl - 1)
+    contrib = operator(frontier)
+    newly = (contrib > 0) & (depth < 0)
+    depth = jnp.where(newly, lvl, depth)
+    sigma = sigma + jnp.where(newly, contrib, 0.0)
+    return sigma, depth, newly.any()
+
+
+def forward_counting(
+    operator: Operator,
+    src_onehot: jnp.ndarray,
+    num_levels: int | None = None,
+) -> ForwardState:
+    """Multi-source shortest-path counting (Alg. 2 analogue).
+
+    Args:
+      operator:   ``A @ x`` closure.
+      src_onehot: f32 [n, s]; column j is the indicator of source j
+                  (all-zeros columns are inert padding).
+      num_levels: None → ``lax.while_loop`` with early exit (real runs);
+                  int  → ``lax.fori_loop`` with that static trip count
+                  (dry-run / roofline path, so XLA records
+                  ``known_trip_count``; extra levels are no-ops).
+    """
+    n = src_onehot.shape[0]
+    sigma0 = src_onehot.astype(jnp.float32)
+    depth0 = jnp.where(src_onehot > 0, 0, -1).astype(jnp.int32)
+
+    if num_levels is None:
+
+        def cond(carry):
+            _, _, lvl, alive = carry
+            return alive & (lvl <= n)
+
+        def body(carry):
+            sigma, depth, lvl, _ = carry
+            sigma, depth, alive = _forward_level(operator, lvl, sigma, depth)
+            return sigma, depth, lvl + 1, alive
+
+        sigma, depth, lvl, _ = jax.lax.while_loop(
+            cond, body, (sigma0, depth0, jnp.int32(1), jnp.bool_(True))
+        )
+        max_depth = lvl - 2  # last level that discovered anything
+    else:
+
+        def fbody(k, carry):
+            sigma, depth = carry
+            sigma, depth, _ = _forward_level(operator, k + 1, sigma, depth)
+            return sigma, depth
+
+        sigma, depth = jax.lax.fori_loop(0, num_levels, fbody, (sigma0, depth0))
+        max_depth = jnp.max(depth)
+
+    return ForwardState(sigma=sigma, depth=depth, max_depth=max_depth.astype(jnp.int32))
+
+
+def _backward_level(operator: Operator, lvl, sigma, depth, omega_col, delta):
+    safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+    g = jnp.where(depth == lvl + 1, (1.0 + delta + omega_col) / safe_sigma, 0.0)
+    t = operator(g)
+    return delta + jnp.where(depth == lvl, sigma * t, 0.0)
+
+
+def backward_accumulation(
+    operator: Operator,
+    sigma: jnp.ndarray,
+    depth: jnp.ndarray,
+    omega: jnp.ndarray,
+    max_depth: jnp.ndarray | int,
+    num_levels: int | None = None,
+) -> jnp.ndarray:
+    """Dependency accumulation (Alg. 4/5 analogue, checking successors).
+
+    Returns δ f32 [n, s].  ``omega`` is f32 [n] (1-degree weights; zeros
+    disable the heuristic).  Levels run from ``max_depth - 1`` down to 1;
+    columns of different depths are handled by masking (this is what makes
+    the 2-degree "Dynamic Merging of Frontiers" implicit — see
+    heuristics/two_degree.py).
+    """
+    omega_col = omega.astype(jnp.float32)[:, None]
+    delta0 = jnp.zeros_like(sigma)
+
+    if num_levels is None:
+
+        def cond(carry):
+            _, lvl = carry
+            return lvl >= 1
+
+        def body(carry):
+            delta, lvl = carry
+            delta = _backward_level(operator, lvl, sigma, depth, omega_col, delta)
+            return delta, lvl - 1
+
+        start = jnp.asarray(max_depth, jnp.int32) - 1
+        delta, _ = jax.lax.while_loop(cond, body, (delta0, start))
+    else:
+
+        def fbody(k, delta):
+            lvl = num_levels - 1 - k  # static bound; masked no-ops when deep
+            return _backward_level(operator, lvl, sigma, depth, omega_col, delta)
+
+        delta = jax.lax.fori_loop(0, num_levels - 1, fbody, delta0)
+
+    return delta
+
+
+# --------------------------------------------------------------------------
+# Fused Pallas-kernel paths (kernels/frontier_spmm.py, dependency_spmm.py):
+# identical semantics, one kernel launch per level, no HBM-materialized
+# frontier/g intermediates.  Dense adjacency only.
+# --------------------------------------------------------------------------
+
+
+def forward_counting_fused(
+    adjacency: jnp.ndarray,
+    src_onehot: jnp.ndarray,
+    num_levels: int | None = None,
+    interpret: bool | None = None,
+) -> ForwardState:
+    """Kernel-fused forward counting (semantics == forward_counting)."""
+    from repro.kernels import ops as kops
+
+    sigma0 = src_onehot.astype(jnp.float32)
+    depth0 = jnp.where(src_onehot > 0, 0, -1).astype(jnp.int32)
+    n = src_onehot.shape[0]
+
+    def level(lvl, sigma, depth):
+        return kops.frontier_spmm(adjacency, sigma, depth, lvl, interpret=interpret)
+
+    if num_levels is None:
+
+        def cond(carry):
+            _, _, lvl, alive = carry
+            return alive & (lvl <= n)
+
+        def body(carry):
+            sigma, depth, lvl, _ = carry
+            sigma2, depth2 = level(lvl, sigma, depth)
+            alive = jnp.any(depth2 != depth)
+            return sigma2, depth2, lvl + 1, alive
+
+        sigma, depth, lvl, _ = jax.lax.while_loop(
+            cond, body, (sigma0, depth0, jnp.int32(1), jnp.bool_(True))
+        )
+        max_depth = lvl - 2
+    else:
+
+        def fbody(k, carry):
+            sigma, depth = carry
+            return level(k + 1, sigma, depth)
+
+        sigma, depth = jax.lax.fori_loop(0, num_levels, fbody, (sigma0, depth0))
+        max_depth = jnp.max(depth)
+
+    return ForwardState(sigma=sigma, depth=depth, max_depth=max_depth.astype(jnp.int32))
+
+
+def backward_accumulation_fused(
+    adjacency: jnp.ndarray,
+    sigma: jnp.ndarray,
+    depth: jnp.ndarray,
+    omega: jnp.ndarray,
+    max_depth: jnp.ndarray | int,
+    num_levels: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Kernel-fused dependency accumulation (== backward_accumulation)."""
+    from repro.kernels import ops as kops
+
+    omega_f = omega.astype(jnp.float32)
+    delta0 = jnp.zeros_like(sigma)
+
+    def level(lvl, delta):
+        return kops.dependency_spmm(
+            adjacency, sigma, depth, delta, omega_f, lvl, interpret=interpret
+        )
+
+    if num_levels is None:
+
+        def cond(carry):
+            _, lvl = carry
+            return lvl >= 1
+
+        def body(carry):
+            delta, lvl = carry
+            return level(lvl, delta), lvl - 1
+
+        start = jnp.asarray(max_depth, jnp.int32) - 1
+        delta, _ = jax.lax.while_loop(cond, body, (delta0, start))
+    else:
+
+        def fbody(k, delta):
+            return level(num_levels - 1 - k, delta)
+
+        delta = jax.lax.fori_loop(0, num_levels - 1, fbody, delta0)
+
+    return delta

@@ -1,0 +1,10 @@
+"""Topology heuristics (paper §3.4): 1-degree reduction, 2-degree DMF."""
+from repro.core.heuristics.one_degree import OneDegreeReduction, one_degree_reduce
+from repro.core.heuristics.two_degree import claim_two_degree, derive_two_degree_columns
+
+__all__ = [
+    "OneDegreeReduction",
+    "one_degree_reduce",
+    "claim_two_degree",
+    "derive_two_degree_columns",
+]

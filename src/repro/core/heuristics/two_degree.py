@@ -1,0 +1,125 @@
+"""2-degree heuristic — Dynamic Merging of Frontiers (paper §3.4.2).
+
+For a 2-degree vertex ``c`` with neighbors ``a`` and ``b``, every path
+from ``c`` starts with a or b, so (Lemma 3.1 + Bellman criterion):
+
+    lvl_c(v) = min(lvl_a(v), lvl_b(v)) + 1
+    σ_c(v)   = σ_a(v)            if lvl_a(v) < lvl_b(v)
+             = σ_b(v)            if lvl_b(v) < lvl_a(v)
+             = σ_a(v) + σ_b(v)   if equal
+
+The forward BFS from ``c`` is therefore *skipped*: its (σ, lvl) column is
+derived elementwise (Alg. 7) from the columns of a and b computed in the
+same round, and only the backward dependency sweep runs for c.
+
+The paper's Algorithms 8/9 interleave the dependency sweeps of a, b and c
+explicitly "level by level" because their GPU engine walks one source
+tree at a time.  In the frontier-matrix formulation of
+:mod:`repro.core.engine`, the backward sweep is level-synchronous over
+*all* columns by construction — appending the derived column to the batch
+IS the Dynamic Merging of Frontiers.  A welcome consequence: the paper's
+restriction that 2-degree vertices sharing a neighbor cannot all be
+processed (their §4.4: only 61701 of 77265 handled) disappears — the only
+requirement is that both neighbors are explicit sources of the same
+round.  The claim below therefore recovers ⌊n/2⌋ vertices on a cycle
+(the paper's upper bound) and strictly more than the paper's
+implementation on shared-neighbor topologies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+__all__ = ["claim_two_degree", "derive_two_degree_columns"]
+
+
+def claim_two_degree(
+    residual_degrees: np.ndarray,
+    adjacency: list[np.ndarray],
+    eligible: np.ndarray,
+) -> list[tuple[int, int, int]]:
+    """Greedy selection of derivable 2-degree vertices.
+
+    A vertex ``c`` with residual degree exactly 2 and neighbors ``a ≠ b``
+    is claimed iff neither neighbor has itself been claimed (claimed
+    vertices are skipped as sources, so their columns would not exist to
+    derive from).  Returns a list of (c, a, b) triples.
+
+    Args:
+      residual_degrees: int [n] degrees in the residual graph.
+      adjacency:        residual adjacency lists.
+      eligible:         bool [n] — vertices that will run as sources.
+    """
+    n = residual_degrees.shape[0]
+    claimed = np.zeros(n, dtype=bool)  # will be derived, not traversed
+    pinned = np.zeros(n, dtype=bool)  # must stay an explicit source
+    triples: list[tuple[int, int, int]] = []
+    for c in np.nonzero(residual_degrees == 2)[0]:
+        if not eligible[c] or pinned[c]:
+            continue
+        nbrs = adjacency[c]
+        if len(nbrs) != 2:
+            continue
+        a, b = int(nbrs[0]), int(nbrs[1])
+        if a == b or claimed[a] or claimed[b]:
+            continue
+        if not (eligible[a] and eligible[b]):
+            continue
+        claimed[c] = True
+        pinned[a] = pinned[b] = True
+        triples.append((int(c), a, b))
+    return triples
+
+
+def derive_two_degree_columns(
+    sigma_ab: jnp.ndarray,
+    depth_ab: jnp.ndarray,
+    derived: jnp.ndarray,
+    row_ids: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 7 — derive (σ_c, lvl_c) columns from neighbor columns.
+
+    Args:
+      sigma_ab: f32 [n, s] forward σ of the round's explicit sources.
+      depth_ab: i32 [n, s] forward depths.
+      derived:  i32 [k, 3] rows (c, a_pos, b_pos); positions index the
+                round's source axis.  Padding rows use c = -1.
+      row_ids:  i32 [n] global vertex id of each local row (defaults to
+                ``arange(n)``; the 2-D distributed engine passes its
+                owned-chunk ids).
+
+    Returns (σ_c [n, k], d_c [n, k]); padded columns are inert (all zero
+    σ, depth -1).
+    """
+    n = sigma_ab.shape[0]
+    c_idx = derived[:, 0]
+    a_pos = jnp.maximum(derived[:, 1], 0)
+    b_pos = jnp.maximum(derived[:, 2], 0)
+
+    sa = sigma_ab[:, a_pos]  # [n, k]
+    sb = sigma_ab[:, b_pos]
+    da = depth_ab[:, a_pos]
+    db = depth_ab[:, b_pos]
+
+    big = jnp.int32(jnp.iinfo(jnp.int32).max // 2)
+    la = jnp.where(da >= 0, da, big)
+    lb = jnp.where(db >= 0, db, big)
+    lc = jnp.minimum(la, lb) + 1
+    dc = jnp.where(lc < big, lc, -1).astype(jnp.int32)
+    sc = jnp.where(la < lb, sa, 0.0) + jnp.where(lb < la, sb, 0.0)
+    sc = sc + jnp.where(la == lb, sa + sb, 0.0)
+    sc = jnp.where(dc >= 0, sc, 0.0)
+
+    # the 2-degree vertex itself is the root of its own derived tree
+    if row_ids is None:
+        row_ids = jnp.arange(n, dtype=jnp.int32)
+    is_c = row_ids[:, None] == c_idx[None, :]
+    dc = jnp.where(is_c, 0, dc)
+    sc = jnp.where(is_c, 1.0, sc)
+
+    # padding columns (c == -1) are fully inert
+    valid = (c_idx >= 0)[None, :]
+    dc = jnp.where(valid, dc, -1)
+    sc = jnp.where(valid, sc, 0.0)
+    return sc, dc

@@ -1,0 +1,168 @@
+"""Source-round scheduler.
+
+Brandes' outer loop is embarrassingly parallel over source vertices; the
+scheduler turns the eligible source set into fixed-shape *rounds* (the
+unit of jit compilation, checkpointing, straggler re-execution and
+sub-cluster distribution):
+
+* every round holds ``batch_size`` explicit sources (padded with -1) and
+  up to ``derived_per_round`` 2-degree derived columns (c, a_pos, b_pos);
+* a derived vertex's two neighbors must be explicit sources *of the same
+  round* (their forward columns feed Alg. 7); the packer keeps triples
+  intact and demotes a triple to an explicit source on conflict —
+  demotion is always correct, only marginally slower;
+* rounds are the elastic work unit: on a shrink/grow event the remaining
+  rounds are simply re-dealt to the surviving sub-clusters
+  (distributed/fault_tolerance.py), and a straggling round can be
+  re-issued wholesale because BC accumulation is additive and
+  order-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.heuristics.one_degree import OneDegreeReduction, one_degree_reduce
+from repro.core.heuristics.two_degree import claim_two_degree
+from repro.graphs.graph import Graph
+
+__all__ = ["Round", "Schedule", "build_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Round:
+    sources: np.ndarray  # int32 [batch_size]; -1 = padding
+    derived: np.ndarray  # int32 [derived_per_round, 3]; rows (c, a_pos, b_pos); -1 pad
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    rounds: list[Round]
+    batch_size: int
+    derived_per_round: int
+    num_explicit: int
+    num_derived: int
+    num_leaf_skipped: int  # 1-degree vertices never traversed
+    num_isolated_omega: int  # residual-isolated vertices resolved analytically
+    analytic_corrections: np.ndarray  # f64 [k, 2] rows (v, n_comp) resolved w/o traversal
+
+
+def _finish_round(src_list, derived_list, batch_size, derived_per_round) -> Round:
+    sources = np.full(batch_size, -1, dtype=np.int32)
+    sources[: len(src_list)] = src_list
+    derived = np.full((derived_per_round, 3), -1, dtype=np.int32)
+    for k, (c, ap, bp) in enumerate(derived_list):
+        derived[k] = (c, ap, bp)
+    return Round(sources=sources, derived=derived)
+
+
+def build_schedule(
+    graph: Graph,
+    batch_size: int = 32,
+    heuristics: str = "h0",
+    derived_per_round: int | None = None,
+) -> tuple[Schedule, OneDegreeReduction | None, Graph, np.ndarray]:
+    """Plan the full BC computation.
+
+    Args:
+      graph:      input undirected graph.
+      batch_size: explicit sources per round (the multi-source width; the
+                  paper's sub-cluster work unit).
+      heuristics: "h0" none | "h1" 1-degree | "h2" 2-degree | "h3" both.
+      derived_per_round: cap on derived columns per round (default:
+                  batch_size // 2 — a triple contributes ≥2 sources).
+
+    Returns (schedule, one_degree_result_or_None, residual_graph, omega).
+    """
+    if heuristics not in ("h0", "h1", "h2", "h3", "h1t", "h3t"):
+        raise ValueError(f"unknown heuristics mode {heuristics!r}")
+    use_h1 = heuristics in ("h1", "h3", "h1t", "h3t")
+    use_h2 = heuristics in ("h2", "h3", "h3t")
+    exhaustive = heuristics.endswith("t")  # beyond-paper tree contraction
+    if derived_per_round is None:
+        derived_per_round = max(1, batch_size // 2)
+
+    prep = one_degree_reduce(graph, exhaustive=exhaustive) if use_h1 else None
+    residual = prep.residual if prep is not None else graph
+    omega = prep.omega if prep is not None else np.zeros(graph.n, dtype=np.float64)
+
+    res_deg = residual.degrees()
+    eligible = res_deg >= 1  # traversal-worthy sources
+    num_leaf_skipped = int(prep.num_removed) if prep is not None else 0
+
+    # residual-isolated vertices with removed leaves: analytic component
+    # size n = 1 + omega (star centers, K2 leaves) — no round needed.
+    removed_mask = prep.removed if prep is not None else np.zeros(graph.n, bool)
+    iso_omega = np.nonzero((res_deg == 0) & (omega > 0) & ~removed_mask)[0]
+    analytic = np.stack(
+        [iso_omega, 1 + omega[iso_omega]], axis=1
+    ).astype(np.float64) if iso_omega.size else np.zeros((0, 2), np.float64)
+
+    triples: list[tuple[int, int, int]] = []
+    if use_h2:
+        adj = residual.adjacency_lists()
+        triples = claim_two_degree(res_deg, adj, eligible)
+    derived_set = {c for c, _, _ in triples}
+
+    rounds: list[Round] = []
+    cur_src: list[int] = []
+    cur_pos: dict[int, int] = {}
+    cur_der: list[tuple[int, int, int]] = []
+    consumed: set[int] = set()
+    demoted: list[int] = []
+
+    def flush():
+        nonlocal cur_src, cur_pos, cur_der
+        if cur_src or cur_der:
+            rounds.append(_finish_round(cur_src, cur_der, batch_size, derived_per_round))
+        cur_src, cur_pos, cur_der = [], {}, []
+
+    # 1) place triples (sorted so shared-neighbor triples cluster)
+    for c, a, b in sorted(triples, key=lambda t: (t[1], t[2])):
+        if batch_size < 2:
+            demoted.append(c)  # a triple needs two co-resident sources
+            continue
+        if a in consumed and a not in cur_pos or b in consumed and b not in cur_pos:
+            demoted.append(c)  # neighbor already ran in a closed round
+            continue
+        need = [v for v in (a, b) if v not in cur_pos]
+        if len(cur_src) + len(need) > batch_size or len(cur_der) >= derived_per_round:
+            flush()
+            need = [v for v in (a, b) if v not in cur_pos]
+            if a in consumed or b in consumed:
+                demoted.append(c)
+                continue
+        for v in need:
+            cur_pos[v] = len(cur_src)
+            cur_src.append(v)
+            consumed.add(v)
+        cur_der.append((c, cur_pos[a], cur_pos[b]))
+
+    # 2) fill with the remaining explicit sources
+    explicit_rest = [
+        int(v)
+        for v in np.nonzero(eligible)[0]
+        if v not in consumed and v not in derived_set
+    ] + demoted
+    for v in explicit_rest:
+        if len(cur_src) >= batch_size:
+            flush()
+        cur_pos[v] = len(cur_src)
+        cur_src.append(v)
+        consumed.add(v)
+    flush()
+
+    num_derived = sum(int((r.derived[:, 0] >= 0).sum()) for r in rounds)
+    num_explicit = sum(int((r.sources >= 0).sum()) for r in rounds)
+    schedule = Schedule(
+        rounds=rounds,
+        batch_size=batch_size,
+        derived_per_round=derived_per_round,
+        num_explicit=num_explicit,
+        num_derived=num_derived,
+        num_leaf_skipped=num_leaf_skipped,
+        num_isolated_omega=int(iso_omega.size),
+        analytic_corrections=analytic,
+    )
+    return schedule, prep, residual, omega

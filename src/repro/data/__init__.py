@@ -1,0 +1,6 @@
+"""Data substrate: deterministic synthetic pipelines per family +
+neighbor sampler + host-side prefetch."""
+from repro.data.pipeline import Prefetcher
+from repro.data.sampler import NeighborSampler
+
+__all__ = ["Prefetcher", "NeighborSampler"]

@@ -1,0 +1,17 @@
+"""Distribution substrate: mesh-aware sharding helpers, gradient
+compression, fault tolerance / elasticity planning."""
+from repro.distributed.sharding import (
+    constrain,
+    current_mesh,
+    set_current_mesh,
+    use_mesh,
+    named_sharding,
+)
+
+__all__ = [
+    "constrain",
+    "current_mesh",
+    "set_current_mesh",
+    "use_mesh",
+    "named_sharding",
+]

@@ -1,0 +1,81 @@
+"""Gradient compression: int8 block quantization with error feedback.
+
+For data-parallel all-reduces the gradient payload dominates the
+collective term; int8 + per-block scales cuts it 4x.  Error feedback
+(Seide et al. / EF-SGD) accumulates the quantization residual locally
+and re-adds it the next step, which preserves convergence.
+
+Usage (train loop):
+    carrier, residual = compress_tree(grads, residual)
+    grads = decompress_tree(carrier)              # after the all-reduce
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantizedTensor", "quantize", "dequantize", "compress_tree", "decompress_tree", "init_residual"]
+
+BLOCK = 256
+
+
+class QuantizedTensor(NamedTuple):
+    q: jnp.ndarray  # int8 payload, padded flat [ceil(n/B), B]
+    scale: jnp.ndarray  # f32 per-block scales [ceil(n/B)]
+    shape: tuple  # static original shape
+
+
+def quantize(x: jnp.ndarray) -> QuantizedTensor:
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale, shape=shape)
+
+
+def dequantize(t: QuantizedTensor) -> jnp.ndarray:
+    flat = (t.q.astype(jnp.float32) * t.scale[:, None]).reshape(-1)
+    n = 1
+    for d in t.shape:
+        n *= d
+    return flat[:n].reshape(t.shape)
+
+
+def init_residual(tree: Any) -> Any:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def compress_tree(grads: Any, residual: Any) -> tuple[Any, Any]:
+    """Returns (quantized tree, new residual).  Error feedback: the next
+    step's gradient carries this step's quantization error."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        qt = quantize(corrected)
+        back = dequantize(qt)
+        return qt, corrected - back
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    qs, rs = [], []
+    for g, r in zip(flat_g, flat_r):
+        qt, nr = one(g, r)
+        qs.append(qt)
+        rs.append(nr)
+    return (
+        jax.tree_util.tree_unflatten(treedef, qs),
+        jax.tree_util.tree_unflatten(treedef, rs),
+    )
+
+
+def decompress_tree(qtree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        dequantize, qtree, is_leaf=lambda t: isinstance(t, QuantizedTensor)
+    )

@@ -1,0 +1,132 @@
+"""Fault tolerance & elasticity planning (pure functions → unit-testable).
+
+At thousand-node scale the framework must survive pod/host loss without
+operator intervention.  The moving parts:
+
+* **Work units.**  MGBC's source *rounds* (core/scheduler.py) and LM
+  *steps* are idempotent and additive, so recovery = re-issue, never
+  partial-state repair.
+* **Elastic re-mesh.**  ``plan_elastic_remesh`` maps a device loss to a
+  new mesh shape (shrink the replica/data axis first — the model axes
+  encode weight layouts and are expensive to change) and emits the
+  checkpoint-reload plan.
+* **Straggler mitigation.**  ``StragglerPolicy`` tracks per-worker round
+  times and flags rounds for speculative re-execution (backup tasks)
+  when a worker exceeds ``factor``× the running median.  Because BC
+  accumulation is additive per-round, duplicate completions are resolved
+  by a "first result wins" commit in the round ledger.
+* **Round ledger.**  ``RoundLedger`` records committed rounds so a
+  restart (or a duplicated speculative execution) never double-counts —
+  this is what makes BC exact across failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+
+__all__ = ["MeshPlan", "plan_elastic_remesh", "StragglerPolicy", "RoundLedger"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    reload_from_checkpoint: bool
+    reshard_params: bool
+    note: str
+
+
+def plan_elastic_remesh(
+    current_shape: tuple[int, ...],
+    axes: tuple[str, ...],
+    devices_lost: int,
+) -> MeshPlan:
+    """Shrink policy: drop whole replica ('pod') groups first, then halve
+    the 'data' axis; never touch 'model' (weight layout)."""
+    shape = list(current_shape)
+    n = 1
+    for s in shape:
+        n *= s
+    remaining = n - devices_lost
+    if remaining <= 0:
+        raise ValueError("no devices left")
+
+    # drop pods while a whole pod is gone
+    if "pod" in axes:
+        pod_ax = axes.index("pod")
+        per_pod = n // shape[pod_ax]
+        pods_left = remaining // per_pod
+        if pods_left >= 1:
+            if pods_left != shape[pod_ax]:
+                shape[pod_ax] = pods_left
+                return MeshPlan(
+                    shape=tuple(shape),
+                    axes=axes,
+                    reload_from_checkpoint=False,  # replicas hold full state
+                    reshard_params=False,
+                    note=f"dropped to {pods_left} pods; surviving replicas "
+                    f"re-deal the remaining source rounds",
+                )
+            return MeshPlan(tuple(shape), axes, False, False, "no change")
+    # halve data axis until it fits
+    data_ax = axes.index("data")
+    while True:
+        prod = 1
+        for s in shape:
+            prod *= s
+        if prod <= remaining:
+            break
+        if shape[data_ax] % 2 != 0 or shape[data_ax] == 1:
+            raise ValueError(f"cannot shrink mesh {current_shape} to {remaining}")
+        shape[data_ax] //= 2
+    return MeshPlan(
+        shape=tuple(shape),
+        axes=axes,
+        reload_from_checkpoint=True,
+        reshard_params=True,
+        note="data axis halved; params resharded from checkpoint, "
+        "global batch rescaled",
+    )
+
+
+class StragglerPolicy:
+    """Median-based speculative re-execution (MapReduce backup tasks)."""
+
+    def __init__(self, factor: float = 2.0, min_samples: int = 5):
+        self.factor = factor
+        self.min_samples = min_samples
+        self.times: list[float] = []
+
+    def observe(self, seconds: float) -> None:
+        self.times.append(seconds)
+
+    def should_speculate(self, elapsed: float) -> bool:
+        if len(self.times) < self.min_samples:
+            return False
+        return elapsed > self.factor * statistics.median(self.times)
+
+
+class RoundLedger:
+    """Exactly-once commit of additive work units (BC rounds / steps)."""
+
+    def __init__(self):
+        self._committed: set[int] = set()
+
+    def try_commit(self, round_id: int) -> bool:
+        """True if this result should be accumulated (first completion)."""
+        if round_id in self._committed:
+            return False
+        self._committed.add(round_id)
+        return True
+
+    def pending(self, total_rounds: int) -> list[int]:
+        return [r for r in range(total_rounds) if r not in self._committed]
+
+    def state(self) -> list[int]:
+        return sorted(self._committed)
+
+    @classmethod
+    def from_state(cls, committed: list[int]) -> "RoundLedger":
+        led = cls()
+        led._committed = set(committed)
+        return led

@@ -1,0 +1,65 @@
+"""Ambient-mesh sharding helpers.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, "data", None)``
+with logical axis names; when a mesh is installed (launch layer) this
+becomes ``with_sharding_constraint``; without one it is a no-op, so the
+same model runs single-device in tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["constrain", "current_mesh", "set_current_mesh", "use_mesh", "named_sharding"]
+
+_state = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+def set_current_mesh(mesh: Mesh | None) -> None:
+    _state.mesh = mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = current_mesh()
+    set_current_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_current_mesh(prev)
+
+
+def _filter_spec(mesh: Mesh, spec) -> P:
+    """Drop axis names the mesh does not have (e.g. 'pod' on single-pod)."""
+
+    def keep(name):
+        if name is None:
+            return None
+        if isinstance(name, tuple):
+            kept = tuple(n for n in name if n in mesh.axis_names)
+            return kept if kept else None
+        return name if name in mesh.axis_names else None
+
+    return P(*(keep(s) for s in tuple(spec)))
+
+
+def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    """named_sharding(mesh, "data", None) or named_sharding(mesh, P(...))."""
+    if len(spec) == 1 and isinstance(spec[0], P):
+        spec = tuple(spec[0])
+    return NamedSharding(mesh, _filter_spec(mesh, spec))
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint against the ambient mesh (no-op if none)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, named_sharding(mesh, *spec))

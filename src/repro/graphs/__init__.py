@@ -1,0 +1,36 @@
+"""Graph substrate: containers, generators, partitioners, samplers.
+
+Everything here is host-side (numpy) construction logic; the arrays it
+produces are consumed by the JAX programs in :mod:`repro.core` and
+:mod:`repro.models.gnn`.
+"""
+from repro.graphs.graph import Graph
+from repro.graphs.generators import (
+    rmat_graph,
+    path_graph,
+    cycle_graph,
+    star_graph,
+    complete_graph,
+    grid_graph,
+    gnp_graph,
+    disjoint_union,
+    road_like_graph,
+    suburb_graph,
+)
+from repro.graphs.partition import TwoDPartition, partition_2d
+
+__all__ = [
+    "Graph",
+    "rmat_graph",
+    "path_graph",
+    "cycle_graph",
+    "star_graph",
+    "complete_graph",
+    "grid_graph",
+    "gnp_graph",
+    "disjoint_union",
+    "road_like_graph",
+    "suburb_graph",
+    "TwoDPartition",
+    "partition_2d",
+]

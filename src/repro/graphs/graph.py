@@ -1,0 +1,130 @@
+"""Undirected, unweighted graph container.
+
+The paper (and therefore this framework) works on undirected, unweighted
+graphs.  We store the graph as a *symmetric directed edge list*: every
+undirected edge {u, v} appears as both (u, v) and (v, u).  This is the
+layout consumed by every traversal formulation in :mod:`repro.core`:
+
+* dense path      — ``graph.dense_adjacency()`` (small n, MXU-friendly)
+* sparse path     — ``graph.src / graph.dst`` + ``jax.ops.segment_sum``
+* distributed 2-D — :func:`repro.graphs.partition.partition_2d`
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Graph"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Immutable undirected graph.
+
+    Attributes:
+      n:    number of vertices (vertex ids are ``0 .. n-1``).
+      src:  int32 [m2] source endpoint of each directed arc.
+      dst:  int32 [m2] destination endpoint of each directed arc.
+            ``m2 == 2 * num_undirected_edges``; the arc list is symmetric
+            and sorted by (src, dst).
+    """
+
+    n: int
+    src: np.ndarray
+    dst: np.ndarray
+
+    # ------------------------------------------------------------- build
+    @staticmethod
+    def from_edges(n: int, edges: np.ndarray) -> "Graph":
+        """Build from an [e, 2] array of (possibly duplicated, possibly
+        self-looped, possibly one-directional) undirected edge pairs."""
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if edges.size:
+            if edges.min() < 0 or edges.max() >= n:
+                raise ValueError("edge endpoint out of range")
+        # drop self loops
+        edges = edges[edges[:, 0] != edges[:, 1]]
+        # canonicalize + dedupe undirected pairs
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        key = lo * n + hi
+        _, idx = np.unique(key, return_index=True)
+        lo, hi = lo[idx], hi[idx]
+        # symmetrize
+        src = np.concatenate([lo, hi]).astype(np.int32)
+        dst = np.concatenate([hi, lo]).astype(np.int32)
+        order = np.lexsort((dst, src))
+        return Graph(n=n, src=src[order], dst=dst[order])
+
+    # ---------------------------------------------------------- derived
+    @property
+    def num_arcs(self) -> int:
+        """Number of directed arcs (= 2x undirected edges)."""
+        return int(self.src.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        """Number of undirected edges."""
+        return self.num_arcs // 2
+
+    def degrees(self) -> np.ndarray:
+        """int64 [n] vertex degrees."""
+        return np.bincount(self.src, minlength=self.n).astype(np.int64)
+
+    def dense_adjacency(self, dtype=np.float32) -> np.ndarray:
+        """[n, n] symmetric 0/1 adjacency matrix (small graphs only)."""
+        a = np.zeros((self.n, self.n), dtype=dtype)
+        a[self.src, self.dst] = 1
+        return a
+
+    def adjacency_lists(self) -> list[np.ndarray]:
+        """Per-vertex sorted neighbor arrays (oracle / sampler use)."""
+        order = np.argsort(self.src, kind="stable")
+        src, dst = self.src[order], self.dst[order]
+        starts = np.searchsorted(src, np.arange(self.n))
+        ends = np.searchsorted(src, np.arange(self.n), side="right")
+        return [dst[s:e] for s, e in zip(starts, ends)]
+
+    def csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """(row_ptr int64 [n+1], col_idx int32 [m2]) CSR view."""
+        order = np.argsort(self.src, kind="stable")
+        col = self.dst[order]
+        counts = np.bincount(self.src, minlength=self.n)
+        row_ptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(counts, out=row_ptr[1:])
+        return row_ptr, col.astype(np.int32)
+
+    def connected_components(self) -> np.ndarray:
+        """int64 [n] component label per vertex (host-side union-find)."""
+        parent = np.arange(self.n, dtype=np.int64)
+
+        def find(x: int) -> int:
+            root = x
+            while parent[root] != root:
+                root = parent[root]
+            while parent[x] != root:
+                parent[x], x = root, parent[x]
+            return root
+
+        for u, v in zip(self.src, self.dst):
+            ru, rv = find(int(u)), find(int(v))
+            if ru != rv:
+                parent[max(ru, rv)] = min(ru, rv)
+        labels = np.array([find(i) for i in range(self.n)], dtype=np.int64)
+        return labels
+
+    def subgraph_mask(self, keep_arc: np.ndarray) -> "Graph":
+        """Graph with only the arcs where ``keep_arc`` is True (the arc
+        list must stay symmetric — caller's responsibility)."""
+        return Graph(n=self.n, src=self.src[keep_arc], dst=self.dst[keep_arc])
+
+    def padded_arcs(self, multiple: int) -> tuple[np.ndarray, np.ndarray, int]:
+        """Arc list padded to a multiple with self-referencing sentinel
+        arcs pointing at vertex slot ``n`` (callers allocate n+1 slots so
+        the sentinel accumulates into a discarded row)."""
+        m2 = self.num_arcs
+        pad = (-m2) % multiple
+        src = np.concatenate([self.src, np.full(pad, self.n, np.int32)])
+        dst = np.concatenate([self.dst, np.full(pad, self.n, np.int32)])
+        return src, dst, m2

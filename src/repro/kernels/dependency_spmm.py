@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused backward dependency level.
+
+Per level of MGBC's dependency accumulation (checking successors):
+
+    g   = (1 + δ + ω) / σ   on  d == lvl+1   (0 elsewhere)
+    t   = A @ g
+    δ' += σ ⊙ t             on  d == lvl
+
+As with the forward kernel, the operand ``g`` is recomputed from the
+(σ, d, δ, ω) tiles inside the matmul loop instead of being materialized
+in HBM, and the δ update is fused into the epilogue.  This mirrors the
+paper's "reuse the forward prefix-sum in the backward sweep": the level
+structure (d) streams through VMEM once per level with no auxiliary
+offset arrays.
+
+Grid and tiling identical to frontier_spmm (ω broadcast along s is an
+extra [bk, 1] tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dependency_spmm_kernel", "dependency_spmm_pallas"]
+
+
+def dependency_spmm_kernel(
+    lvl_ref,  # (1,1) i32
+    a_ref,  # [bm, bk]
+    sigma_k_ref,  # [bk, bs]
+    depth_k_ref,  # [bk, bs]
+    delta_k_ref,  # [bk, bs]
+    omega_k_ref,  # [bk, 1]
+    sigma_io_ref,  # [bm, bs]
+    depth_io_ref,  # [bm, bs]
+    delta_io_ref,  # [bm, bs]
+    delta_out_ref,  # [bm, bs]
+    acc_ref,  # VMEM [bm, bs] f32
+    *,
+    k_steps: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lvl = lvl_ref[0, 0]
+    sigma_k = sigma_k_ref[...]
+    safe_sigma = jnp.where(sigma_k > 0, sigma_k, 1.0)
+    g = jnp.where(
+        depth_k_ref[...] == lvl + 1,
+        (1.0 + delta_k_ref[...] + omega_k_ref[...]) / safe_sigma,
+        0.0,
+    )
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32), g, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        t = acc_ref[...]
+        keep = depth_io_ref[...] == lvl
+        delta_out_ref[...] = delta_io_ref[...] + jnp.where(
+            keep, sigma_io_ref[...] * t, 0.0
+        )
+
+
+def dependency_spmm_pallas(
+    adjacency: jnp.ndarray,
+    sigma: jnp.ndarray,
+    depth: jnp.ndarray,
+    delta: jnp.ndarray,
+    omega: jnp.ndarray,
+    lvl: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bs: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call; block-aligned shapes required (see ops.py)."""
+    n, _ = adjacency.shape
+    _, s = sigma.shape
+    assert n % bm == 0 and n % bk == 0 and s % bs == 0, (n, s, bm, bk, bs)
+    k_steps = n // bk
+    grid = (n // bm, s // bs, k_steps)
+
+    lvl_arr = jnp.asarray(lvl, jnp.int32).reshape(1, 1)
+    omega_col = omega.astype(jnp.float32).reshape(n, 1)
+    kernel = functools.partial(dependency_spmm_kernel, k_steps=k_steps)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # lvl
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # A
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # σ (contraction)
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # d (contraction)
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # δ (contraction)
+            pl.BlockSpec((bk, 1), lambda i, j, k: (k, 0)),  # ω
+            pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)),  # σ (update)
+            pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)),  # d (update)
+            pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)),  # δ (update)
+        ],
+        out_specs=pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, s), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
+        interpret=interpret,
+    )(lvl_arr, adjacency, sigma, depth, delta, omega_col, sigma, depth, delta)

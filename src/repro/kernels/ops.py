@@ -1,0 +1,143 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each op:
+  * pads inputs to block multiples (MXU lanes: multiples of (8, 128)),
+  * dispatches to the Pallas kernel (interpret mode on CPU — the
+    container validates kernel semantics; TPU executes them compiled),
+  * falls back to the pure-jnp reference when ``use_pallas=False``
+    (XLA path; useful for A/B perf comparison and as the grad path).
+
+Block sizes adapt downward for small inputs so tests can sweep tiny
+shapes; production shapes use the 128-aligned defaults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dependency_spmm import dependency_spmm_pallas
+from repro.kernels.frontier_spmm import frontier_spmm_pallas
+from repro.kernels.segment_bag import segment_bag_pallas
+
+__all__ = ["frontier_spmm", "dependency_spmm", "segment_bag", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int, fill=0):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _pick_block(dim: int, preferred: int, lane: int) -> int:
+    """Largest lane-aligned block ≤ preferred covering dim efficiently."""
+    if dim >= preferred:
+        return preferred
+    return max(lane, ((dim + lane - 1) // lane) * lane)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bm", "bk", "bs"))
+def frontier_spmm(
+    adjacency,
+    sigma,
+    depth,
+    lvl,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    bm: int = 128,
+    bk: int = 128,
+    bs: int = 128,
+):
+    """Fused forward BFS level. See kernels/frontier_spmm.py."""
+    if not use_pallas:
+        return ref.frontier_spmm_ref(adjacency, sigma, depth, lvl)
+    if interpret is None:
+        interpret = not on_tpu()
+    n, s = sigma.shape
+    bm = _pick_block(n, bm, 8)
+    bk = _pick_block(n, bk, 8)
+    bs = _pick_block(s, bs, 128)
+    lcm = bm * bk // _gcd(bm, bk)
+    npad = n + ((-n) % lcm)
+    a = jnp.pad(adjacency, ((0, npad - n), (0, npad - n))) if npad != n else adjacency
+    sg = _pad_to(_pad_to(sigma, 0, npad), 1, bs)
+    dp = _pad_to(_pad_to(depth, 0, npad, fill=-1), 1, bs, fill=-1)
+    sigma_out, depth_out = frontier_spmm_pallas(
+        a, sg, dp, lvl, bm=bm, bk=bk, bs=bs, interpret=interpret
+    )
+    return sigma_out[:n, :s], depth_out[:n, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bm", "bk", "bs"))
+def dependency_spmm(
+    adjacency,
+    sigma,
+    depth,
+    delta,
+    omega,
+    lvl,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    bm: int = 128,
+    bk: int = 128,
+    bs: int = 128,
+):
+    """Fused backward dependency level. See kernels/dependency_spmm.py."""
+    if not use_pallas:
+        return ref.dependency_spmm_ref(adjacency, sigma, depth, delta, omega, lvl)
+    if interpret is None:
+        interpret = not on_tpu()
+    n, s = sigma.shape
+    bm = _pick_block(n, bm, 8)
+    bk = _pick_block(n, bk, 8)
+    bs = _pick_block(s, bs, 128)
+    lcm = bm * bk // _gcd(bm, bk)
+    npad = n + ((-n) % lcm)
+    a = jnp.pad(adjacency, ((0, npad - n), (0, npad - n))) if npad != n else adjacency
+    sg = _pad_to(_pad_to(sigma, 0, npad), 1, bs)
+    dp = _pad_to(_pad_to(depth, 0, npad, fill=-1), 1, bs, fill=-1)
+    dl = _pad_to(_pad_to(delta, 0, npad), 1, bs)
+    om = _pad_to(omega, 0, npad)
+    out = dependency_spmm_pallas(
+        a, sg, dp, dl, om, lvl, bm=bm, bk=bk, bs=bs, interpret=interpret
+    )
+    return out[:n, :s]
+
+
+def _gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, a % b
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bd"))
+def segment_bag(
+    table,
+    indices,
+    weights=None,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    bd: int = 128,
+):
+    """EmbeddingBag(sum). See kernels/segment_bag.py."""
+    if not use_pallas:
+        return ref.segment_bag_ref(table, indices, weights)
+    if interpret is None:
+        interpret = not on_tpu()
+    V, D = table.shape
+    bd = _pick_block(D, bd, 128)
+    t = _pad_to(table, 1, bd)
+    out = segment_bag_pallas(t, indices, weights, bd=bd, interpret=interpret)
+    return out[:, :D]

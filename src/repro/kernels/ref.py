@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; the kernels must match them exactly (f32) for
+every shape/dtype combination the tests sweep.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["frontier_spmm_ref", "dependency_spmm_ref", "segment_bag_ref"]
+
+
+def frontier_spmm_ref(adjacency, sigma, depth, lvl):
+    """One fused forward BFS level (cf. core/engine._forward_level).
+
+    Args:
+      adjacency: [n, n] 0/1 (any float dtype).
+      sigma:     f32 [n, s] path counts.
+      depth:     i32 [n, s] discovery levels (-1 unreached).
+      lvl:       i32 scalar — the level being expanded.
+
+    Returns (sigma_out, depth_out).
+    """
+    frontier = sigma * (depth == lvl - 1)
+    contrib = adjacency.astype(jnp.float32) @ frontier
+    newly = (contrib > 0) & (depth < 0)
+    depth_out = jnp.where(newly, lvl, depth)
+    sigma_out = sigma + jnp.where(newly, contrib, 0.0)
+    return sigma_out, depth_out
+
+
+def dependency_spmm_ref(adjacency, sigma, depth, delta, omega, lvl):
+    """One fused backward dependency level (cf. engine._backward_level).
+
+    Args:
+      adjacency: [n, n] 0/1.
+      sigma:     f32 [n, s].
+      depth:     i32 [n, s].
+      delta:     f32 [n, s] running dependencies.
+      omega:     f32 [n] 1-degree weights.
+      lvl:       i32 scalar.
+
+    Returns delta_out f32 [n, s].
+    """
+    safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+    g = jnp.where(
+        depth == lvl + 1, (1.0 + delta + omega[:, None]) / safe_sigma, 0.0
+    )
+    t = adjacency.astype(jnp.float32) @ g
+    return delta + jnp.where(depth == lvl, sigma * t, 0.0)
+
+
+def segment_bag_ref(table, indices, weights=None):
+    """EmbeddingBag (sum mode) — the recsys/GNN gather-reduce primitive.
+
+    Args:
+      table:   [V, D] embedding rows.
+      indices: i32 [B, L] row ids per bag; -1 = padding.
+      weights: optional f32 [B, L] per-sample weights.
+
+    Returns f32 [B, D]: out[b] = Σ_l w[b,l] * table[indices[b,l]].
+    """
+    mask = (indices >= 0).astype(jnp.float32)
+    if weights is not None:
+        mask = mask * weights
+    safe = jnp.maximum(indices, 0)
+    gathered = table.astype(jnp.float32)[safe]  # [B, L, D]
+    return (gathered * mask[..., None]).sum(axis=1)

@@ -1,0 +1,161 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first backend initialization).
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import PartitionSpec
+
+from repro.configs.registry import get_arch, list_archs
+from repro.distributed.sharding import named_sharding, use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape × mesh)
+cell with ShapeDtypeStruct inputs (no allocation) and record
+memory_analysis / cost_analysis / collective bytes for the roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --out dryrun.json
+"""
+
+
+def _shardings_for(mesh, logical_tree):
+    is_spec = lambda x: isinstance(x, PartitionSpec)
+    return jax.tree.map(
+        lambda spec: named_sharding(mesh, spec), logical_tree, is_leaf=is_spec
+    )
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, save_hlo: str | None = None):
+    """Lower + compile one cell. Returns a result record dict."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = get_arch(arch_name)
+    t0 = time.time()
+    cell = build_cell(bundle, shape_name, mesh=mesh)
+
+    with use_mesh(mesh):
+        if hasattr(cell.fn, "lower"):  # pre-jitted (BC round fn)
+            jitted = cell.fn
+        elif cell.needs_shardmap_mesh:  # shard_map carries the shardings
+            jitted = jax.jit(cell.fn, donate_argnums=cell.donate_argnums)
+        else:
+            in_shardings = tuple(
+                _shardings_for(mesh, logical) for logical in cell.args_logical
+            )
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=in_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+        lowered = jitted.lower(*cell.args_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    from repro.roofline.hlo import analyze_hlo_module
+
+    hlo_terms = analyze_hlo_module(hlo)
+
+    record = {
+        "cell": cell.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_device": (
+                peak := mem.argument_size_in_bytes
+                + max(mem.output_size_in_bytes - mem.alias_size_in_bytes, 0)
+                + mem.temp_size_in_bytes
+            ),
+            # x86-backend bf16->f32 shadow copies don't exist on TPU
+            # (see roofline/hlo.py artifact accounting)
+            "tpu_peak_bytes_per_device": max(
+                peak - hlo_terms["bf16_upcast_artifact_bytes"],
+                mem.argument_size_in_bytes,
+            ),
+        },
+        "xla_cost": {
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        },
+        "hlo_terms": hlo_terms,
+        "meta": cell.static_meta,
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--multi-pod", action="store_true", help="2x16x16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--hlo-dir", default=None, help="dump per-cell HLO text")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records, failures = [], []
+    for arch_name in archs:
+        bundle = get_arch(arch_name)
+        shapes = [args.shape] if args.shape else list(bundle.shapes)
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch_name}:{shape_name}:{'multi' if mp else 'single'}"
+                hlo_path = (
+                    os.path.join(args.hlo_dir, tag.replace(":", "__") + ".hlo")
+                    if args.hlo_dir
+                    else None
+                )
+                try:
+                    rec = run_cell(arch_name, shape_name, mp, save_hlo=hlo_path)
+                    records.append(rec)
+                    gb = rec["memory"]["peak_bytes_per_device"] / 2**30
+                    tgb = rec["memory"]["tpu_peak_bytes_per_device"] / 2**30
+                    print(
+                        f"[ok] {tag:64s} compile={rec['compile_s']:7.1f}s "
+                        f"peak/dev={gb:7.2f} GiB (tpu-adj {tgb:6.2f}) "
+                        f"flops/dev={rec['hlo_terms']['flops']:.3e}"
+                    )
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append({"cell": tag, "error": repr(e)})
+                    print(f"[FAIL] {tag}: {e}")
+                    if args.fail_fast:
+                        traceback.print_exc()
+                        raise
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+    print(f"\n{len(records)} cells compiled, {len(failures)} failures")
+    if failures:
+        for f_ in failures:
+            print("  FAIL", f_["cell"])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

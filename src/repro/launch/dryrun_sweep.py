@@ -1,0 +1,96 @@
+"""Sequential per-cell dry-run sweep with subprocess isolation.
+
+Each cell compiles in a fresh process (XLA's compile caches and SPMD
+structures otherwise accumulate ~hundreds of MB per cell and OOM the
+host after a few dozen cells).  Results merge into one JSON.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_sweep --out results/dryrun_all.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+
+def list_cells():
+    from repro.configs.registry import get_arch, list_archs
+
+    cells = []
+    for arch in list_archs():
+        for shape in get_arch(arch).shapes:
+            for mp in (False, True):
+                cells.append((arch, shape, mp))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun_all.json")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--only", default=None, help="substring filter on arch:shape")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    records, failures = [], []
+    cells = list_cells()
+    for arch, shape, mp in cells:
+        tag = f"{arch}:{shape}:{'multi' if mp else 'single'}"
+        if args.only and args.only not in tag:
+            continue
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
+            tmp_path = tmp.name
+        cmd = [
+            sys.executable,
+            "-m",
+            "repro.launch.dryrun",
+            "--arch",
+            arch,
+            "--shape",
+            shape,
+            "--out",
+            tmp_path,
+        ]
+        if mp:
+            cmd.append("--multi-pod")
+        if args.hlo_dir:
+            os.makedirs(args.hlo_dir, exist_ok=True)
+            cmd += ["--hlo-dir", args.hlo_dir]
+        try:
+            proc = subprocess.run(
+                cmd,
+                capture_output=True,
+                text=True,
+                timeout=args.timeout,
+                env={**os.environ, "PYTHONPATH": "src"},
+            )
+            with open(tmp_path) as f:
+                data = json.load(f)
+            records += data.get("records", [])
+            failures += data.get("failures", [])
+            status = "ok" if proc.returncode == 0 else "FAIL"
+            line = [l for l in proc.stdout.splitlines() if l.startswith("[")]
+            print(line[-1] if line else f"[{status}] {tag}", flush=True)
+        except subprocess.TimeoutExpired:
+            failures.append({"cell": tag, "error": "timeout"})
+            print(f"[FAIL] {tag}: timeout", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append({"cell": tag, "error": repr(e)})
+            print(f"[FAIL] {tag}: {e!r}", flush=True)
+        finally:
+            if os.path.exists(tmp_path):
+                os.unlink(tmp_path)
+        with open(args.out, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+
+    print(f"\n{len(records)} cells compiled, {len(failures)} failures")
+    for f_ in failures:
+        print("  FAIL", f_["cell"], f_["error"][:120])
+
+
+if __name__ == "__main__":
+    main()

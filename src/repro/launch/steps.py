@@ -1,0 +1,526 @@
+"""Cell programs: (arch × shape) -> a jit-able step + abstract inputs.
+
+A *cell* is one dry-run / benchmark unit: ``train_step`` for training
+shapes, ``serve_step`` for inference shapes, one distributed MGBC round
+for the BC configs.  ``build_cell`` returns everything the dry-run needs:
+
+  fn          — the step function (state/batch in, state/outputs out)
+  args_specs  — ShapeDtypeStruct PyTree per argument (no allocation)
+  args_logical — logical partition tuples per argument (None = let the
+                 shard_map handle it / replicate)
+  static_meta — dict for reporting (param counts, model flops, ...)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BCArch, DLRMArch, GNNArch, LMArch
+from repro.configs.registry import ArchBundle
+from repro.models import dlrm as dlrm_mod
+from repro.models import gnn as gnn_mod
+from repro.models import transformer as tf
+from repro.optim import adafactor, adamw
+from repro.optim.optimizers import AdafactorState, AdamWState
+
+__all__ = ["CellProgram", "build_cell", "lm_model_flops", "opt_state_specs"]
+
+PyTree = Any
+SDS = jax.ShapeDtypeStruct
+DEV_MULT = 512  # pad workload dims so input shardings divide on both meshes
+
+
+def _pad_mult(x: int, m: int = DEV_MULT) -> int:
+    return x + (-x) % m
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    fn: Callable
+    args_specs: tuple
+    args_logical: tuple  # logical axis tuples, or None per arg
+    static_meta: dict
+    needs_shardmap_mesh: bool = False  # BC cells build their own shard_map
+    donate_argnums: tuple = ()  # in-place args (train state, KV cache)
+
+
+def _tree_logical(tree, fn):
+    return jax.tree.map(fn, tree)
+
+
+# --------------------------------------------------------------------- LM
+def lm_model_flops(cfg: LMArch, tokens: int) -> float:
+    """6·N_active·D (MoE counts routed experts only)."""
+    d, hhd, khd = cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.n_kv_heads * cfg.head_dim
+    per_layer = 2 * d * hhd + 2 * d * khd + hhd * d  # qkv + o
+    if cfg.moe is None:
+        per_layer += 3 * d * cfg.d_ff
+    else:
+        per_layer += 3 * d * cfg.moe.d_ff * cfg.moe.top_k
+    n_active = cfg.n_layers * per_layer + cfg.vocab * d  # + embedding/head
+    return 6.0 * n_active * tokens
+
+
+def _lm_param_logical(cfg: LMArch) -> PyTree:
+    return tf.param_partition_specs(cfg)
+
+
+def opt_state_specs(opt_name: str, param_specs: PyTree, param_logical: PyTree):
+    """(ShapeDtypeStruct tree, logical tree) for the optimizer state."""
+    if opt_name == "adamw":
+        f32 = lambda s: SDS(s.shape, jnp.float32)
+        return (
+            AdamWState(
+                step=SDS((), jnp.int32),
+                mu=jax.tree.map(f32, param_specs),
+                nu=jax.tree.map(f32, param_specs),
+            ),
+            AdamWState(step=P(), mu=param_logical, nu=param_logical),
+        )
+    if opt_name == "adafactor":
+
+        def vr_s(s):
+            return SDS(s.shape[:-1] if len(s.shape) >= 2 else s.shape, jnp.float32)
+
+        def vc_s(s):
+            return SDS(
+                s.shape[:-2] + s.shape[-1:] if len(s.shape) >= 2 else (1,), jnp.float32
+            )
+
+        def _padded(spec, rank):
+            t = tuple(spec)
+            return t + (None,) * (rank - len(t))
+
+        def vr_l(spec, s):
+            rank = len(s.shape)
+            t = _padded(spec, rank)
+            return P(*t[:-1]) if rank >= 2 else P(*t)
+
+        def vc_l(spec, s):
+            rank = len(s.shape)
+            t = _padded(spec, rank)
+            return P(*(t[:-2] + t[-1:])) if rank >= 2 else P(None)
+
+        return (
+            AdafactorState(
+                step=SDS((), jnp.int32),
+                vr=jax.tree.map(vr_s, param_specs),
+                vc=jax.tree.map(vc_s, param_specs),
+            ),
+            AdafactorState(
+                step=P(),
+                vr=jax.tree.map(vr_l, param_logical, param_specs),
+                vc=jax.tree.map(vc_l, param_logical, param_specs),
+            ),
+        )
+    raise ValueError(opt_name)
+
+
+
+
+def _tree_bytes(tree) -> float:
+    return float(
+        sum(np.prod(s.shape) * s.dtype.itemsize for s in jax.tree.leaves(tree))
+    )
+
+
+def _lm_analytic_bytes(cfg: LMArch, shape, p_specs, o_specs) -> float:
+    """Analytic *global* HBM for the TPU target (fully-sharded params/
+    grads/opt + remat carries + per-layer transient working set); the
+    roofline report divides by the mesh size.  The x86 dry-run backend
+    promotes bf16 internals to f32 around dots, so its memory_analysis
+    overstates TPU peaks ~2x on bf16-heavy cells; this estimator is the
+    standard MaxText-style bound reported alongside."""
+    pb = _tree_bytes(p_specs)
+    ob = _tree_bytes(o_specs) if o_specs is not None else 0.0
+    d = cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        carries = cfg.n_layers * tokens * d * 2  # bf16 residual stack
+        # per-layer transient (remat backward): qkv/o + mlp or moe slices
+        if cfg.moe is None:
+            trans = tokens * (2 * cfg.d_ff + 4 * d) * 2
+        else:
+            m = cfg.moe
+            cap = int(m.capacity_factor * tokens * m.top_k / m.num_experts)
+            trans = (
+                m.num_experts * cap * (d + 2 * m.d_ff) * 2  # buf + h (E-sharded)
+                + tokens * m.top_k * (d * 2 + 4 * m.num_experts)  # rows + router
+            )
+        logits = shape.global_batch * cfg.loss_chunk * tf.padded_vocab(cfg) * 4
+        grads = pb
+        return pb + grads + ob + carries + trans + logits
+    cache = 2 * cfg.n_layers * shape.global_batch * shape.seq_len * (
+        cfg.n_kv_heads * cfg.head_dim
+    ) * 2
+    if shape.kind == "decode":
+        return pb + cache + 2 * shape.global_batch * cfg.n_heads * shape.seq_len * 4
+    # prefill: cache is the output; transient = per-layer scores chunk
+    tokens = shape.global_batch * shape.seq_len
+    scores = shape.global_batch * cfg.n_heads * cfg.q_chunk * shape.seq_len * 4
+    return pb + 2 * cache + tokens * d * 2 * 2 + scores
+
+def _make_optimizer(cfg_optimizer: str, lr=1e-4):
+    return adafactor(lr) if cfg_optimizer == "adafactor" else adamw(lr)
+
+
+def _build_lm_cell(cfg: LMArch, shape) -> CellProgram:
+    p_specs = tf.param_specs(cfg)
+    p_logical = _lm_param_logical(cfg)
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(p_specs))
+
+    if shape.kind == "train":
+        optimizer = _make_optimizer(cfg.optimizer)
+        o_specs, o_logical = opt_state_specs(cfg.optimizer, p_specs, p_logical)
+
+        def train_step(state, batch):
+            def loss_fn(p):
+                return tf.lm_loss(cfg, p, batch["tokens"])
+
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"]
+            )
+            new_p, new_o = optimizer.update(grads, state["opt"], state["params"])
+            return {"params": new_p, "opt": new_o}, {"loss": loss, **metrics}
+
+        tokens = shape.global_batch * shape.seq_len
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}",
+            fn=train_step,
+            args_specs=(
+                {"params": p_specs, "opt": o_specs},
+                {"tokens": SDS((shape.global_batch, shape.seq_len), jnp.int32)},
+            ),
+            args_logical=(
+                {"params": p_logical, "opt": o_logical},
+                {"tokens": P("data", None)},
+            ),
+            static_meta={
+                "n_params": n_params,
+                "model_flops": 3 * lm_model_flops(cfg, tokens),  # fwd+bwd
+                "tokens": tokens,
+                "analytic_bytes_global": _lm_analytic_bytes(
+                    cfg, shape, p_specs, o_specs
+                ),
+            },
+            donate_argnums=(0,),
+        )
+
+    if shape.kind == "prefill":
+
+        def serve_step(params, batch):
+            logits, cache = tf.prefill(cfg, params, batch["tokens"])
+            return logits, cache
+
+        tokens = shape.global_batch * shape.seq_len
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}",
+            fn=serve_step,
+            args_specs=(
+                p_specs,
+                {"tokens": SDS((shape.global_batch, shape.seq_len), jnp.int32)},
+            ),
+            args_logical=(p_logical, {"tokens": P("data", None)}),
+            static_meta={
+                "n_params": n_params,
+                "model_flops": lm_model_flops(cfg, tokens),
+                "tokens": tokens,
+                "analytic_bytes_global": _lm_analytic_bytes(cfg, shape, p_specs, None),
+            },
+        )
+
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    cache = tf.cache_specs(cfg, b, shape.seq_len)
+    # batch over data when divisible, otherwise shard the cache sequence
+    if b >= 16:
+        cache_logical = P(None, "data", None, None, "model")
+        tok_logical = P("data")
+    else:  # long_500k: B=1 — sequence-sharded cache
+        cache_logical = P(None, None, "data", None, "model")
+        tok_logical = P(None)
+
+    def decode(params, cache, batch):
+        logits, new_cache = tf.decode_step(
+            cfg, params, cache, batch["tokens"], batch["pos"]
+        )
+        return logits, new_cache
+
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}",
+        fn=decode,
+        args_specs=(
+            p_specs,
+            cache,
+            {"tokens": SDS((b,), jnp.int32), "pos": SDS((), jnp.int32)},
+        ),
+        args_logical=(
+            p_logical,
+            {"k": cache_logical, "v": cache_logical},
+            {"tokens": tok_logical, "pos": P()},
+        ),
+        static_meta={
+            "n_params": n_params,
+            # decode model-flops: 2·N_active per token + cache read ≈ bandwidth
+            "model_flops": 2.0 * lm_model_flops(cfg, b) / 6.0,
+            "tokens": b,
+            "analytic_bytes_global": _lm_analytic_bytes(cfg, shape, p_specs, None),
+        },
+        donate_argnums=(1,),
+    )
+
+
+# -------------------------------------------------------------------- GNN
+# GNN cells run the paper's 2-D decomposition (models/gnn2d.py): GSPMD's
+# automatic gather/scatter partitioning replicates node state (X00 GB on
+# ogb_products); the MGBC expand/fold structure keeps per-device state at
+# O(n/sqrt(p) * d).  The flat GSPMD path remains in models/gnn.py for the
+# single-device smoke tests and the A/B comparison in EXPERIMENTS.md.
+
+
+def _gnn_workload(shape):
+    if shape.kind == "minibatch":
+        t = shape.batch_nodes
+        n_nodes, n_edges, frontier = t, 0, t
+        for f in shape.fanout:
+            n_edges += frontier * f
+            frontier *= f
+            n_nodes += frontier
+    else:
+        n_nodes = shape.n_nodes * (shape.n_graphs or 1)
+        n_edges = shape.n_edges * (shape.n_graphs or 1)
+    return n_nodes, n_edges
+
+
+def _build_gnn_cell(cfg: GNNArch, shape, mesh) -> CellProgram:
+    from repro.models.gnn2d import gnn2d_batch_specs, make_gnn2d_loss_fn
+
+    d_out = gnn_mod.output_dim(cfg, shape)
+    n_nodes, n_edges = _gnn_workload(shape)
+    d_feat = shape.d_feat
+
+    R = mesh.shape["data"]
+    C = mesh.shape["model"]
+    n_dev = R * C
+    chunk = -(-n_nodes // n_dev)
+    n_pad = n_dev * chunk
+    max_arcs = int(1.5 * n_edges / n_dev) + 8
+    max_arcs += (-max_arcs) % 8
+
+    p_specs = gnn_mod.param_specs(cfg, d_feat, d_out)
+    p_logical = jax.tree.map(lambda s: P(), p_specs)
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(p_specs))
+
+    loss_fn, _ = make_gnn2d_loss_fn(
+        cfg,
+        mesh,
+        shape.kind,
+        chunk=chunk,
+        max_arcs=max_arcs,
+        n_graphs=shape.n_graphs or 0,
+        gather_dtype=jnp.bfloat16,  # halve expand-collective bytes (§Perf)
+        fold_dtype=jnp.bfloat16,  # halve the dominant fold reduce-scatter
+    )
+    batch_specs = gnn2d_batch_specs(
+        cfg, shape.kind, n_pad, R, C, max_arcs, d_feat, d_out,
+        n_graphs=shape.n_graphs or 0,
+    )
+
+    optimizer = adamw(1e-3)
+    o_specs, o_logical = opt_state_specs("adamw", p_specs, p_logical)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch))(
+            state["params"]
+        )
+        new_p, new_o = optimizer.update(grads, state["opt"], state["params"])
+        return {"params": new_p, "opt": new_o}, {"loss": loss}
+
+    # model flops: message MLP (2d->d, d->d) per arc + update MLP per node
+    d = cfg.d_hidden * (cfg.n_heads if cfg.kind == "gat" else 1)
+    per_layer = 2 * n_edges * (2 * d) * d + 2 * n_edges * d * d
+    per_layer += 2 * n_nodes * (2 * d) * d + 2 * n_nodes * d * d
+    model_flops = 3.0 * (cfg.n_layers * per_layer + 2 * n_nodes * d_feat * d)
+
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}",
+        fn=train_step,
+        args_specs=({"params": p_specs, "opt": o_specs}, batch_specs),
+        args_logical=(None, None),  # shard_map carries the shardings
+        static_meta={
+            "n_params": n_params,
+            "model_flops": model_flops,
+            "n_nodes": n_nodes,
+            "n_edges": n_edges,
+        },
+        needs_shardmap_mesh=True,
+        donate_argnums=(0,),
+    )
+
+
+# ------------------------------------------------------------------- DLRM
+def _build_dlrm_cell(cfg: DLRMArch, shape) -> CellProgram:
+    p_specs = dlrm_mod.param_specs(cfg)
+    p_logical = jax.tree.map(lambda s: P(), p_specs)
+    p_logical["tables"] = P(None, ("model", "data"), None)  # rows over all chips
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(p_specs))
+    b = shape.batch
+
+    base_batch = {
+        "dense": SDS((b, cfg.n_dense), jnp.float32),
+        "sparse": SDS((b, cfg.n_sparse, cfg.hot_size), jnp.int32),
+    }
+    bdata = "data" if b >= 16 else None  # retrieval has batch=1
+    base_logical = {
+        "dense": P(bdata, None),
+        "sparse": P(bdata, None, None),
+    }
+    # MLP+interaction flops per example
+    mlp_flops = 0
+    dims = (cfg.n_dense,) + cfg.bot_mlp
+    mlp_flops += sum(2 * a * bb for a, bb in zip(dims[:-1], dims[1:]))
+    f = cfg.n_sparse + 1
+    mlp_flops += 2 * f * f * cfg.embed_dim
+    dims = (f * (f - 1) // 2 + cfg.embed_dim,) + cfg.top_mlp
+    mlp_flops += sum(2 * a * bb for a, bb in zip(dims[:-1], dims[1:]))
+
+    if shape.kind == "train":
+        optimizer = adamw(1e-3)
+        o_specs, o_logical = opt_state_specs("adamw", p_specs, p_logical)
+        base_batch["labels"] = SDS((b,), jnp.float32)
+        base_logical["labels"] = P("data")
+
+        def train_step(state, batch):
+            def loss_fn(p):
+                return dlrm_mod.dlrm_loss(cfg, p, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"]
+            )
+            new_p, new_o = optimizer.update(grads, state["opt"], state["params"])
+            return {"params": new_p, "opt": new_o}, {"loss": loss, **metrics}
+
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}",
+            fn=train_step,
+            args_specs=({"params": p_specs, "opt": o_specs}, base_batch),
+            args_logical=({"params": p_logical, "opt": o_logical}, base_logical),
+            static_meta={"n_params": n_params, "model_flops": 3.0 * b * mlp_flops},
+            donate_argnums=(0,),
+        )
+
+    if shape.kind == "retrieval":
+        base_batch["candidates"] = SDS(
+            (_pad_mult(shape.n_candidates), cfg.embed_dim), jnp.float32
+        )
+        base_logical["candidates"] = P(("data", "model"), None)
+
+        def retrieve(params, batch):
+            return dlrm_mod.retrieval_scores(cfg, params, batch)
+
+        flops = b * mlp_flops + 2.0 * b * shape.n_candidates * cfg.embed_dim
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}",
+            fn=retrieve,
+            args_specs=(p_specs, base_batch),
+            args_logical=(p_logical, base_logical),
+            static_meta={"n_params": n_params, "model_flops": flops},
+        )
+
+    def serve(params, batch):
+        logit, _ = dlrm_mod.dlrm_forward(cfg, params, batch["dense"], batch["sparse"])
+        return jax.nn.sigmoid(logit)
+
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}",
+        fn=serve,
+        args_specs=(p_specs, base_batch),
+        args_logical=(p_logical, base_logical),
+        static_meta={"n_params": n_params, "model_flops": 1.0 * b * mlp_flops},
+    )
+
+
+# --------------------------------------------------------------------- BC
+def _build_bc_cell(cfg: BCArch, shape, mesh) -> CellProgram:
+    """One distributed MGBC round on the production mesh (shard_map)."""
+    from repro.core.distributed import make_distributed_round_fn
+    from repro.graphs.partition import TwoDPartition
+
+    axis = dict(zip(mesh.axis_names, mesh.shape.values()))  # ordered
+    R = mesh.shape["data"]
+    C = mesh.shape["model"]
+    replica_axis = "pod" if "pod" in mesh.axis_names else None
+
+    n = 1 << shape.scale
+    chunk = -(-n // (R * C))
+    m2 = 2 * shape.edge_factor * n
+    max_arcs = int(1.5 * m2 / (R * C))  # imbalance headroom
+    max_arcs += (-max_arcs) % 8
+
+    part = TwoDPartition(
+        R=R,
+        C=C,
+        n=n,
+        chunk=chunk,
+        src_local=np.zeros((1,), np.int32),  # placeholders; dry-run only
+        dst_local=np.zeros((1,), np.int32),
+        arc_counts=np.zeros((R, C), np.int64),
+    )
+    round_fn = make_distributed_round_fn(
+        part,
+        mesh,
+        row_axis="data",
+        col_axis="model",
+        replica_axis=replica_axis,
+        num_levels=cfg.max_levels,
+    )
+    fr = mesh.shape["pod"] if replica_axis else 1
+    s, k = cfg.batch_size, max(1, cfg.batch_size // 2)
+    args_specs = (
+        SDS((R, C, max_arcs), jnp.int32),
+        SDS((R, C, max_arcs), jnp.int32),
+        SDS((R * C * chunk,), jnp.float32),
+        SDS((fr, s), jnp.int32),
+        SDS((fr, k, 3), jnp.int32),
+    )
+    # 2·m·s traversed-edge updates per direction, fwd+bwd, per replica round
+    model_flops = 2.0 * (m2 / 2) * (s + k) * 2 * fr
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}",
+        fn=round_fn,
+        args_specs=args_specs,
+        args_logical=(None, None, None, None, None),
+        static_meta={
+            "n_vertices": n,
+            "n_arcs": m2,
+            "sources_per_round": s + k,
+            "model_flops": model_flops,
+        },
+        needs_shardmap_mesh=True,
+    )
+
+
+def build_cell(bundle: ArchBundle, shape_name: str, mesh=None) -> CellProgram:
+    shape = bundle.shapes[shape_name]
+    arch = bundle.arch
+    if isinstance(arch, LMArch):
+        return _build_lm_cell(arch, shape)
+    if isinstance(arch, GNNArch):
+        if mesh is None:
+            raise ValueError("GNN cells need the mesh at build time (shard_map)")
+        return _build_gnn_cell(arch, shape, mesh)
+    if isinstance(arch, DLRMArch):
+        return _build_dlrm_cell(arch, shape)
+    if isinstance(arch, BCArch):
+        if mesh is None:
+            raise ValueError("BC cells need the mesh at build time (shard_map)")
+        return _build_bc_cell(arch, shape, mesh)
+    raise TypeError(type(arch))

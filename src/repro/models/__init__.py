@@ -1,0 +1,6 @@
+"""Model definitions for the assigned architectures.
+
+Pure-function style (params are explicit PyTrees of arrays); every model
+provides param_specs / init_params / forward (+ decode for LMs), and the
+launch layer builds train_step / serve_step from them.
+"""

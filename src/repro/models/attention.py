@@ -1,0 +1,112 @@
+"""Grouped-query attention: training (q-chunked full causal), prefill,
+and single-token decode against a KV cache.
+
+The q-chunked formulation bounds the materialized score tensor to
+[B, H, q_chunk, S] — the pure-JAX stand-in for a flash kernel (exact
+same FLOPs; XLA fuses mask+softmax per chunk).  An optional sliding
+window turns it into genuinely sub-quadratic local attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["causal_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _chunk_scores_to_out(q, k, v, q_start, causal, window, scale):
+    """q: [B, qc, K, G, hd]; k/v: [B, S, K, hd] -> out [B, qc, K, G, hd]."""
+    s = k.shape[1]
+    qc = q.shape[1]
+    # bf16 operands, f32 accumulation (MXU-native; no f32 copy of K/V)
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    q_pos = q_start + jnp.arange(qc)
+    k_pos = jnp.arange(s)
+    mask = jnp.ones((qc, s), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out
+
+
+def causal_attention(
+    q: jnp.ndarray,  # [B, S, H, hd]
+    k: jnp.ndarray,  # [B, S, K, hd]
+    v: jnp.ndarray,  # [B, S, K, hd]
+    *,
+    q_chunk: int = 512,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Full (or windowed) causal GQA for training/prefill."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = hd**-0.5
+    qg = q.reshape(b, s, kh, g, hd)
+
+    q_chunk = min(q_chunk, s)
+    if s % q_chunk != 0:  # fall back to one chunk for ragged smoke shapes
+        q_chunk = s
+    n_chunks = s // q_chunk
+
+    if n_chunks == 1:
+        out = _chunk_scores_to_out(qg, k, v, 0, True, window, scale)
+        return out.reshape(b, s, h, hd)
+
+    def body(carry, qi):
+        q_blk, idx = qi
+        out = _chunk_scores_to_out(q_blk, k, v, idx * q_chunk, True, window, scale)
+        return carry, out
+
+    q_blocks = qg.reshape(b, n_chunks, q_chunk, kh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    _, outs = jax.lax.scan(body, None, (q_blocks, jnp.arange(n_chunks)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, hd)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, H, hd] — one new token per sequence
+    k_cache: jnp.ndarray,  # [B, S_max, K, hd]
+    v_cache: jnp.ndarray,  # [B, S_max, K, hd]
+    pos: jnp.ndarray,  # i32 [] — number of valid cache positions
+    *,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Single-step GQA decode over the cache (O(S) per token)."""
+    from repro.distributed.sharding import constrain
+
+    b, h, hd = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    scale = hd**-0.5
+    qg = q.reshape(b, kh, g, hd)
+    # match the cache layout (head_dim over "model") so XLA reshards the
+    # tiny q instead of fully rematerializing the multi-GB cache
+    qg = constrain(qg, "data", None, None, "model")
+    # bf16 cache operand + f32 accumulation: upcasting the cache would
+    # materialize an f32 copy of the largest tensor in the system
+    scores = jnp.einsum(
+        "bkgh,bskh->bkgs",
+        qg.astype(k_cache.dtype),
+        k_cache,
+        preferred_element_type=jnp.float32,
+    ) * scale
+    scores = constrain(scores, "data", None, None, None)
+    k_pos = jnp.arange(k_cache.shape[1])
+    mask = k_pos[None] <= pos
+    if window is not None:
+        mask &= k_pos[None] > pos - window
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,138 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — RM2-class config.
+
+The embedding lookup is the hot path: JAX has no native EmbeddingBag, so
+it is built here from ``jnp.take`` + segment reduction (pure-XLA path)
+with an optional Pallas kernel (kernels/segment_bag.py) that streams
+table rows through VMEM.  Tables are row-sharded over "model"
+(the paper's 1-D vertex partition, DESIGN.md §5); batch over "data".
+
+Batch format:
+  dense  f32 [B, n_dense]       sparse i32 [B, n_sparse, hot]
+  train:     labels f32 [B]
+  retrieval: candidates f32 [n_candidates, embed_dim]
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMArch
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+__all__ = [
+    "param_specs",
+    "init_params",
+    "dlrm_forward",
+    "dlrm_loss",
+    "retrieval_scores",
+]
+
+PyTree = Any
+
+
+def _mlp_params(dims, key, tag: str, abstract: bool):
+    out = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        if abstract:
+            out[f"{tag}_w{i}"] = jnp.zeros((a, b), jnp.float32)
+        else:
+            out[f"{tag}_w{i}"] = dense_init(jax.random.fold_in(key, i), (a, b))
+        out[f"{tag}_b{i}"] = jnp.zeros((b,), jnp.float32)
+    return out
+
+
+def _mlp_apply(params, tag: str, x, n: int, final_act: bool):
+    for i in range(n):
+        x = x @ params[f"{tag}_w{i}"] + params[f"{tag}_b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _interaction_dims(cfg: DLRMArch) -> int:
+    f = cfg.n_sparse + 1  # sparse fields + bottom output
+    return f * (f - 1) // 2 + cfg.embed_dim
+
+
+def init_params(cfg: DLRMArch, key=None, abstract: bool = False) -> PyTree:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    bot_dims = (cfg.n_dense,) + cfg.bot_mlp
+    top_dims = (_interaction_dims(cfg),) + cfg.top_mlp
+    if abstract:
+        tables = jnp.zeros((cfg.n_sparse, cfg.rows_per_table, cfg.embed_dim), jnp.float32)
+    else:
+        tables = (
+            jax.random.normal(
+                jax.random.fold_in(key, 99),
+                (cfg.n_sparse, cfg.rows_per_table, cfg.embed_dim),
+                jnp.float32,
+            )
+            * cfg.embed_dim**-0.5
+        )
+    params = {"tables": tables}
+    params.update(_mlp_params(bot_dims, jax.random.fold_in(key, 1), "bot", abstract))
+    params.update(_mlp_params(top_dims, jax.random.fold_in(key, 2), "top", abstract))
+    return params
+
+
+def param_specs(cfg: DLRMArch) -> PyTree:
+    # eval_shape: no allocation (the tables alone are tens of GB)
+    return jax.eval_shape(lambda: init_params(cfg, abstract=True))
+
+
+def embedding_bag_lookup(cfg: DLRMArch, tables, sparse_idx, use_pallas: bool = False):
+    """tables [F, V, D], sparse_idx i32 [B, F, L] (−1 pad) -> [B, F, D]."""
+    b, f, l = sparse_idx.shape
+    v, d = tables.shape[1], tables.shape[2]
+    if use_pallas:
+        from repro.kernels.ops import segment_bag
+
+        flat_table = tables.reshape(f * v, d)
+        offs = (jnp.arange(f, dtype=jnp.int32) * v)[None, :, None]
+        flat_idx = jnp.where(sparse_idx >= 0, sparse_idx + offs, -1)
+        bags = flat_idx.reshape(b * f, l)
+        out = segment_bag(flat_table, bags)
+        return out.reshape(b, f, d)
+    mask = (sparse_idx >= 0).astype(jnp.float32)
+    safe = jnp.maximum(sparse_idx, 0)
+    gathered = tables[jnp.arange(f)[None, :, None], safe]  # [B, F, L, D]
+    return (gathered * mask[..., None]).sum(axis=2)
+
+
+def dlrm_forward(cfg: DLRMArch, params, dense, sparse_idx, use_pallas: bool = False):
+    """Returns (logit [B], feature vectors [B, F+1, D])."""
+    dense = constrain(dense, "data", None)
+    bot = _mlp_apply(params, "bot", dense, len(cfg.bot_mlp), final_act=True)  # [B, D]
+    emb = embedding_bag_lookup(cfg, params["tables"], sparse_idx, use_pallas)
+    emb = constrain(emb, "data", None, None)
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)  # [B, F+1, D]
+
+    # pairwise dot interaction (upper triangle)
+    dots = jnp.einsum("bif,bjf->bij", feats, feats)
+    f = feats.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    z = jnp.concatenate([bot, dots[:, iu, ju]], axis=-1)
+    logit = _mlp_apply(params, "top", z, len(cfg.top_mlp), final_act=False)
+    return logit[:, 0], feats
+
+
+def dlrm_loss(cfg: DLRMArch, params, batch, use_pallas: bool = False):
+    logit, _ = dlrm_forward(cfg, params, batch["dense"], batch["sparse"], use_pallas)
+    labels = batch["labels"]
+    loss = jnp.mean(
+        jnp.maximum(logit, 0.0) - logit * labels + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+    return loss, {"bce": loss}
+
+
+def retrieval_scores(cfg: DLRMArch, params, batch, top_k: int = 100):
+    """Score one query against n_candidates item embeddings (batched dot,
+    not a loop): user vector = bottom output + pooled sparse embeddings."""
+    _, feats = dlrm_forward(cfg, params, batch["dense"], batch["sparse"])
+    user = feats.sum(axis=1)  # [B, D]
+    cands = constrain(batch["candidates"], ("data", "model"), None)
+    scores = user @ cands.T  # [B, Nc]
+    return jax.lax.top_k(scores, top_k)

@@ -1,0 +1,236 @@
+"""Graph neural networks on the segment-sum message-passing substrate.
+
+All four assigned GNN archs (graphcast, gat-cora, gin-tu, meshgraphnet)
+share one edge-list substrate: messages are gathered from ``x[src]``,
+optionally combined with edge features, and scatter-reduced to ``dst``
+with ``jax.ops.segment_sum`` / ``segment_max`` — exactly the paper's
+SpMM traversal structure (DESIGN.md §5), so the distributed layout is
+the MGBC one: edge arrays sharded over the flattened mesh, node states
+sharded by owner chunk, accumulations psum'd by XLA.
+
+Input batch format (see data/graphs.py and launch/dryrun.py):
+  node_feat [N, d_feat] f32   edge_src/edge_dst [E] i32 (sentinel N = pad)
+  full_graph:     labels [N] i32, label_mask [N] f32
+  minibatch:      labels [T] i32, target_idx [T] i32
+  batched_graphs: graph_ids [N] i32, labels [G] i32
+  regression (graphcast/meshgraphnet): target [N, d_out] f32
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNArch
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+__all__ = ["param_specs", "init_params", "gnn_forward", "gnn_loss", "output_dim"]
+
+PyTree = Any
+MESH_AXES = ("data", "model")  # flattened over both for edge/node arrays
+
+
+def _mlp_shapes(dims: tuple[int, ...]) -> list[tuple[int, int]]:
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def output_dim(cfg: GNNArch, shape) -> int:
+    if cfg.kind in ("graphcast", "meshgraphnet"):
+        return cfg.n_vars if cfg.kind == "graphcast" else 3
+    return shape.n_classes
+
+
+def _arch_dims(cfg: GNNArch, d_feat: int, d_out: int):
+    d = cfg.d_hidden * (cfg.n_heads if cfg.kind == "gat" else 1)
+    return d
+
+
+def param_specs(cfg: GNNArch, d_feat: int, d_out: int) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_params(cfg, d_feat, d_out, jax.random.PRNGKey(0), abstract=True)
+    )
+
+
+def init_params(cfg: GNNArch, d_feat: int, d_out: int, key, abstract: bool = False):
+    """Parameter tree; ``abstract`` skips RNG (ShapeDtypeStruct source)."""
+    d = _arch_dims(cfg, d_feat, d_out)
+    L = cfg.n_layers
+    idx = [0]
+
+    def mk(shape, in_axis=-2):
+        if abstract:
+            return jnp.zeros(shape, jnp.float32)
+        idx[0] += 1
+        return dense_init(jax.random.fold_in(key, idx[0]), shape, in_axis=in_axis)
+
+    params: dict[str, Any] = {
+        "enc_w": mk((d_feat, d)),
+        "enc_b": jnp.zeros((d,), jnp.float32),
+        "dec_w": mk((d, d_out)),
+        "dec_b": jnp.zeros((d_out,), jnp.float32),
+    }
+    if cfg.kind == "gat":
+        dh, H = cfg.d_hidden, cfg.n_heads
+        params["layers"] = {
+            "w": mk((L, d, H, dh)),
+            "a_src": mk((L, H, dh), in_axis=-1),
+            "a_dst": mk((L, H, dh), in_axis=-1),
+        }
+    elif cfg.kind == "gin":
+        params["layers"] = {
+            "eps": jnp.zeros((L,), jnp.float32),
+            "w1": mk((L, d, d)),
+            "b1": jnp.zeros((L, d), jnp.float32),
+            "w2": mk((L, d, d)),
+            "b2": jnp.zeros((L, d), jnp.float32),
+        }
+    elif cfg.kind == "meshgraphnet":
+        params["edge_enc_w"] = mk((d_feat, d))  # edge features same width
+        params["edge_enc_b"] = jnp.zeros((d,), jnp.float32)
+        params["layers"] = {
+            "we1": mk((L, 3 * d, d)),
+            "be1": jnp.zeros((L, d), jnp.float32),
+            "we2": mk((L, d, d)),
+            "be2": jnp.zeros((L, d), jnp.float32),
+            "wn1": mk((L, 2 * d, d)),
+            "bn1": jnp.zeros((L, d), jnp.float32),
+            "wn2": mk((L, d, d)),
+            "bn2": jnp.zeros((L, d), jnp.float32),
+        }
+    else:  # graphcast: interaction-network processor (node messages)
+        params["layers"] = {
+            "wm1": mk((L, 2 * d, d)),
+            "bm1": jnp.zeros((L, d), jnp.float32),
+            "wm2": mk((L, d, d)),
+            "bm2": jnp.zeros((L, d), jnp.float32),
+            "wu1": mk((L, 2 * d, d)),
+            "bu1": jnp.zeros((L, d), jnp.float32),
+            "wu2": mk((L, d, d)),
+            "bu2": jnp.zeros((L, d), jnp.float32),
+        }
+    return params
+
+
+def _seg_sum(msgs, dst, n):
+    return jax.ops.segment_sum(msgs, dst, num_segments=n)
+
+
+def gnn_forward(cfg: GNNArch, params, batch) -> jnp.ndarray:
+    """Returns per-node outputs [N, d_out]."""
+    x = batch["node_feat"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = x.shape[0] + 1  # +1 sentinel row for padding arcs
+    x = constrain(x, (MESH_AXES,), None)
+
+    h = jnp.tanh(x @ params["enc_w"] + params["enc_b"])
+
+    def pad(z):  # sentinel row
+        return jnp.concatenate([z, jnp.zeros((1,) + z.shape[1:], z.dtype)], axis=0)
+
+    def shard_nodes(z):
+        return constrain(z, (MESH_AXES,), *([None] * (z.ndim - 1)))
+
+    def shard_edges(z):
+        return constrain(z, (MESH_AXES,), *([None] * (z.ndim - 1)))
+
+    remat = jax.checkpoint  # full recompute in backward: node states only
+
+    if cfg.kind == "gat":
+        @remat
+        def layer(h, lp):
+            h = shard_nodes(h)
+            hw = jnp.einsum("nd,dhk->nhk", h, lp["w"])  # [N, H, dh]
+            hp = pad(hw)
+            e_src = (hp[src] * lp["a_src"]).sum(-1)  # [E, H]
+            e_dst = (hp[dst] * lp["a_dst"]).sum(-1)
+            logit = jax.nn.leaky_relu(e_src + e_dst, 0.2)
+            # segment softmax over incoming edges of dst
+            mx = jax.ops.segment_max(logit, dst, num_segments=n)
+            mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+            ex = jnp.exp(logit - mx[dst])
+            denom = _seg_sum(ex, dst, n)
+            alpha = ex / jnp.maximum(denom[dst], 1e-9)  # [E, H]
+            msgs = shard_edges(hp[src] * alpha[..., None])  # [E, H, dh]
+            agg = _seg_sum(msgs, dst, n)[:-1]  # [N, H, dh]
+            return shard_nodes(jax.nn.elu(agg.reshape(h.shape[0], -1))), None
+
+        h, _ = jax.lax.scan(layer, h, params["layers"])
+    elif cfg.kind == "gin":
+        @remat
+        def layer(h, lp):
+            h = shard_nodes(h)
+            agg = _seg_sum(shard_edges(pad(h)[src]), dst, n)[:-1]
+            z = (1.0 + lp["eps"]) * h + agg
+            z = jax.nn.relu(z @ lp["w1"] + lp["b1"])
+            z = jax.nn.relu(z @ lp["w2"] + lp["b2"])
+            return shard_nodes(z), None
+
+        h, _ = jax.lax.scan(layer, h, params["layers"])
+    elif cfg.kind == "meshgraphnet":
+        e = jnp.tanh(batch["edge_feat"] @ params["edge_enc_w"] + params["edge_enc_b"])
+
+        @remat
+        def layer(carry, lp):
+            h, e = carry
+            h, e = shard_nodes(h), shard_edges(e)
+            hp = pad(h)
+            cat = shard_edges(jnp.concatenate([e, hp[src], hp[dst]], axis=-1))
+            e2 = jax.nn.relu(cat @ lp["we1"] + lp["be1"]) @ lp["we2"] + lp["be2"]
+            e = e + e2  # residual edge update
+            agg = _seg_sum(e, dst, n)[:-1]
+            cat_n = jnp.concatenate([h, agg], axis=-1)
+            h2 = jax.nn.relu(cat_n @ lp["wn1"] + lp["bn1"]) @ lp["wn2"] + lp["bn2"]
+            return (shard_nodes(h + h2), e), None
+
+        (h, _), _ = jax.lax.scan(layer, (h, e), params["layers"])
+    else:  # graphcast
+        @remat
+        def layer(h, lp):
+            h = shard_nodes(h)
+            hp = pad(h)
+            cat = shard_edges(jnp.concatenate([hp[src], hp[dst]], axis=-1))
+            m = jax.nn.relu(cat @ lp["wm1"] + lp["bm1"]) @ lp["wm2"] + lp["bm2"]
+            agg = _seg_sum(m, dst, n)[:-1]
+            cat_n = jnp.concatenate([h, agg], axis=-1)
+            u = jax.nn.relu(cat_n @ lp["wu1"] + lp["bu1"]) @ lp["wu2"] + lp["bu2"]
+            return shard_nodes(h + u), None
+
+        h, _ = jax.lax.scan(layer, h, params["layers"])
+
+    h = constrain(h, (MESH_AXES,), None)
+    return h @ params["dec_w"] + params["dec_b"]
+
+
+def gnn_loss(cfg: GNNArch, params, batch, shape_kind: str):
+    out = gnn_forward(cfg, params, batch)  # [N, d_out]
+    node_mask = batch.get("label_mask")
+    if cfg.kind in ("graphcast", "meshgraphnet"):
+        err = (out - batch["target"]).astype(jnp.float32)
+        if node_mask is not None:
+            sse = jnp.sum(jnp.square(err) * node_mask[:, None])
+            cnt = jnp.maximum(node_mask.sum() * out.shape[1], 1.0)
+            loss = sse / cnt
+        else:
+            loss = jnp.mean(jnp.square(err))
+        return loss, {"mse": loss}
+    if shape_kind == "batched_graphs":
+        n_graphs = batch["labels"].shape[0]
+        masked = out * node_mask[:, None] if node_mask is not None else out
+        pooled = jax.ops.segment_sum(masked, batch["graph_ids"], num_segments=n_graphs)
+        logits = pooled.astype(jnp.float32)
+        labels = batch["labels"]
+        mask = jnp.ones((n_graphs,), jnp.float32)
+    elif shape_kind == "minibatch":
+        logits = out[batch["target_idx"]].astype(jnp.float32)
+        labels = batch["labels"]
+        mask = jnp.ones_like(labels, jnp.float32)
+    else:  # full_graph
+        logits = out.astype(jnp.float32)
+        labels = batch["labels"]
+        mask = batch["label_mask"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"ce": loss}

@@ -1,0 +1,90 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Token-choice top-k routing (Switch/GShard style) with a static-shape
+``[E, capacity, d]`` dispatch buffer so every shape is jit/SPMD friendly:
+
+  1. router logits → top-k experts + normalized gates per token;
+  2. position-in-expert via a cumulative one-hot rank (no sort — the
+     [T·k, E] cumsum shards cleanly over the data axis);
+  3. scatter-add tokens into the expert buffer (drops beyond capacity,
+     exactly like GShard's capacity factor semantics);
+  4. per-expert FFN as a single batched einsum over [E, cap, ·] —
+     sharding the E axis over "model" makes this expert parallelism and
+     XLA materializes the dispatch/return as all-to-all-style traffic;
+  5. gather + gate-weighted combine back to token order.
+
+An auxiliary load-balancing loss (Switch eq. 4) is returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import ACTIVATIONS
+
+__all__ = ["moe_ffn"]
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # [T, d] flattened tokens
+    router_w: jnp.ndarray,  # [d, E]
+    wi: jnp.ndarray,  # [E, d, 2*ff]  (fused gate+up)
+    wo: jnp.ndarray,  # [E, ff, d]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    activation: str = "silu",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out [T, d], aux_loss scalar)."""
+    t, d = x.shape
+    e = router_w.shape[1]
+    act = ACTIVATIONS[activation]
+
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # load-balance aux loss (fraction routed vs mean prob, Switch eq. 4)
+    me = probs.mean(axis=0)  # [E]
+    onehot_top1 = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    ce = onehot_top1.mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = expert_ids.reshape(-1)  # [T*k]
+    flat_gate = gate_vals.reshape(-1)
+    tok_of = jnp.arange(t * top_k, dtype=jnp.int32) // top_k
+
+    # rank of each assignment within its expert (stable, no sort)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # [T*k, E]
+    ranks_all = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(ranks_all, flat_e[:, None], axis=1)[:, 0]  # [T*k]
+
+    cap = max(8, int(capacity_factor * t * top_k / e))
+    cap += (-cap) % 8
+    keep = (pos < cap).astype(x.dtype)
+    slot = jnp.minimum(pos, cap - 1)
+
+    src_rows = x[tok_of] * keep[:, None]  # dropped rows contribute 0
+    buf = jnp.zeros((e, cap, d), x.dtype).at[flat_e, slot].add(src_rows)
+    buf = constrain(buf, "model", None, None)  # expert-parallel home
+
+    h = act(jnp.einsum("ecd,edf->ecf", buf, wi))
+    # keep h in the ff-sharded layout of wi/wo (ff over "data"): XLA then
+    # psums y partials instead of re-gathering h to the full ff width
+    # (a 258 GB/step gather on the 400B cell — §Perf iteration 2)
+    h = constrain(h, "model", None, "data")
+    y = jnp.einsum("ecf,efd->ecd", h, wo)
+    y = constrain(y, "model", None, None)
+
+    out_rows = y[flat_e, slot] * (flat_gate.astype(x.dtype) * keep)[:, None]
+    out = jax.ops.segment_sum(out_rows, tok_of, num_segments=t)
+    # NOTE §Perf iteration 3 (refuted): constraining this to the
+    # sequence-parallel (("data","model")) layout doubled the collective
+    # term — the combine scatter then needs cross-axis resharding of its
+    # (token-order-scrambled) updates.  Kept token-major over "data".
+    out = constrain(out, ("data",), None)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,328 @@
+"""Decoder-only transformer LM (dense or MoE) — pure functions.
+
+Design points for the 256–512-chip cells:
+  * layers are stacked on a leading L axis and executed with
+    ``lax.scan`` (+ per-layer ``jax.checkpoint``): small HLO, fast SPMD
+    partitioning, ``known_trip_count`` for the roofline parser;
+  * attention is q-chunked (models/attention.py) so no [S, S] score
+    tensor ever materializes;
+  * the CE loss is sequence-chunked so the f32 [B, S, V] logits tensor
+    never materializes (vocab up to 202k);
+  * logits use the tied embedding transpose;
+  * sharding: weights/activations carry logical constraints via
+    ``distributed.constrain`` — "data" = batch, "model" = TP axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMArch
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models.layers import ACTIVATIONS, dense_init, rms_norm, rope
+from repro.models.moe import moe_ffn
+
+__all__ = [
+    "param_specs",
+    "init_params",
+    "param_partition_specs",
+    "lm_loss",
+    "prefill",
+    "decode_step",
+    "cache_specs",
+]
+
+PyTree = Any
+
+
+def padded_vocab(cfg: LMArch) -> int:
+    """Vocab rounded to 256 so the embedding shards on any mesh axis
+    (MaxText-style padding; pad ids are never produced by the tokenizer)."""
+    return cfg.vocab + (-cfg.vocab) % 256
+
+
+def _layer_shapes(cfg: LMArch) -> dict[str, tuple[tuple[int, ...], Any]]:
+    d, hhd, khd = cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.n_kv_heads * cfg.head_dim
+    L = cfg.n_layers
+    shapes = {
+        "ln1": ((L, d), jnp.float32),
+        "ln2": ((L, d), jnp.float32),
+        "wq": ((L, d, hhd), jnp.bfloat16),
+        "wk": ((L, d, khd), jnp.bfloat16),
+        "wv": ((L, d, khd), jnp.bfloat16),
+        "wo": ((L, hhd, d), jnp.bfloat16),
+    }
+    if cfg.moe is None:
+        shapes["wi"] = ((L, d, 2 * cfg.d_ff), jnp.bfloat16)
+        shapes["wo_mlp"] = ((L, cfg.d_ff, d), jnp.bfloat16)
+    else:
+        m = cfg.moe
+        shapes["router"] = ((L, d, m.num_experts), jnp.float32)
+        shapes["wi_e"] = ((L, m.num_experts, d, 2 * m.d_ff), jnp.bfloat16)
+        shapes["wo_e"] = ((L, m.num_experts, m.d_ff, d), jnp.bfloat16)
+    return shapes
+
+
+def param_specs(cfg: LMArch) -> PyTree:
+    """ShapeDtypeStruct tree (dry-run input)."""
+    specs = {
+        "embed": jax.ShapeDtypeStruct((padded_vocab(cfg), cfg.d_model), jnp.bfloat16),
+        "ln_f": jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32),
+        "layers": {
+            k: jax.ShapeDtypeStruct(shape, dt)
+            for k, (shape, dt) in _layer_shapes(cfg).items()
+        },
+    }
+    return specs
+
+
+def param_partition_specs(cfg: LMArch) -> PyTree:
+    """Logical PartitionSpecs per parameter (filtered by mesh later).
+
+    2-D "fully sharded" layout: every big tensor shards its output
+    feature dim over "model" and its input dim over "data" (ZeRO-3-ish),
+    so per-chip bytes scale 1/(data*model).
+    """
+    from jax.sharding import PartitionSpec as P
+    specs = {
+        "embed": P("model", "data"),
+        "ln_f": P(None),
+        "layers": {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            # Megatron TP: column-parallel qkv, row-parallel o; weights
+            # replicated over "data" (dense attn weights are small — the
+            # §Perf iteration log shows why ZeRO-sharding them over
+            # "data" forced 1.25 GiB activation regathers per site)
+            "wq": P(None, None, "model"),
+            "wk": P(None, None, "model"),
+            "wv": P(None, None, "model"),
+            "wo": P(None, "model", None),
+        },
+    }
+    if cfg.moe is None:
+        specs["layers"]["wi"] = P(None, None, "model")
+        specs["layers"]["wo_mlp"] = P(None, "model", None)
+    else:
+        specs["layers"]["router"] = P(None, None, None)
+        # experts resident: E over "model", ffn dim over "data" (TP
+        # within expert) — no weight gathering, dispatch via a2a
+        specs["layers"]["wi_e"] = P(None, "model", None, "data")
+        specs["layers"]["wo_e"] = P(None, "model", "data", None)
+    return specs
+
+
+def init_params(cfg: LMArch, key) -> PyTree:
+    keys = jax.random.split(key, 16)
+    shapes = _layer_shapes(cfg)
+    layers = {}
+    for i, (k, (shape, dt)) in enumerate(sorted(shapes.items())):
+        if k.startswith("ln"):
+            layers[k] = jnp.zeros(shape, dt)
+        else:
+            layers[k] = dense_init(keys[i], shape, in_axis=-2, dtype=dt)
+    return {
+        "embed": dense_init(
+            keys[14], (padded_vocab(cfg), cfg.d_model), in_axis=1, dtype=jnp.bfloat16
+        ),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+
+
+# ----------------------------------------------------------------- forward
+def _layer_fwd(cfg: LMArch, x, lp, positions):
+    """One decoder layer. x: [B, S, d]."""
+    b, s, d = x.shape
+    # constrain at entry: the scan's saved residual carries (the remat
+    # checkpoint) inherit this sharding — without it XLA replicates the
+    # [L, B, S, d] stack over "model" (21 GiB/device on gemma train_4k).
+    # Sequence-parallel layout (batch over "data", seq over "model"):
+    # the saved carry is 1/(data*model) per device and the layer-boundary
+    # collectives become all-gather/reduce-scatter pairs over seq.
+    x = constrain(x, "data", "model", None)
+    h = rms_norm(x, lp["ln1"])
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = attn.causal_attention(
+        q, k, v, q_chunk=cfg.q_chunk, window=cfg.attn_window
+    )
+    x = x + (o.reshape(b, s, -1) @ lp["wo"])
+    x = constrain(x, "data", "model", None)
+
+    h = rms_norm(x, lp["ln2"])
+    if cfg.moe is None:
+        act = ACTIVATIONS[cfg.activation]
+        y = act(h @ lp["wi"]) @ lp["wo_mlp"]
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        y, aux = moe_ffn(
+            h.reshape(b * s, d),
+            lp["router"],
+            lp["wi_e"],
+            lp["wo_e"],
+            top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            activation=cfg.activation,
+        )
+        y = y.reshape(b, s, d)
+    x = x + y
+    x = constrain(x, "data", "model", None)
+    return x, (k, v, aux)
+
+
+def _backbone(cfg: LMArch, params, tokens, positions, collect_kv: bool):
+    """tokens [B, S] -> final hidden [B, S, d] (+ per-layer kv, aux)."""
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    x = constrain(x, "data", "model", None)
+
+    def body(x, lp):
+        x, (k, v, aux) = _layer_fwd(cfg, x, lp, positions)
+        out = (k, v, aux) if collect_kv else (None, None, aux)
+        return x, out
+
+    if cfg.remat:
+        # full remat: save only the bf16 residual carry per layer;
+        # everything else (incl. f32 norm upcasts) recomputes in backward
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs, auxs) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["ln_f"])
+    return x, ks, vs, auxs
+
+
+def lm_loss(cfg: LMArch, params, tokens, aux_weight: float = 0.01):
+    """Next-token CE, sequence-chunked logits. tokens: [B, S] int32."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, _, _, auxs = _backbone(cfg, params, tokens, positions, collect_kv=False)
+
+    inputs = x[:, :-1]
+    targets = tokens[:, 1:]
+    chunk = min(cfg.loss_chunk, inputs.shape[1])
+    n_tok = inputs.shape[1]
+    n_chunks = max(n_tok // chunk, 1)
+    usable = n_chunks * chunk
+    inputs_c = inputs[:, :usable].reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+    targets_c = targets[:, :usable].reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    embed = params["embed"]
+
+    def chunk_loss(carry, xt):
+        xc, tc = xt  # [B, chunk, d], [B, chunk]
+        logits = (xc @ embed.T).astype(jnp.float32)  # [B, chunk, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (inputs_c, targets_c))
+    # ragged tail (only in smoke shapes where chunk doesn't divide)
+    if usable < n_tok:
+        logits = (inputs[:, usable:] @ embed.T).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, targets[:, usable:, None], axis=-1
+        )[..., 0]
+        total = total + jnp.sum(logz - gold)
+
+    loss = total / (b * n_tok)
+    aux = jnp.mean(auxs) if cfg.moe is not None else jnp.zeros((), jnp.float32)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+def cache_specs(cfg: LMArch, batch: int, max_seq: int) -> PyTree:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+    }
+
+
+def prefill(cfg: LMArch, params, tokens):
+    """tokens [B, S] -> (logits_last [B, V], cache)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, ks, vs, _ = _backbone(cfg, params, tokens, positions, collect_kv=True)
+    logits = (x[:, -1] @ params["embed"].T).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(cfg: LMArch, params, cache, tokens, pos):
+    """One decode step.
+
+    Args:
+      cache:  {"k","v"}: [L, B, S_max, K, hd] (bf16).
+      tokens: i32 [B] — the tokens emitted at position ``pos``.
+      pos:    i32 [] — their position (cache valid for [0, pos]).
+
+    Returns (logits f32 [B, V], new cache).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(jnp.bfloat16)  # [B, d]
+    positions = jnp.full((b, 1), pos)
+    s_max = cache["k"].shape[2]
+
+    # fori over layers with the cache as *carry* (not scan xs/ys): the
+    # dynamic_update_slice then updates in place (no stacked ys copy) and
+    # the per-layer cache slice is loop-variant, so the CPU backend's
+    # bf16->f32 dot-operand convert cannot be hoisted into a full-cache
+    # f32 copy (a 2x cache-memory artifact; TPU dots are bf16-native).
+    def layer_body(l, carry):
+        x, k_all, v_all = carry
+        lp = jax.tree.map(lambda w: w[l], params["layers"])
+        h = rms_norm(x, lp["ln1"])
+        q = (h @ lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)[:, 0]
+        k = rope(k, positions, cfg.rope_theta)[:, 0]
+        v = v[:, 0]
+        # match the cache sharding before the in-place update (see
+        # decode_attention note on avoiding cache rematerialization)
+        k = constrain(k, "data", None, "model")
+        v = constrain(v, "data", None, "model")
+        k_all = jax.lax.dynamic_update_slice(
+            k_all, k[None, :, None], (l, 0, pos, 0, 0)
+        )
+        v_all = jax.lax.dynamic_update_slice(
+            v_all, v[None, :, None], (l, 0, pos, 0, 0)
+        )
+        k_c = jax.lax.dynamic_slice(
+            k_all, (l, 0, 0, 0, 0), (1,) + k_all.shape[1:]
+        )[0]
+        v_c = jax.lax.dynamic_slice(
+            v_all, (l, 0, 0, 0, 0), (1,) + v_all.shape[1:]
+        )[0]
+        o = attn.decode_attention(q, k_c, v_c, pos, window=cfg.attn_window)
+        x = x + o.reshape(b, -1) @ lp["wo"]
+
+        h = rms_norm(x, lp["ln2"])
+        if cfg.moe is None:
+            act = ACTIVATIONS[cfg.activation]
+            y = act(h @ lp["wi"]) @ lp["wo_mlp"]
+        else:
+            y, _ = moe_ffn(
+                h,
+                lp["router"],
+                lp["wi_e"],
+                lp["wo_e"],
+                top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor,
+                activation=cfg.activation,
+            )
+        x = x + y
+        return (x, k_all, v_all)
+
+    x, k_new, v_new = jax.lax.fori_loop(
+        0, cfg.n_layers, layer_body, (x, cache["k"], cache["v"])
+    )
+    x = rms_norm(x, params["ln_f"])
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,27 @@
+"""Hand-rolled optimizers (no optax dependency in this environment).
+
+Optax-style pure-function API:  ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (new_params, new_state)``.
+All states are PyTrees of arrays so they shard/checkpoint like params.
+"""
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    sgd_momentum,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import constant, cosine_with_warmup, linear_warmup
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "sgd_momentum",
+    "global_norm",
+    "clip_by_global_norm",
+    "constant",
+    "cosine_with_warmup",
+    "linear_warmup",
+]

@@ -1,0 +1,211 @@
+"""Optimizers: AdamW, Adafactor (factored second moments), SGD+momentum.
+
+Adafactor is the memory plan for the 400B-class MoE cells (DESIGN.md §6):
+its second-moment statistics are O(rows + cols) instead of O(rows·cols),
+which is the difference between fitting and not fitting 512 chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "sgd_momentum",
+    "global_norm",
+    "clip_by_global_norm",
+]
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _layerwise(fn):
+    """Apply a per-leaf update one leading-dim slice at a time for big
+    stacked leaves (scan-over-layers params, DLRM table stacks): the
+    optimizer's f32 elementwise chains otherwise materialize several
+    full-stack temporaries at once (tens of GB on the 400B cells)."""
+
+    def wrapped(p, *rest):
+        if p.ndim >= 3 and p.shape[0] > 1:
+            return jax.lax.map(lambda args: fn(*args), (p, *rest))
+        return fn(p, *rest)
+
+    return wrapped
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: object  # PyTree like params
+    nu: object
+
+
+def adamw(
+    lr=1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip_norm: float | None = None,
+) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        if grad_clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip_norm)
+        step = state.step + 1
+        lr_t = sched(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(_layerwise(upd), params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: object  # row second moments (or full v for <2D params)
+    vc: object  # col second moments (zeros-placeholder for <2D)
+
+
+def adafactor(
+    lr=1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    """Factored Adafactor (Shazeer & Stern).  Params with ndim >= 2 factor
+    their last two dims; smaller params keep a full second moment in vr."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        def vr_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)  # row stats
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(vr_init, params),
+            vc=jax.tree.map(vc_init, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                u = g / (
+                    jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + eps
+                )
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = g / (jnp.sqrt(vr) + eps)
+                vc = vc
+            # update clipping (RMS-based, Adafactor eq. 6)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), vr, vc
+
+        out = jax.tree.map(_layerwise(upd), params, grads, state.vr, state.vc)
+        istup = lambda t: isinstance(t, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+        vr = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+        vc = jax.tree.map(lambda t: t[2], out, is_leaf=istup)
+        return new_params, AdafactorState(step=step, vr=vr, vc=vc)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: object
+
+
+def sgd_momentum(lr=1e-2, momentum: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(p, g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        out = jax.tree.map(_layerwise(upd), params, grads, state.momentum)
+        istup = lambda t: isinstance(t, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+        mom = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+        return new_params, SGDState(step=step, momentum=mom)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup", "cosine_with_warmup"]
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, step / max(warmup_steps, 1))
+
+    return fn
+
+
+def cosine_with_warmup(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(1.0, step / max(warmup_steps, 1))
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

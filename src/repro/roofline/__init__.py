@@ -1,0 +1,12 @@
+"""Roofline analysis from compiled HLO (no hardware required).
+
+hlo.py   — parses ``compiled.as_text()`` (post-SPMD, local shapes):
+           dot FLOPs, HBM bytes, collective bytes — multiplying loop
+           bodies by XLA's recorded ``known_trip_count`` (XLA's own
+           cost_analysis counts while bodies once; see DESIGN.md §7).
+model.py — TPU v5e constants + the three roofline terms.
+"""
+from repro.roofline.hlo import analyze_hlo_module
+from repro.roofline.model import RooflineTerms, roofline_terms, V5E
+
+__all__ = ["analyze_hlo_module", "roofline_terms", "RooflineTerms", "V5E"]

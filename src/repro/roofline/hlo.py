@@ -1,0 +1,420 @@
+"""Post-SPMD HLO cost parser.
+
+Why not ``compiled.cost_analysis()``: XLA counts ``while`` bodies once,
+and every model here wraps layers/levels in scan/fori loops.  This
+parser walks the computation graph, multiplies loop bodies by the
+``known_trip_count`` XLA records in ``backend_config``, and classifies
+collective operands — the three quantities §Roofline needs.
+
+Cost model (per device — the partitioned module has local shapes):
+  flops  — dot ops: 2 · numel(out) · contracted-dim product
+           (+ matmul-shaped custom-calls, 2-D heuristic)
+  bytes  — per fusion/op at computation top level: operand bytes +
+           output bytes (post-fusion HLO ⇒ values between instructions
+           live in HBM); free ops (tuple/GTE/parameter/bitcast/constant)
+           excluded
+  colls  — per collective: operand bytes, group size g, class —
+           link-byte weighting happens in model.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo_module"]
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8\w*|pred|s64|s32|s16|s8|u64|u32|u16|u8|c64|c128)\[([\d,]*)\]")
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+    "all-gather-start", "all-reduce-start", "collective-permute-start",
+}
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT )?%([\w\.\-]+) = (.*)$")
+_HEADER_RE = re.compile(r"^(ENTRY )?%?([\w\.\-]+) \((.*)\) -> (.+) \{$")
+_PARAM_RE = re.compile(r"([\w\.\-]+): ((?:\([^)]*\))|(?:[\w\[\]{},\/]+))")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:?\s*{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes_numel(type_str: str) -> tuple[float, float]:
+    """Total (bytes, numel) over every array shape in the type string."""
+    total_b = 0.0
+    total_n = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        numel = 1.0
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total_n += numel
+        total_b += numel * _DTYPE_BYTES[dtype]
+    return total_b, total_n
+
+
+def _split_type_and_rest(s: str) -> tuple[str, str]:
+    """'f32[2,3]{1,0} dot(%a, %b), ...' -> ('f32[2,3]{1,0}', 'dot(...)...')."""
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                return s[: i + 1], s[i + 1 :].strip()
+    i = s.find(" ")
+    if i < 0:
+        return s, ""
+    return s[:i], s[i + 1 :].strip()
+
+
+def _parse_call(rest: str) -> tuple[str, list[str], str]:
+    """'dot(%a, %b), attrs' -> ('dot', ['%a','%b'], ', attrs')."""
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return rest.split(",")[0].strip(), [], ""
+    opcode = m.group(1)
+    depth = 0
+    start = m.end() - 1
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            args = rest[start + 1 : i]
+            attrs = rest[i + 1 :]
+            operands = re.findall(r"%([\w\.\-]+)", args)
+            return opcode, operands, attrs
+    return opcode, [], ""
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+def _parse_computations(text: str):
+    comps: dict[str, list[_Instr]] = {}
+    params: dict[str, dict[str, str]] = {}
+    param_order: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        h = _HEADER_RE.match(line.strip())
+        if h and ("=" not in line.split("(")[0]):
+            is_entry, name, paramlist, _ret = h.groups()
+            cur = name
+            comps[cur] = []
+            params[cur] = {}
+            param_order[cur] = []
+            if is_entry:
+                entry = name
+            for pname, pshape in _PARAM_RE.findall(paramlist):
+                params[cur][pname] = pshape
+                param_order[cur].append(pname)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m and cur is not None:
+            name, rhs = m.groups()
+            type_str, rest = _split_type_and_rest(rhs)
+            opcode, operands, attrs = _parse_call(rest)
+            comps[cur].append(
+                _Instr(name=name, type_str=type_str, opcode=opcode, operands=operands, attrs=attrs, line=line)
+            )
+    return comps, params, entry, param_order
+
+
+def _dot_flops(instr: _Instr, symtab: dict[str, str]) -> float:
+    _, out_numel = _shape_bytes_numel(instr.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs + instr.line)
+    contract = 1.0
+    if m and instr.operands:
+        lhs_shape = symtab.get(instr.operands[0], "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * out_numel * contract
+
+
+def _custom_call_flops(instr: _Instr, symtab: dict[str, str]) -> float:
+    if not re.search(r"matmul|dot|gemm", instr.line, re.I):
+        return 0.0
+    out_b, out_n = _shape_bytes_numel(instr.type_str)
+    if len(instr.operands) >= 2:
+        _, ln = _shape_bytes_numel(symtab.get(instr.operands[0], ""))
+        _, rn = _shape_bytes_numel(symtab.get(instr.operands[1], ""))
+        if out_n > 0:
+            k = math.sqrt(max(ln * rn / out_n, 1.0))
+            return 2.0 * out_n * k
+    return 0.0
+
+
+def _collective_group_size(instr: _Instr, n_partitions_hint: int) -> int:
+    m = _GROUPS_BRACKET_RE.search(instr.line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(instr.line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return max(n_partitions_hint, 1)
+
+
+_SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def _slice_aware_read_bytes(
+    ins: _Instr, symtab: dict[str, str], comps, params, param_order
+) -> float:
+    """Read traffic of an instruction, counting only the *touched* bytes
+    of sliced/gathered operands.
+
+    dynamic-slice/slice/gather read only output-sized data from their
+    big operand; dynamic-update-slice reads the update (the buffer is
+    updated in place).  For fusions, each fused-computation parameter
+    whose every internal use is a slice-like op contributes only those
+    slices' bytes (this is what makes scan-over-layers weight reads
+    count as per-layer slices instead of whole-stack reads)."""
+    op = ins.opcode
+    out_b, _ = _shape_bytes_numel(ins.type_str)
+    if op in _SLICE_OPS:
+        # indices operands are negligible; big operand read = output
+        return out_b
+    if op == "dynamic-update-slice":
+        upd = ins.operands[1] if len(ins.operands) > 1 else None
+        upd_b = _shape_bytes_numel(symtab.get(upd, ""))[0] if upd else 0.0
+        return upd_b
+    if op == "fusion":
+        called = re.search(r"calls=%([\w\.\-]+)", ins.line)
+        if not called or called.group(1) not in comps:
+            return sum(_shape_bytes_numel(symtab.get(o, ""))[0] for o in ins.operands)
+        cname = called.group(1)
+        order = param_order.get(cname, [])
+        uses: dict[str, list[_Instr]] = {p: [] for p in order}
+        for sub in comps[cname]:
+            for o in sub.operands:
+                if o in uses:
+                    uses[o].append(sub)
+        total = 0.0
+        for i, pname in enumerate(order):
+            full = (
+                _shape_bytes_numel(symtab.get(ins.operands[i], ""))[0]
+                if i < len(ins.operands)
+                else _shape_bytes_numel(params[cname].get(pname, ""))[0]
+            )
+            puses = uses.get(pname, [])
+            if puses and all(u.opcode in _SLICE_OPS for u in puses):
+                total += sum(_shape_bytes_numel(u.type_str)[0] for u in puses)
+            elif puses and all(
+                u.opcode in _SLICE_OPS or u.opcode == "dynamic-update-slice"
+                for u in puses
+            ):
+                # in-place update pattern: read slices + the update only
+                total += sum(
+                    _shape_bytes_numel(u.type_str)[0]
+                    for u in puses
+                    if u.opcode in _SLICE_OPS
+                )
+            else:
+                total += full
+        return total
+    return sum(_shape_bytes_numel(symtab.get(o, ""))[0] for o in ins.operands)
+
+
+def _write_bytes(ins: _Instr, symtabs: dict, comps, cur: str) -> float:
+    out_b, _ = _shape_bytes_numel(ins.type_str)
+    if ins.opcode == "dynamic-update-slice":
+        upd = ins.operands[1] if len(ins.operands) > 1 else None
+        b = _shape_bytes_numel(symtabs[cur].get(upd, ""))[0] if upd else 0.0
+        return b or out_b
+    if ins.opcode == "fusion":
+        called = re.search(r"calls=%([\w\.\-]+)", ins.line)
+        if called and called.group(1) in comps and comps[called.group(1)]:
+            cname = called.group(1)
+            root = comps[cname][-1]
+            if root.opcode == "dynamic-update-slice":
+                return _write_bytes(root, symtabs, comps, cname) or out_b
+    return out_b
+
+
+def analyze_hlo_module(text: str, n_partitions_hint: int = 1) -> dict:
+    """Returns per-device cost terms (see module docstring)."""
+    comps, params, entry, param_order = _parse_computations(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+
+    memo: dict[str, dict] = {}
+    symtabs: dict[str, dict[str, str]] = {}
+    _instr_index: dict[str, dict[str, _Instr]] = {}
+    for cname in comps:
+        tab = dict(params.get(cname, {}))
+        for ins in comps[cname]:
+            tab[ins.name] = ins.type_str
+        symtabs[cname] = tab
+        _instr_index[cname] = {ins.name: ins for ins in comps[cname]}
+
+    def comp_cost(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        result = {
+            "flops": 0.0,
+            "bytes": 0.0,
+            "colls": defaultdict(float),  # (class, g) -> operand bytes
+            "unknown_trip_whiles": 0,
+        }
+        memo[name] = result  # pre-insert (cycles impossible, but cheap)
+        symtab = symtabs[name]
+        instrs = comps.get(name, [])
+        for ins in instrs:
+            op = ins.opcode
+            if op in _FREE_OPS:
+                continue
+            out_b = _write_bytes(ins, symtabs, comps, name)
+            opnd_b = _slice_aware_read_bytes(ins, symtab, comps, params, param_order)
+            if op == "while":
+                body = re.search(r"body=%([\w\.\-]+)", ins.line)
+                cond = re.search(r"condition=%([\w\.\-]+)", ins.line)
+                trip_m = _TRIP_RE.search(ins.line)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if not trip_m:
+                    result["unknown_trip_whiles"] += 1
+                for sub in (body, cond):
+                    if sub:
+                        c = comp_cost(sub.group(1))
+                        result["flops"] += trip * c["flops"]
+                        result["bytes"] += trip * c["bytes"]
+                        for k, v in c["colls"].items():
+                            result["colls"][k] += trip * v
+                        result["unknown_trip_whiles"] += c["unknown_trip_whiles"]
+                continue
+            if op == "conditional":
+                branches = re.findall(r"%([\w\.\-]+)", ins.attrs)
+                sub_costs = [comp_cost(b) for b in branches if b in comps]
+                if sub_costs:
+                    best = max(sub_costs, key=lambda c: c["flops"] + c["bytes"])
+                    result["flops"] += best["flops"]
+                    result["bytes"] += best["bytes"]
+                    for k, v in best["colls"].items():
+                        result["colls"][k] += v
+                continue
+            if op in _COLLECTIVES:
+                g = _collective_group_size(ins, n_partitions_hint)
+                cls = op.replace("-start", "")
+                # x86 promotes bf16 collectives to f32 (convert fusions
+                # feeding the op); TPU moves bf16 on the wire — count
+                # the bf16 payload when the operand is a pure upcast.
+                link_b = opnd_b
+                if ins.operands:
+                    prod = _instr_index.get(name, {}).get(ins.operands[0])
+                    if prod is not None and "convert" in (prod.opcode + prod.name):
+                        _, op_n = _shape_bytes_numel(
+                            symtab.get(ins.operands[0], ins.type_str)
+                        )
+                        srcs = [symtab.get(o2, "") for o2 in prod.operands]
+                        called = re.search(r"calls=%([\w\.\-]+)", prod.line)
+                        if called and called.group(1) in comps:
+                            srcs += [
+                                sub.type_str for sub in comps[called.group(1)]
+                            ]
+                        for st in srcs:
+                            m2 = _SHAPE_RE.search(st)
+                            _, n2 = _shape_bytes_numel(st)
+                            if m2 and m2.group(1) == "bf16" and n2 >= 0.9 * op_n > 0:
+                                link_b = opnd_b / 2.0
+                                break
+                result["colls"][(cls, g)] += link_b
+                result["bytes"] += opnd_b + out_b  # local HBM touch
+                continue
+            if op == "fusion":
+                called = re.search(r"calls=%([\w\.\-]+)", ins.line)
+                if called and called.group(1) in comps:
+                    inner = comp_cost(called.group(1))
+                    result["flops"] += inner["flops"]  # dots inside fusions
+                result["bytes"] += opnd_b + out_b
+                continue
+            if op == "dot":
+                result["flops"] += _dot_flops(ins, symtab)
+            elif op == "custom-call":
+                result["flops"] += _custom_call_flops(ins, symtab)
+            elif op == "call":
+                called = re.search(r"to_apply=%([\w\.\-]+)", ins.line)
+                if called and called.group(1) in comps:
+                    c = comp_cost(called.group(1))
+                    result["flops"] += c["flops"]
+                    result["bytes"] += c["bytes"]
+                    for k, v in c["colls"].items():
+                        result["colls"][k] += v
+            result["bytes"] += opnd_b + out_b
+        return result
+
+    cost = comp_cost(entry)
+    colls_flat = defaultdict(float)
+    coll_records = []
+    for (cls, g), b in cost["colls"].items():
+        colls_flat[cls] += b
+        coll_records.append({"class": cls, "group_size": g, "operand_bytes": b})
+    return {
+        "flops": cost["flops"],
+        "bytes": cost["bytes"],
+        "collective_operand_bytes": dict(colls_flat),
+        "collectives": coll_records,
+        "unknown_trip_whiles": cost["unknown_trip_whiles"],
+        "bf16_upcast_artifact_bytes": _bf16_upcast_artifacts(comps, params, entry),
+    }
+
+
+def _bf16_upcast_artifacts(comps, params, entry, min_bytes: float = 64e6) -> float:
+    """CPU-backend artifact accounting: x86 oneDNN has no bf16 GEMM, so
+    XLA materializes f32 shadows of large bf16 loop state / parameters
+    that feed dots (e.g. an f32 copy of the entire KV cache).  On the TPU
+    target bf16 dot operands are MXU-native and these copies do not
+    exist.  Heuristic: for every large bf16 ENTRY parameter whose dims
+    also appear as an f32 convert output somewhere, count one f32 shadow
+    (2x the bf16 bytes).  Reported separately so the dry-run can show
+    both raw and TPU-adjusted peak memory."""
+    f32_convert_dims: set[str] = set()
+    for name, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode != "convert" and "convert" not in ins.name:
+                continue
+            m = _SHAPE_RE.search(ins.type_str)
+            if m and m.group(1) == "f32":
+                f32_convert_dims.add(m.group(2))
+    total = 0.0
+    for pname, pshape in params.get(entry, {}).items():
+        m = _SHAPE_RE.search(pshape)
+        if not m or m.group(1) != "bf16":
+            continue
+        b, _ = _shape_bytes_numel(pshape)
+        if b >= min_bytes and m.group(2) in f32_convert_dims:
+            total += 2.0 * b  # the f32 twin
+    return total

@@ -1,0 +1,111 @@
+"""TPU v5e roofline model: three terms per (arch × mesh) cell.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = link_bytes_per_device / ICI_link_bandwidth
+
+Link bytes apply the standard ring-algorithm weights to the collective
+operand bytes the HLO parser recorded (g = participant group size):
+
+    all-gather          (g-1)   · operand        (tiled operand = shard)
+    reduce-scatter      (g-1)/g · operand
+    all-reduce        2·(g-1)/g · operand
+    all-to-all          (g-1)/g · operand
+    collective-permute            operand
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["V5E", "RooflineTerms", "roofline_terms", "link_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_bf16_flops: float  # per chip
+    hbm_bandwidth: float  # bytes/s per chip
+    ici_link_bandwidth: float  # bytes/s per link
+
+
+V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes: float
+    link_bytes: float
+    bottleneck: str
+    model_flops_total: float
+    useful_fraction: float  # MODEL_FLOPS / (HLO flops × devices)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Dominant-term share of the no-overlap ideal (1.0 = the step is
+        exactly its dominant roofline term; <1 impossible here — reported
+        as dominant/sum to show overlap headroom)."""
+        total = self.compute_s + self.memory_s + self.collective_s
+        return self.step_time_s / total if total > 0 else 0.0
+
+
+def link_bytes(coll_records: list[dict]) -> float:
+    total = 0.0
+    for rec in coll_records:
+        g = max(rec.get("group_size", 1), 1)
+        b = rec["operand_bytes"]
+        cls = rec["class"]
+        if cls == "all-gather":
+            total += (g - 1) * b
+        elif cls == "reduce-scatter":
+            total += (g - 1) / g * b
+        elif cls == "all-reduce":
+            total += 2 * (g - 1) / g * b
+        elif cls == "all-to-all":
+            total += (g - 1) / g * b
+        else:  # collective-permute, broadcast
+            total += b
+    return total
+
+
+def roofline_terms(
+    hlo_terms: dict,
+    n_devices: int,
+    model_flops_total: float = 0.0,
+    hw: HardwareSpec = V5E,
+) -> RooflineTerms:
+    """hlo_terms: output of analyze_hlo_module (per-device quantities)."""
+    flops = hlo_terms["flops"]
+    mem_bytes = hlo_terms["bytes"]
+    lb = link_bytes(hlo_terms.get("collectives", []))
+    compute_s = flops / hw.peak_bf16_flops
+    memory_s = mem_bytes / hw.hbm_bandwidth
+    collective_s = lb / hw.ici_link_bandwidth
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = (
+        model_flops_total / (flops * n_devices) if flops > 0 and model_flops_total else 0.0
+    )
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        flops=flops,
+        bytes=mem_bytes,
+        link_bytes=lb,
+        bottleneck=bottleneck,
+        model_flops_total=model_flops_total,
+        useful_fraction=useful,
+    )

@@ -1,0 +1,104 @@
+"""Roofline report: dryrun_all.json -> EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun_all.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.roofline.model import V5E, roofline_terms
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def build_rows(records: list[dict]) -> list[dict]:
+    rows = []
+    for rec in records:
+        terms = roofline_terms(
+            rec["hlo_terms"],
+            n_devices=rec["n_devices"],
+            model_flops_total=rec["meta"].get("model_flops", 0.0),
+        )
+        rows.append(
+            {
+                "cell": rec["cell"],
+                "mesh": rec["mesh"],
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "bottleneck": terms.bottleneck,
+                "step_s": terms.step_time_s,
+                "useful": terms.useful_fraction,
+                "peak_gb": rec["memory"]["tpu_peak_bytes_per_device"] / 2**30,
+                "raw_peak_gb": rec["memory"]["peak_bytes_per_device"] / 2**30,
+                "analytic_gb": (
+                    rec["meta"]["analytic_bytes_global"] / rec["n_devices"] / 2**30
+                    if rec["meta"].get("analytic_bytes_global")
+                    else None
+                ),
+                "fits": (
+                    rec["meta"]["analytic_bytes_global"] / rec["n_devices"]
+                    if rec["meta"].get("analytic_bytes_global")
+                    else rec["memory"]["tpu_peak_bytes_per_device"]
+                )
+                <= HBM_PER_CHIP,
+                "flops": rec["hlo_terms"]["flops"],
+                "bytes": rec["hlo_terms"]["bytes"],
+                "link_bytes": terms.link_bytes,
+                "model_flops": rec["meta"].get("model_flops", 0.0),
+            }
+        )
+    return rows
+
+
+def advice(row: dict) -> str:
+    b = row["bottleneck"]
+    if b == "compute":
+        if row["useful"] < 0.5:
+            return "compute-bound with low useful fraction: cut remat recompute / padding waste"
+        return "compute-bound near model flops: healthy; only sharding-waste left"
+    if b == "memory":
+        return "HBM-bound: fuse level ops (Pallas kernels), shrink dtypes, re-tile"
+    return "collective-bound: reshard to cut gather/scatter volume or overlap with compute"
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = (
+        "| cell | mesh | compute s | memory s | collective s | bottleneck | "
+        "useful frac | peak GiB (tpu-adj) | fits 16G |\n|---|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: r["cell"]):
+        mem_s = (
+            f"{r['peak_gb']:.2f}"
+            if r.get("analytic_gb") is None
+            else f"{r['analytic_gb']:.2f}ᵃ"
+        )
+        lines.append(
+            f"| {r['cell']} | {r['mesh']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['bottleneck']}** | {r['useful']:.2f} "
+            f"| {mem_s} | {'yes' if r['fits'] else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    with open(args.json_path) as f:
+        data = json.load(f)
+    rows = build_rows(data["records"])
+    print(to_markdown(rows))
+    # summary
+    doms = {}
+    for r in rows:
+        doms[r["bottleneck"]] = doms.get(r["bottleneck"], 0) + 1
+    fits = sum(r["fits"] for r in rows)
+    print(f"\n{len(rows)} cells; bottlenecks: {doms}; fit 16G: {fits}/{len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+import jax.numpy as jnp
+
+from repro.core import betweenness_centrality, brandes_reference
+from repro.core.brandes_ref import single_source_dependencies
+from repro.core.scheduler import build_schedule
+from repro.graphs import Graph, cycle_graph, gnp_graph, path_graph, star_graph
+from repro.graphs.partition import partition_2d
+
+SETTINGS = dict(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def random_graph(draw, max_n=18):
+    n = draw(st.integers(4, max_n))
+    p = draw(st.floats(0.05, 0.5))
+    seed = draw(st.integers(0, 10_000))
+    return gnp_graph(n, p, seed=seed)
+
+
+# ------------------------------------------------------------ BC invariants
+@given(random_graph(), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_bc_invariant_under_relabeling(graph, perm_seed):
+    """BC(π(v)) on the relabeled graph equals BC(v)."""
+    rng = np.random.default_rng(perm_seed)
+    perm = rng.permutation(graph.n)
+    edges = np.stack([perm[graph.src], perm[graph.dst]], axis=1)
+    relabeled = Graph.from_edges(graph.n, edges)
+    bc = betweenness_centrality(graph, heuristics="h0").bc
+    bc_rel = betweenness_centrality(relabeled, heuristics="h0").bc
+    np.testing.assert_allclose(bc_rel[perm], bc, rtol=1e-5, atol=1e-5)
+
+
+@given(random_graph())
+@settings(**SETTINGS)
+def test_heuristics_exactness(graph):
+    """All heuristic modes compute the exact same scores."""
+    base = betweenness_centrality(graph, heuristics="h0").bc
+    for h in ("h1", "h2", "h3"):
+        got = betweenness_centrality(graph, heuristics=h).bc
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+@given(random_graph())
+@settings(**SETTINGS)
+def test_bc_sum_rule(graph):
+    """Σ_v BC(v) = Σ_{ordered connected pairs s≠t} (d(s,t) - 1), because
+    Σ_v σ_st(v)/σ_st = (interior vertices of any shortest path) = d-1."""
+    bc = betweenness_centrality(graph, heuristics="h0").bc
+    adj = graph.adjacency_lists()
+    total = 0.0
+    for s in range(graph.n):
+        _, _, depth = single_source_dependencies(adj, graph.n, s)
+        d = depth[(depth > 0)]
+        total += float((d - 1).sum())
+    np.testing.assert_allclose(bc.sum(), total, rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(3, 40))
+@settings(**SETTINGS)
+def test_path_graph_closed_form(n):
+    bc = betweenness_centrality(path_graph(n), heuristics="h3").bc
+    expected = np.array([2.0 * i * (n - 1 - i) for i in range(n)])
+    np.testing.assert_allclose(bc, expected, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(3, 40))
+@settings(**SETTINGS)
+def test_cycle_graph_closed_form(n):
+    """Cycle C_n: all vertices equivalent; BC = 2·(pairs routed through a
+    vertex).  Cross-check against the oracle (closed form differs for
+    odd/even n)."""
+    bc = betweenness_centrality(cycle_graph(n), heuristics="h2").bc
+    expected = brandes_reference(cycle_graph(n))
+    np.testing.assert_allclose(bc, expected, rtol=1e-5, atol=1e-5)
+    assert np.allclose(bc, bc[0])  # vertex-transitive
+
+
+@given(st.integers(2, 30))
+@settings(**SETTINGS)
+def test_star_graph_closed_form(k):
+    bc = betweenness_centrality(star_graph(k), heuristics="h1").bc
+    np.testing.assert_allclose(bc[0], k * (k - 1), rtol=1e-6)
+    np.testing.assert_allclose(bc[1:], 0.0, atol=1e-9)
+
+
+# ----------------------------------------------------------- scheduler/graph
+@given(random_graph(), st.integers(1, 16), st.sampled_from(["h0", "h1", "h2", "h3"]))
+@settings(**SETTINGS)
+def test_schedule_covers_each_source_once(graph, batch_size, heuristics):
+    schedule, prep, residual, omega = build_schedule(
+        graph, batch_size=batch_size, heuristics=heuristics
+    )
+    seen: list[int] = []
+    for rnd in schedule.rounds:
+        seen += [int(v) for v in rnd.sources if v >= 0]
+        seen += [int(c) for c in rnd.derived[:, 0] if c >= 0]
+        # derived positions must reference in-round explicit sources
+        for c, ap, bp in rnd.derived:
+            if c >= 0:
+                assert rnd.sources[ap] >= 0 and rnd.sources[bp] >= 0
+    assert len(seen) == len(set(seen))  # nobody runs twice
+    res_deg = residual.degrees()
+    eligible = set(np.nonzero(res_deg >= 1)[0].tolist())
+    analytic = {int(v) for v, _ in schedule.analytic_corrections}
+    assert set(seen) == eligible
+    assert analytic.isdisjoint(seen)
+
+
+@given(random_graph(), st.integers(1, 4), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_partition_2d_preserves_arcs(graph, R, C):
+    part = partition_2d(graph, R, C)
+    chunk = part.chunk
+    rebuilt = []
+    for i in range(R):
+        for j in range(C):
+            cnt = int(part.arc_counts[i, j])
+            src_l = part.src_local[i, j, :cnt]
+            dst_l = part.dst_local[i, j, :cnt]
+            src_g = src_l + j * R * chunk
+            blk = dst_l // chunk
+            dst_g = (blk * R + i) * chunk + dst_l % chunk
+            rebuilt.append(np.stack([src_g, dst_g], axis=1))
+    rebuilt = np.concatenate(rebuilt) if rebuilt else np.zeros((0, 2), np.int64)
+    want = np.stack([graph.src, graph.dst], axis=1)
+    got = rebuilt[np.lexsort((rebuilt[:, 1], rebuilt[:, 0]))]
+    want = want[np.lexsort((want[:, 1], want[:, 0]))]
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------------ kernels
+@given(
+    st.integers(1, 80),
+    st.integers(1, 40),
+    st.integers(1, 12),
+    st.integers(1, 6),
+    st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_segment_bag_property(v, b, l, d_div8, seed):
+    from repro.kernels import ops, ref
+
+    d = 8 * d_div8
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, v, (b, l)), jnp.int32)
+    got = ops.segment_bag(table, idx, interpret=True)
+    want = ref.segment_bag_ref(table, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 400), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_quantization_error_bound(n, seed):
+    from repro.distributed.compression import dequantize, quantize
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * rng.uniform(0.01, 100), jnp.float32)
+    back = dequantize(quantize(x))
+    bound = float(jnp.abs(x).max()) / 127 + 1e-6
+    assert float(jnp.abs(back - x).max()) <= bound

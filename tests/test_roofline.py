@@ -1,0 +1,104 @@
+"""HLO cost parser validated against closed-form matmul/scan costs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.hlo import analyze_hlo_module
+from repro.roofline.model import link_bytes, roofline_terms
+
+
+def _compile(fn, *specs, in_shardings=None):
+    j = jax.jit(fn) if in_shardings is None else jax.jit(fn, in_shardings=in_shardings)
+    return j.lower(*specs).compile()
+
+
+def test_plain_matmul_flops():
+    m = k = n = 512
+    c = _compile(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )
+    terms = analyze_hlo_module(c.as_text())
+    expected = 2.0 * m * k * n
+    assert abs(terms["flops"] - expected) / expected < 0.05, terms["flops"]
+    # bytes at least inputs+outputs
+    assert terms["bytes"] >= 3 * m * n * 4
+
+
+def test_scan_multiplies_trip_count():
+    L, m, k = 8, 128, 128
+
+    def f(x, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    c = _compile(
+        f,
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((L, k, k), jnp.float32),
+    )
+    terms = analyze_hlo_module(c.as_text())
+    expected = 2.0 * m * k * k * L
+    assert abs(terms["flops"] - expected) / expected < 0.05, terms["flops"]
+    assert terms["unknown_trip_whiles"] == 0
+
+
+def test_collectives_counted_with_groups():
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh(
+        (2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    m = k = n = 256
+
+    def f(a, b):
+        return a @ b
+
+    c = (
+        jax.jit(
+            f,
+            in_shardings=(
+                NamedSharding(mesh, P("data", "model")),
+                NamedSharding(mesh, P("model", None)),
+            ),
+            out_shardings=NamedSharding(mesh, P("data", None)),
+        )
+        .lower(
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+        )
+        .compile()
+    )
+    terms = analyze_hlo_module(c.as_text())
+    # contraction over the sharded k axis must produce a cross-"model"
+    # reduction (all-reduce or reduce-scatter) over groups of 4
+    colls = terms["collectives"]
+    assert colls, c.as_text()[:2000]
+    assert any(r["group_size"] == 4 for r in colls)
+    assert link_bytes(colls) > 0
+
+
+def test_roofline_terms_shape():
+    hlo_terms = {
+        "flops": 197e12,
+        "bytes": 819e9,
+        "collectives": [
+            {"class": "all-reduce", "group_size": 4, "operand_bytes": 50e9}
+        ],
+        "collective_operand_bytes": {"all-reduce": 50e9},
+        "unknown_trip_whiles": 0,
+    }
+    t = roofline_terms(hlo_terms, n_devices=256, model_flops_total=197e12 * 256)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 1.0) < 1e-9
+    assert abs(t.collective_s - 1.5) < 1e-9  # 2*(4-1)/4 * 50e9 / 50e9
+    assert t.bottleneck == "collective"
+    assert abs(t.useful_fraction - 1.0) < 1e-9
