@@ -1,0 +1,13 @@
+# Tier-1 verification: the full test suite on CPU.  Pallas kernels run
+# in interpret mode (the container validates kernel semantics; TPU
+# executes them compiled), distributed tests use 8 host devices via the
+# XLA flag set in tests/conftest.py.
+verify:
+	PYTHONPATH=src python -m pytest -x -q
+
+test: verify
+
+bench:
+	PYTHONPATH=src:. python benchmarks/run.py
+
+.PHONY: verify test bench

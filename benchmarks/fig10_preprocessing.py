@@ -15,9 +15,9 @@ def run() -> None:
     for p in (1, 2, 4, 8):
         if p > jax.device_count():
             continue
-        mesh = jax.make_mesh(
-            (p,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((p,), ("data",))
 
         def job():
             return one_degree_reduce_distributed(g, mesh, "data")

@@ -19,9 +19,9 @@ from repro.graphs import rmat_graph
 
 def _mesh(shape):
     names = ("data", "model")[: len(shape)]
-    return jax.make_mesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
-    )
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh(shape, names)
 
 
 def run() -> None:

@@ -27,9 +27,9 @@ from repro.roofline.model import link_bytes
 
 
 def _mesh(shape, names):
-    return jax.make_mesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
-    )
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh(shape, names)
 
 
 def run() -> None:

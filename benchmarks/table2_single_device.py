@@ -12,6 +12,7 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.core import betweenness_centrality
+from repro.core.bc import ENGINE_KINDS
 from repro.graphs import grid_graph, gnp_graph, rmat_graph, road_like_graph
 
 
@@ -23,7 +24,7 @@ def run() -> None:
         "gnp_400_p02": gnp_graph(400, 0.02, seed=0),
     }
     for name, g in graphs.items():
-        for engine in ("dense", "sparse"):
+        for engine in ENGINE_KINDS:
             def job():
                 return betweenness_centrality(
                     g, batch_size=32, heuristics="h0", engine_kind=engine

@@ -16,9 +16,9 @@ from repro.graphs import rmat_graph
 
 
 def _mesh(shape, names):
-    return jax.make_mesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
-    )
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh(shape, names)
 
 
 def run() -> None:

@@ -21,11 +21,9 @@ from repro.graphs import rmat_graph
 graph = rmat_graph(8, 8, seed=1)
 print(f"R-MAT SCALE 8, EF 8: n={graph.n}, m={graph.num_edges}")
 
-mesh = jax.make_mesh(
-    (2, 2, 2),
-    ("pod", "data", "model"),
-    axis_types=(jax.sharding.AxisType.Auto,) * 3,
-)
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 print(f"mesh: {dict(mesh.shape)} — fr=2 sub-clusters of fd=4 (2x2 grids)")
 
 bc, schedule = distributed_betweenness_centrality(

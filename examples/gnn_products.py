@@ -38,8 +38,9 @@ batch["labels"] = np.argmax(batch["node_feat"] @ probe, axis=1).astype(np.int32)
 b2d = to_2d_batch(batch, graph.n, R, C)
 chunk = b2d["node_feat"].shape[0] // (R * C)
 
-mesh = jax.make_mesh((R, C), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((R, C), ("data", "model"))
 loss_fn, _ = make_gnn2d_loss_fn(
     cfg, mesh, "full_graph", chunk=chunk, max_arcs=b2d["src_local"].shape[2]
 )

@@ -1,0 +1,57 @@
+"""JAX version compatibility shims.
+
+The codebase targets the modern JAX API (``jax.make_mesh`` with
+``axis_types``, ``jax.shard_map`` with ``check_vma``); the pinned
+container ships JAX 0.4.37 where
+
+* ``jax.sharding.AxisType`` does not exist (meshes are implicitly
+  "auto" — the only mode this code uses),
+* ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+  replication-check flag ``check_rep``.
+
+Everything that touches either API routes through here so the rest of
+the tree stays written against the current surface.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+__all__ = ["make_mesh", "shard_map"]
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(
+    shape: Sequence[int], axis_names: Sequence[str], *, devices=None
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types when supported.
+
+    JAX 0.4.37 has no ``axis_types`` kwarg (every axis is Auto); newer
+    versions default collective-manual code paths differently, so there
+    we pass ``AxisType.Auto`` explicitly.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _HAS_AXIS_TYPE:
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(shape), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where available, else the 0.4.x experimental one.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); both
+    disable the same replication/varying-manual-axes verification.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

@@ -1,14 +1,20 @@
 """The paper's primary contribution: Multi-GPU (here: multi-pod TPU)
 exact Betweenness Centrality — MGBC.
 
-Layers (paper §3):
-  engine.py       node-level parallelism — multi-source frontier-matrix
-                  traversal (active-edge analogue on the MXU)
-  distributed.py  cluster-level — 2-D decomposition over a device mesh
-                  (expand/fold collectives) + sub-cluster replication
+Layers (paper §3; see ARCHITECTURE.md for the full picture):
+  operators.py    operator layer — TraversalOperator protocol: dense,
+                  sparse, fused-Pallas, 2-D-distributed (sparse and
+                  Pallas dense-block) implementations of one level
+  engine.py       engine layer — the single forward/backward level-loop
+                  pair, written against the protocol
+  driver.py       driver layer — shared round body (traversal_round) and
+                  host round loop (BCDriver: async dispatch, donated BC
+                  accumulator, checkpoint/ledger resume)
+  bc.py           single-device entry point (semantic reference)
+  distributed.py  2-D decomposition over a device mesh (expand/fold
+                  collectives) + sub-cluster replication entry point
   scheduler.py    source rounds: the unit of jit, checkpoint, elasticity
   heuristics/     1-degree reduction and 2-degree DMF
-  bc.py           single-device driver (semantic reference)
   brandes_ref.py  numpy oracle (Algorithm 1)
 """
 from repro.core.bc import BCResult, betweenness_centrality

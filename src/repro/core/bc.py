@@ -1,15 +1,12 @@
-"""Single-device betweenness centrality driver (MGBC without the mesh).
+"""Single-device betweenness centrality entry point (MGBC without the mesh).
 
-Composes the round scheduler, the traversal engine and the heuristics
-into the full exact-BC computation.  The distributed version
-(:mod:`repro.core.distributed`) reuses the same schedule/round structure
-with the 2-D partitioned engine; this module is both the small-graph
-production path and the semantic reference for it.
+Composes the round scheduler, the operator layer and the shared driver
+(:mod:`repro.core.driver`) into the full exact-BC computation.  The
+distributed version (:mod:`repro.core.distributed`) is the same
+driver/round body over the 2-D-partitioned operators; this module is
+both the small-graph production path and the semantic reference for it.
 """
 from __future__ import annotations
-
-import dataclasses
-import functools
 
 import numpy as np
 
@@ -17,9 +14,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.heuristics.one_degree import OneDegreeReduction, leaf_correction
-from repro.core.heuristics.two_degree import derive_two_degree_columns
-from repro.core.scheduler import Schedule, build_schedule
+from repro.core.driver import (
+    BCDriver,
+    BCResult,
+    apply_reduction_corrections,
+    traversal_round,
+)
+from repro.core.operators import PallasDenseOperator
+from repro.core.scheduler import build_schedule
 from repro.graphs.graph import Graph
 
 __all__ = [
@@ -27,44 +29,11 @@ __all__ = [
     "betweenness_centrality",
     "make_round_fn",
     "apply_reduction_corrections",
+    "ENGINE_KINDS",
 ]
 
-
-def apply_reduction_corrections(
-    bc: np.ndarray,
-    prep: OneDegreeReduction,
-    schedule,
-    ns_by_root: dict[int, float],
-) -> None:
-    """Add the analytic BC credits of the 1-degree/tree reduction.
-
-    Every vertex x with removed branches (S(x) > 0) — residual or removed
-    interior — gets 2·S·(n_comp−1−S) + 2·P (heuristics/one_degree.py).
-    n_comp comes from x's own round, the isolated-residual analytic size,
-    or (removed vertices) the resolved root's size."""
-    n_by_root = dict(ns_by_root)
-    for v, n_comp in schedule.analytic_corrections:
-        n_by_root[int(v)] = float(n_comp)
-    S, P = prep.omega, prep.pair_credit
-    for x in np.nonzero(S > 0)[0]:
-        x = int(x)
-        if prep.removed[x]:
-            root, analytic_n = prep.resolve_root(x)
-            n_comp = analytic_n if analytic_n >= 0 else n_by_root.get(int(root))
-        else:
-            n_comp = n_by_root.get(x)
-        if n_comp is None:
-            raise RuntimeError(f"no component size recorded for vertex {x}")
-        bc[x] += leaf_correction(S[x], n_comp, P[x])
-
-
-@dataclasses.dataclass
-class BCResult:
-    bc: np.ndarray  # float64 [n]
-    schedule: Schedule
-    rounds_run: int
-    forward_columns: int  # explicit BFS columns actually traversed
-    backward_columns: int  # dependency columns (explicit + derived)
+# the single source of truth for --engine choices (launch/bc.py, benchmarks)
+ENGINE_KINDS = ("dense", "sparse", "pallas", "pallas_bf16")
 
 
 def make_round_fn(
@@ -77,8 +46,8 @@ def make_round_fn(
     """Build the jit-able per-round function.
 
     Args:
-      operator_fn:     closure () -> Operator (captures adjacency arrays).
-      n:               vertex count.
+      operator_fn:     closure () -> TraversalOperator (captures adjacency).
+      n:               vertex count (kept for signature stability).
       num_levels:      static level bound (dry-run) or None (early exit).
       fused_adjacency: when given, run the fused Pallas kernel path on
                        this dense adjacency instead of ``operator_fn``.
@@ -88,55 +57,34 @@ def make_round_fn(
       (sources i32 [s], derived i32 [k, 3], omega f32 [n])
         -> (bc_round f32 [n], ns f32 [s+k], roots i32 [s+k])
     """
+    del n  # the operator knows its own row count
 
     def round_fn(sources, derived, omega):
-        vertex_ids = jnp.arange(n, dtype=jnp.int32)[:, None]
-        src_onehot = (
-            (vertex_ids == sources[None, :]) & (sources[None, :] >= 0)
-        ).astype(jnp.float32)
-
         if fused_adjacency is not None:
-            fwd = engine.forward_counting_fused(
-                fused_adjacency, src_onehot, num_levels=num_levels, interpret=interpret
-            )
+            op = PallasDenseOperator(fused_adjacency, interpret=interpret)
         else:
             op = operator_fn()
-            fwd = engine.forward_counting(op, src_onehot, num_levels=num_levels)
-        sigma_c, depth_c = derive_two_degree_columns(fwd.sigma, fwd.depth, derived)
-        sigma_all = jnp.concatenate([fwd.sigma, sigma_c], axis=1)
-        depth_all = jnp.concatenate([fwd.depth, depth_c], axis=1)
-        max_depth = jnp.max(depth_all)
-
-        if fused_adjacency is not None:
-            delta = engine.backward_accumulation_fused(
-                fused_adjacency,
-                sigma_all,
-                depth_all,
-                omega,
-                max_depth,
-                num_levels=num_levels,
-                interpret=interpret,
-            )
-        else:
-            delta = engine.backward_accumulation(
-                op, sigma_all, depth_all, omega, max_depth, num_levels=num_levels
-            )
-
-        roots = jnp.concatenate([sources, derived[:, 0]])
-        omega_root = jnp.where(
-            roots >= 0, omega[jnp.clip(roots, 0, n - 1)], 0.0
-        )
-        mult = jnp.where(roots >= 0, omega_root + 1.0, 0.0)
-
-        root_onehot = vertex_ids == roots[None, :]
-        weighted = jnp.where(root_onehot, 0.0, delta * mult[None, :])
-        bc_round = weighted.sum(axis=1)
-
-        # per-column component size  n_s = Σ_{d ≥ 0} (1 + ω)   (paper §3.4.1)
-        ns = ((depth_all >= 0) * (1.0 + omega)[:, None]).sum(axis=0)
-        return bc_round, ns, roots
+        return traversal_round(op, sources, derived, omega, num_levels=num_levels)
 
     return round_fn
+
+
+def _make_operator_fn(graph_residual, n, engine_kind):
+    """Operator factory + fused-path config for an engine kind."""
+    if engine_kind == "dense":
+        adjacency = jnp.asarray(graph_residual.dense_adjacency(np.float32))
+        return (lambda: engine.make_dense_operator(adjacency)), None, None
+    if engine_kind == "sparse":
+        src_p, dst_p, _ = graph_residual.padded_arcs(multiple=8)
+        src_j, dst_j = jnp.asarray(src_p), jnp.asarray(dst_p)
+        return (lambda: engine.make_sparse_operator(src_j, dst_j, n)), None, None
+    if engine_kind in ("pallas", "pallas_bf16"):
+        from repro.kernels.ops import on_tpu
+
+        dt = np.float32 if engine_kind == "pallas" else jnp.bfloat16
+        fused = jnp.asarray(graph_residual.dense_adjacency(np.float32), dt)
+        return None, fused, (not on_tpu())
+    raise ValueError(f"unknown engine {engine_kind!r}")
 
 
 def betweenness_centrality(
@@ -146,6 +94,8 @@ def betweenness_centrality(
     engine_kind: str = "dense",
     num_levels: int | None = None,
     jit: bool = True,
+    ledger=None,
+    checkpoint=None,
 ) -> BCResult:
     """Exact BC of an undirected, unweighted graph (paper conventions:
     unnormalized, both traversal directions counted).
@@ -154,9 +104,15 @@ def betweenness_centrality(
       graph:       input graph.
       batch_size:  concurrent sources per round (multi-source width).
       heuristics:  "h0" | "h1" | "h2" | "h3" (paper Fig. 12 naming).
-      engine_kind: "dense" (n×n matmul path) or "sparse" (segment-sum).
+      engine_kind: "dense" (n×n matmul) | "sparse" (segment-sum) |
+                   "pallas" / "pallas_bf16" (fused level kernels).
       num_levels:  optional static level bound (compile-friendly); must be
                    ≥ graph diameter + 1 when given.
+      jit:         wrap the round function in jax.jit (disable to debug).
+      ledger:      optional RoundLedger — committed rounds are skipped
+                   (in-memory exactly-once, e.g. speculative re-execution).
+      checkpoint:  optional fault_tolerance.BCCheckpoint — durable
+                   kill-and-resume (launch/bc.py --ckpt-dir).
     """
     n = graph.n
     schedule, prep, residual, omega_i = build_schedule(
@@ -164,25 +120,9 @@ def betweenness_centrality(
     )
     omega = jnp.asarray(omega_i, jnp.float32)
 
-    fused_adjacency = None
-    interpret = None
-    if engine_kind == "dense":
-        adjacency = jnp.asarray(residual.dense_adjacency(np.float32))
-        operator_fn = lambda: engine.make_dense_operator(adjacency)
-    elif engine_kind == "sparse":
-        src_p, dst_p, _ = residual.padded_arcs(multiple=8)
-        src_j, dst_j = jnp.asarray(src_p), jnp.asarray(dst_p)
-        operator_fn = lambda: engine.make_sparse_operator(src_j, dst_j, n)
-    elif engine_kind in ("pallas", "pallas_bf16"):
-        dt = np.float32 if engine_kind == "pallas" else jnp.bfloat16
-        fused_adjacency = jnp.asarray(residual.dense_adjacency(np.float32), dt)
-        operator_fn = None
-        from repro.kernels.ops import on_tpu
-
-        interpret = not on_tpu()
-    else:
-        raise ValueError(f"unknown engine {engine_kind!r}")
-
+    operator_fn, fused_adjacency, interpret = _make_operator_fn(
+        residual, n, engine_kind
+    )
     round_fn = make_round_fn(
         operator_fn,
         n,
@@ -190,33 +130,15 @@ def betweenness_centrality(
         fused_adjacency=fused_adjacency,
         interpret=interpret,
     )
+
+    def block_fn(sources, derived):  # [1, s], [1, k, 3] -> block-dim outputs
+        bc_r, ns, roots = round_fn(sources[0], derived[0], omega)
+        return bc_r, ns[None], roots[None]
+
     if jit:
-        round_fn = jax.jit(round_fn)
+        block_fn = jax.jit(block_fn)
 
-    bc = np.zeros(n, dtype=np.float64)
-    ns_by_root: dict[int, float] = {}
-    fwd_cols = 0
-    bwd_cols = 0
-    for rnd in schedule.rounds:
-        bc_round, ns, roots = round_fn(
-            jnp.asarray(rnd.sources), jnp.asarray(rnd.derived), omega
-        )
-        bc += np.asarray(bc_round, dtype=np.float64)
-        roots_np = np.asarray(roots)
-        ns_np = np.asarray(ns, dtype=np.float64)
-        for r, nv in zip(roots_np, ns_np):
-            if r >= 0:
-                ns_by_root[int(r)] = float(nv)
-        fwd_cols += int((rnd.sources >= 0).sum())
-        bwd_cols += int((rnd.sources >= 0).sum() + (rnd.derived[:, 0] >= 0).sum())
-
-    if prep is not None:
-        apply_reduction_corrections(bc, prep, schedule, ns_by_root)
-
-    return BCResult(
-        bc=bc,
-        schedule=schedule,
-        rounds_run=len(schedule.rounds),
-        forward_columns=fwd_cols,
-        backward_columns=bwd_cols,
+    driver = BCDriver(
+        block_fn, schedule, n=n, prep=prep, ledger=ledger, checkpoint=checkpoint
     )
+    return driver.run()

@@ -7,44 +7,55 @@ grid of devices; see graphs/partition.py for the chunk layout):
       all_gather(frontier-σ chunk, axis=row)  →  F[cols_j]  on every
       device of grid column j — O(√p) partners.
   local compute (node level):
-      gather F[src_local] + segment_sum into dst_local — the TPU
-      replacement for the CUDA active-edge kernel.
+      * ``engine_kind="sparse"`` — gather F[src_local] + segment_sum
+        into dst_local (the TPU replacement for the CUDA active-edge
+        kernel);
+      * ``engine_kind="pallas"`` / ``"pallas_bf16"`` — the device's dense
+        adjacency block on the MXU via the fused frontier/dependency
+        SpMM kernels in partial mode (kernels/frontier_spmm.py) — the
+        fine-grained dense-block compute the 2-D decomposition is
+        designed to feed.
   fold (horizontal, Alg. 2 line 19):
       psum_scatter(partials, axis=col) — sums the C partial
       contributions and delivers each device exactly its owned chunk.
 
-The backward sweep is the mirror image with g = (1+δ+ω)/σ masked to
-depth lvl+1.  Unlike the paper (which exchanges d and σ between the two
-phases, §3.2), *all* state here stays owner-sharded and only
+The traversal itself — level loops, round algebra, host loop — is NOT
+implemented here: the shard_map body below constructs a
+:class:`repro.core.operators.DistributedOperator` (or its Pallas
+dense-block subclass) and runs the same
+:func:`repro.core.driver.traversal_round` /
+:class:`repro.core.driver.BCDriver` as the single-device path.
+
+With the sparse operator, *all* state stays owner-sharded and only
 frontier-σ / g ever travel — the depth test of the edge's far endpoint
-is folded into the gathered quantity.  This removes one exchange per
-round entirely (recorded as a beyond-paper optimization in
-EXPERIMENTS.md §Perf).
+is folded into the gathered quantity (one exchange per level; recorded
+as a beyond-paper optimization in EXPERIMENTS.md §Perf).  The Pallas
+dense-block operator exchanges (σ, d) forward and (σ, d, δ, ω) backward
+— the paper's §3.2 exchange set — in return for fusing the mask / g
+recompute into the MXU block matmul.
 
 Sub-clustering (paper §3.3): a leading mesh axis carries ``fr`` graph
 replicas, each processing different source rounds; BC is additive so the
-final merge is one psum (or a host-side sum over the replica dim, which
-is what we do to keep the round function replica-local).
+final merge sums the replica dim (host-side, in the shared driver, so a
+straggling/preempted replica's round can be re-issued — see
+distributed/fault_tolerance.py).
 """
 from __future__ import annotations
-
-import dataclasses
-import functools
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.bc import apply_reduction_corrections
-from repro.core.heuristics.two_degree import derive_two_degree_columns
+from repro.compat import shard_map
+from repro.core.driver import BCDriver, traversal_round
+from repro.core.operators import DistributedOperator, DistributedPallasOperator
 from repro.core.scheduler import Schedule, build_schedule
 from repro.graphs.graph import Graph
 from repro.graphs.partition import TwoDPartition, partition_2d
 
 __all__ = [
-    "DistributedBCPlan",
     "make_distributed_round_fn",
     "distributed_betweenness_centrality",
     "one_degree_reduce_distributed",
@@ -86,7 +97,7 @@ def one_degree_reduce_distributed(
         )
         return omega[:n], removed
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axes), P(axes)),
@@ -98,19 +109,6 @@ def one_degree_reduce_distributed(
         np.asarray(omega, np.int64),
         np.asarray(removed)[:m2],
     )
-
-
-@dataclasses.dataclass
-class DistributedBCPlan:
-    """Everything needed to run distributed rounds on a mesh."""
-
-    mesh: Mesh
-    partition: TwoDPartition
-    replica_axis: str | None
-    row_axis: str
-    col_axis: str
-    round_fn: object  # jitted round function
-    n_replicas: int
 
 
 def _grid_axes(mesh: Mesh, row_axis: str, col_axis: str, replica_axis: str | None):
@@ -129,10 +127,13 @@ def make_distributed_round_fn(
     replica_axis: str | None = None,
     num_levels: int | None = None,
     fuse_backward_payload: bool = True,
+    engine_kind: str = "sparse",
+    interpret: bool | None = None,
 ):
     """Build the sub-cluster-parallel, 2-D-distributed round function.
 
-    The returned jitted function maps
+    With ``engine_kind="sparse"`` (arc-list local compute) the returned
+    jitted function maps
       (src_local  i32 [R, C, max_arcs]   — sharded (row, col),
        dst_local  i32 [R, C, max_arcs]   — sharded (row, col),
        omega      f32 [n_pad]            — sharded ((col, row)),
@@ -142,150 +143,77 @@ def make_distributed_round_fn(
           ns  f32 [fr, s+k]    — sharded (replica),
           roots i32 [fr, s+k]  — sharded (replica))
 
+    With ``engine_kind="pallas"`` / ``"pallas_bf16"`` (dense-block MXU
+    local compute) the two arc arrays are replaced by one argument:
+      (blocks  f32/bf16 [R, C, C·chunk, R·chunk] — sharded (row, col),
+       omega, sources, derived)  ->  same outputs.
+    Build the blocks with :meth:`TwoDPartition.dense_blocks`.
+
     ``fuse_backward_payload`` keeps σ-frontier and g exchanges as a single
     gathered tensor each (the paper's overlap/fusion idea, §3.2 Fig. 2);
     setting it False splits the backward gather into two half-width
     collectives to mimic the paper's unfused σ/d exchange for the
-    Fig. 9 benchmark.
+    Fig. 9 benchmark (sparse engine only).
     """
     R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
     if (R, C) != (partition.R, partition.C):
         raise ValueError(
             f"mesh grid {(R, C)} != partition grid {(partition.R, partition.C)}"
         )
+    if engine_kind not in ("sparse", "pallas", "pallas_bf16"):
+        raise ValueError(f"unknown distributed engine {engine_kind!r}")
+    use_pallas = engine_kind != "sparse"
+    if use_pallas and not fuse_backward_payload:
+        raise ValueError("split backward payload is a sparse-engine benchmark mode")
+    if use_pallas and interpret is None:
+        from repro.kernels.ops import on_tpu
+
+        interpret = not on_tpu()
     chunk = partition.chunk
-    n_pad = partition.n_pad
-    grid_axes = (row_axis, col_axis)
 
-    def body(src_local, dst_local, omega, sources, derived):
-        # strip the sharded leading dims: local views
-        src_local = src_local[0, 0]  # [max_arcs]
-        dst_local = dst_local[0, 0]
-        sources = sources[0]  # [s]
-        derived = derived[0]  # [k, 3]
-        omega_o = omega  # [chunk] owned slice
-        s = sources.shape[0]
-
-        i = jax.lax.axis_index(row_axis)
-        j = jax.lax.axis_index(col_axis)
-        base = (j * R + i) * chunk  # first owned global vertex id
-        owned_ids = base + jnp.arange(chunk, dtype=jnp.int32)  # [chunk]
-
-        def spmv(x_owned):
-            """A @ x for the owned chunks: expand → local → fold."""
-            x_col = jax.lax.all_gather(x_owned, row_axis, tiled=True)  # [R*chunk, s]
-            msgs = x_col[src_local]  # [max_arcs, s]
-            partial = jax.ops.segment_sum(
-                msgs, dst_local, num_segments=C * chunk + 1
-            )[: C * chunk]
-            return jax.lax.psum_scatter(
-                partial, col_axis, scatter_dimension=0, tiled=True
-            )  # [chunk, s]
-
-        # ---------------------------------------------------- forward
-        src_onehot = (
-            (owned_ids[:, None] == sources[None, :]) & (sources[None, :] >= 0)
-        ).astype(jnp.float32)
-        sigma = src_onehot
-        depth = jnp.where(src_onehot > 0, 0, -1).astype(jnp.int32)
-
-        def fwd_level(lvl, sigma, depth):
-            frontier = sigma * (depth == lvl - 1)
-            t = spmv(frontier)
-            newly = (t > 0) & (depth < 0)
-            depth = jnp.where(newly, lvl, depth)
-            sigma = sigma + jnp.where(newly, t, 0.0)
-            alive = jax.lax.psum(newly.any().astype(jnp.int32), grid_axes) > 0
-            return sigma, depth, alive
-
-        if num_levels is None:
-
-            def cond(carry):
-                _, _, lvl, alive = carry
-                return alive & (lvl <= n_pad)
-
-            def fbody(carry):
-                sigma, depth, lvl, _ = carry
-                sigma, depth, alive = fwd_level(lvl, sigma, depth)
-                return sigma, depth, lvl + 1, alive
-
-            sigma, depth, _, _ = jax.lax.while_loop(
-                cond, fbody, (sigma, depth, jnp.int32(1), jnp.bool_(True))
-            )
-        else:
-
-            def fbody(k, carry):
-                sigma, depth = carry
-                sigma, depth, _ = fwd_level(k + 1, sigma, depth)
-                return sigma, depth
-
-            sigma, depth = jax.lax.fori_loop(0, num_levels, fbody, (sigma, depth))
-
-        # ------------------------------------- derived 2-degree columns
-        sigma_c, depth_c = derive_two_degree_columns(
-            sigma, depth, derived, row_ids=owned_ids
+    def round_body(op, omega, sources, derived):
+        bc_owned, ns, roots = traversal_round(
+            op, sources[0], derived[0], omega, num_levels=num_levels
         )
-        c_idx = derived[:, 0]
-        sigma_all = jnp.concatenate([sigma, sigma_c], axis=1)
-        depth_all = jnp.concatenate([depth, depth_c], axis=1)
-
-        # ---------------------------------------------------- backward
-        max_depth = jax.lax.pmax(jnp.max(depth_all), grid_axes)
-        omega_col = omega_o.astype(jnp.float32)[:, None]
-        delta0 = jnp.zeros_like(sigma_all)
-        safe_sigma = jnp.where(sigma_all > 0, sigma_all, 1.0)
-
-        def bwd_level(lvl, delta):
-            g = jnp.where(
-                depth_all == lvl + 1, (1.0 + delta + omega_col) / safe_sigma, 0.0
-            )
-            if fuse_backward_payload:
-                t = spmv(g)
-            else:  # paper-style split payload (benchmark mode)
-                half = g.shape[1] // 2
-                t = jnp.concatenate([spmv(g[:, :half]), spmv(g[:, half:])], axis=1)
-            return delta + jnp.where(depth_all == lvl, sigma_all * t, 0.0)
-
-        if num_levels is None:
-
-            def bcond(carry):
-                _, lvl = carry
-                return lvl >= 1
-
-            def bbody(carry):
-                delta, lvl = carry
-                return bwd_level(lvl, delta), lvl - 1
-
-            delta, _ = jax.lax.while_loop(bcond, bbody, (delta0, max_depth - 1))
-        else:
-
-            def bbody(k, delta):
-                return bwd_level(num_levels - 1 - k, delta)
-
-            delta = jax.lax.fori_loop(0, num_levels - 1, bbody, delta0)
-
-        # ------------------------------------------------- BC + n_s
-        roots = jnp.concatenate([sources, c_idx])
-        omega_root_local = jnp.where(
-            (roots[None, :] == owned_ids[:, None]), omega_col, 0.0
-        ).sum(axis=0)
-        omega_root = jax.lax.psum(omega_root_local, grid_axes)
-        mult = jnp.where(roots >= 0, omega_root + 1.0, 0.0)
-
-        root_onehot = owned_ids[:, None] == roots[None, :]
-        weighted = jnp.where(root_onehot, 0.0, delta * mult[None, :])
-        bc_owned = weighted.sum(axis=1)  # [chunk]
-
-        ns_local = ((depth_all >= 0) * (1.0 + omega_col)).sum(axis=0)
-        ns = jax.lax.psum(ns_local, grid_axes)  # [s+k]
-
         return bc_owned[None], ns[None], roots[None]
 
-    # sharding specs
+    if use_pallas:
+
+        def body(blocks, omega, sources, derived):
+            op = DistributedPallasOperator(
+                blocks[0, 0],  # [C*chunk, R*chunk] local dense block
+                chunk=chunk,
+                R=R,
+                C=C,
+                row_axis=row_axis,
+                col_axis=col_axis,
+                interpret=interpret,
+            )
+            return round_body(op, omega, sources, derived)
+
+        graph_specs = (P(row_axis, col_axis, None, None),)
+    else:
+
+        def body(src_local, dst_local, omega, sources, derived):
+            op = DistributedOperator(
+                src_local[0, 0],  # [max_arcs] local arc views
+                dst_local[0, 0],
+                chunk=chunk,
+                R=R,
+                C=C,
+                row_axis=row_axis,
+                col_axis=col_axis,
+                split_backward=not fuse_backward_payload,
+            )
+            return round_body(op, omega, sources, derived)
+
+        graph_specs = (
+            P(row_axis, col_axis, None),
+            P(row_axis, col_axis, None),
+        )
+
     rep = (replica_axis,) if replica_axis is not None else (None,)
-    in_specs = (
-        P(row_axis, col_axis, None),
-        P(row_axis, col_axis, None),
+    in_specs = graph_specs + (
         P((col_axis, row_axis)),
         P(*rep, None),
         P(*rep, None, None),
@@ -295,7 +223,7 @@ def make_distributed_round_fn(
         P(*rep, None),
         P(*rep, None),
     )
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
     return jax.jit(shmapped)
@@ -311,12 +239,18 @@ def distributed_betweenness_centrality(
     batch_size: int = 16,
     heuristics: str = "h0",
     num_levels: int | None = None,
+    engine_kind: str = "sparse",
+    ledger=None,
+    checkpoint=None,
 ) -> tuple[np.ndarray, Schedule]:
     """Run the full distributed BC computation on ``mesh``.
 
-    Rounds are dealt ``fr`` at a time (one per sub-cluster); the replica
-    sum happens host-side so a straggling/preempted replica's round can be
-    re-issued (fault tolerance path, see distributed/fault_tolerance.py).
+    Rounds are dealt ``fr`` at a time (one per sub-cluster) by the shared
+    :class:`repro.core.driver.BCDriver`; the replica merge sums the
+    replica dim after the loop so a straggling/preempted replica's round
+    can be re-issued (fault tolerance path, distributed/fault_tolerance.py).
+    ``engine_kind`` selects the block-local compute: "sparse" (arc list)
+    or "pallas"/"pallas_bf16" (fused dense-block kernels).
     """
     schedule, prep, residual, omega_i = build_schedule(
         graph, batch_size=batch_size, heuristics=heuristics
@@ -331,44 +265,32 @@ def distributed_betweenness_centrality(
         col_axis=col_axis,
         replica_axis=replica_axis,
         num_levels=num_levels,
+        engine_kind=engine_kind,
     )
 
-    n_pad = part.n_pad
-    omega_pad = np.zeros(n_pad, np.float32)
+    omega_pad = np.zeros(part.n_pad, np.float32)
     omega_pad[: graph.n] = omega_i
     # reorder omega into chunk-owner layout: flat position = chunk-id*chunk + off
     # chunk ids are contiguous in vertex order, so identity layout works.
     omega_dev = jnp.asarray(omega_pad)
 
-    s = schedule.batch_size
-    k = schedule.derived_per_round
-    bc = np.zeros(graph.n, np.float64)
-    ns_by_root: dict[int, float] = {}
+    if engine_kind == "sparse":
+        graph_args = (jnp.asarray(part.src_local), jnp.asarray(part.dst_local))
+    else:
+        dt = jnp.bfloat16 if engine_kind == "pallas_bf16" else jnp.float32
+        graph_args = (jnp.asarray(part.dense_blocks(np.float32), dt),)
 
-    rounds = list(schedule.rounds)
-    for start in range(0, len(rounds), fr):
-        block = rounds[start : start + fr]
-        srcs = np.full((fr, s), -1, np.int32)
-        ders = np.full((fr, k, 3), -1, np.int32)
-        for r, rnd in enumerate(block):
-            srcs[r] = rnd.sources
-            ders[r] = rnd.derived
-        bc_r, ns_r, roots_r = round_fn(
-            jnp.asarray(part.src_local),
-            jnp.asarray(part.dst_local),
-            omega_dev,
-            jnp.asarray(srcs),
-            jnp.asarray(ders),
-        )
-        bc += np.asarray(bc_r, np.float64).sum(axis=0)[: graph.n]
-        roots_np = np.asarray(roots_r)
-        ns_np = np.asarray(ns_r, np.float64)
-        for r in range(len(block)):
-            for root, nv in zip(roots_np[r], ns_np[r]):
-                if root >= 0:
-                    ns_by_root[int(root)] = float(nv)
+    def block_fn(sources, derived):
+        return round_fn(*graph_args, omega_dev, sources, derived)
 
-    if prep is not None:
-        apply_reduction_corrections(bc, prep, schedule, ns_by_root)
-
-    return bc, schedule
+    driver = BCDriver(
+        block_fn,
+        schedule,
+        n=graph.n,
+        prep=prep,
+        ledger=ledger,
+        checkpoint=checkpoint,
+        rounds_per_dispatch=fr,
+    )
+    result = driver.run()
+    return result.bc, schedule

@@ -1,0 +1,292 @@
+"""The driver layer: one round body and one host round loop for all
+engines (single-device dense/sparse/Pallas and 2-D distributed).
+
+:func:`traversal_round` is the per-round algebra — forward counting,
+2-degree column derivation, dependency accumulation, per-round BC and
+component-size (n_s) extraction — written once against the
+:class:`repro.core.operators.TraversalOperator` protocol.  Entry points
+wrap it in whatever jit/shard_map shell their operator needs.
+
+:class:`BCDriver` is the host loop shared by
+:func:`repro.core.bc.betweenness_centrality`,
+:func:`repro.core.distributed.distributed_betweenness_centrality`, the
+``repro.launch.bc`` CLI and the benchmarks:
+
+* rounds are dealt in *dispatch blocks* of ``rounds_per_dispatch``
+  (1 on a single device; the sub-cluster count ``fr`` on a mesh);
+* dispatch is asynchronous: up to ``max_inflight`` blocks are in flight
+  and ``device_get`` happens only at block boundaries, so host sync no
+  longer serializes rounds;
+* the BC accumulator lives on device and is *donated* through a jitted
+  add (no per-round host round-trip, no per-round buffer copy); it is
+  fetched exactly once, after the last round;
+* an optional :class:`repro.distributed.fault_tolerance.RoundLedger`
+  makes the loop restartable: committed rounds are re-dealt as inert
+  all-padding columns (BC accumulation is additive, padding contributes
+  exactly zero), which keeps every dispatch shape static.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.heuristics.one_degree import OneDegreeReduction, leaf_correction
+from repro.core.heuristics.two_degree import derive_two_degree_columns
+from repro.core.operators import TraversalOperator, as_operator
+from repro.core.scheduler import Schedule
+
+__all__ = [
+    "BCResult",
+    "BCDriver",
+    "traversal_round",
+    "apply_reduction_corrections",
+]
+
+
+def traversal_round(
+    operator: TraversalOperator,
+    sources: jnp.ndarray,  # i32 [s]; -1 = padding
+    derived: jnp.ndarray,  # i32 [k, 3] rows (c, a_pos, b_pos); -1 = padding
+    omega: jnp.ndarray,  # f32 [n_rows] 1-degree weights (operator's rows)
+    *,
+    num_levels: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One BC round against the operator protocol.
+
+    Returns
+      bc_local  f32 [n_rows] — this round's BC contribution to the
+                operator's rows (global BC = sum over rounds/devices),
+      ns        f32 [s+k]    — per-column component size n_s (§3.4.1),
+                already globally reduced,
+      roots     i32 [s+k]    — root vertex of every column (-1 padding).
+    """
+    op = as_operator(operator)
+    omega_f = omega.astype(jnp.float32)
+    row_ids = op.row_ids()
+
+    # ---------------------------------------------------------- forward
+    src_onehot = (
+        (row_ids[:, None] == sources[None, :]) & (sources[None, :] >= 0)
+    ).astype(jnp.float32)
+    fwd = engine.forward_counting(op, src_onehot, num_levels=num_levels)
+
+    # ------------------------------------------- derived 2-degree columns
+    sigma_c, depth_c = derive_two_degree_columns(
+        fwd.sigma, fwd.depth, derived, row_ids=row_ids
+    )
+    sigma_all = jnp.concatenate([fwd.sigma, sigma_c], axis=1)
+    depth_all = jnp.concatenate([fwd.depth, depth_c], axis=1)
+
+    # ---------------------------------------------------------- backward
+    max_depth = op.reduce_max(jnp.max(depth_all))
+    delta = engine.backward_accumulation(
+        op, sigma_all, depth_all, omega_f, max_depth, num_levels=num_levels
+    )
+
+    # --------------------------------------------------------- BC + n_s
+    roots = jnp.concatenate([sources, derived[:, 0]])
+    omega_root = op.root_omega(roots, omega_f)
+    mult = jnp.where(roots >= 0, omega_root + 1.0, 0.0)
+
+    root_onehot = row_ids[:, None] == roots[None, :]
+    weighted = jnp.where(root_onehot, 0.0, delta * mult[None, :])
+    bc_local = weighted.sum(axis=1)
+
+    # per-column component size  n_s = Σ_{d ≥ 0} (1 + ω)   (paper §3.4.1)
+    ns = op.reduce_sum(((depth_all >= 0) * (1.0 + omega_f)[:, None]).sum(axis=0))
+    return bc_local, ns, roots
+
+
+def apply_reduction_corrections(
+    bc: np.ndarray,
+    prep: OneDegreeReduction,
+    schedule,
+    ns_by_root: dict[int, float],
+) -> None:
+    """Add the analytic BC credits of the 1-degree/tree reduction.
+
+    Every vertex x with removed branches (S(x) > 0) — residual or removed
+    interior — gets 2·S·(n_comp−1−S) + 2·P (heuristics/one_degree.py).
+    n_comp comes from x's own round, the isolated-residual analytic size,
+    or (removed vertices) the resolved root's size."""
+    n_by_root = dict(ns_by_root)
+    for v, n_comp in schedule.analytic_corrections:
+        n_by_root[int(v)] = float(n_comp)
+    S, P = prep.omega, prep.pair_credit
+    for x in np.nonzero(S > 0)[0]:
+        x = int(x)
+        if prep.removed[x]:
+            root, analytic_n = prep.resolve_root(x)
+            n_comp = analytic_n if analytic_n >= 0 else n_by_root.get(int(root))
+        else:
+            n_comp = n_by_root.get(x)
+        if n_comp is None:
+            raise RuntimeError(f"no component size recorded for vertex {x}")
+        bc[x] += leaf_correction(S[x], n_comp, P[x])
+
+
+@dataclasses.dataclass
+class BCResult:
+    bc: np.ndarray  # float64 [n]
+    schedule: Schedule
+    rounds_run: int
+    forward_columns: int  # explicit BFS columns actually traversed
+    backward_columns: int  # dependency columns (explicit + derived)
+
+
+class BCDriver:
+    """Shared host round loop (see module docstring).
+
+    ``round_fn(sources i32 [fr, s], derived i32 [fr, k, 3])`` must return
+    device arrays ``(bc_block, ns [fr, s+k], roots [fr, s+k])`` where
+    ``bc_block`` has any stable shape whose leading dims sum away to the
+    per-vertex contribution ([n] on one device; [fr, n_pad] sharded on a
+    mesh).  All graph-constant operands (adjacency, ω, arc lists) are
+    expected to be partially applied into ``round_fn``.
+    """
+
+    def __init__(
+        self,
+        round_fn: Callable,
+        schedule: Schedule,
+        *,
+        n: int,
+        prep: OneDegreeReduction | None = None,
+        ledger=None,
+        checkpoint=None,
+        checkpoint_every: int = 8,
+        rounds_per_dispatch: int = 1,
+        max_inflight: int = 2,
+    ):
+        self.round_fn = round_fn
+        self.schedule = schedule
+        self.n = n
+        self.prep = prep
+        self.checkpoint = checkpoint
+        self.checkpoint_every = max(1, checkpoint_every)
+        self._bc0 = np.zeros(n, np.float64)
+        self._ns0: dict[int, float] = {}
+        self._fingerprint = None
+        if checkpoint is not None:
+            if ledger is not None:
+                raise ValueError("pass either a ledger or a checkpoint, not both")
+            from repro.distributed.fault_tolerance import (
+                RoundLedger,
+                schedule_fingerprint,
+            )
+
+            self._fingerprint = schedule_fingerprint(n, schedule)
+            bc0, ns0, committed = checkpoint.load(self._fingerprint)
+            if bc0 is not None:
+                self._bc0 = bc0[:n]
+                self._ns0 = ns0
+            ledger = RoundLedger.from_state(committed)
+        self.ledger = ledger
+        self.fr = max(1, rounds_per_dispatch)
+        self.max_inflight = max(1, max_inflight)
+        # donated device-side accumulate: bc never round-trips per round
+        self._accumulate = jax.jit(lambda acc, x: acc + x, donate_argnums=(0,))
+
+    def _blocks(self):
+        """Deal rounds into [fr]-sized dispatch blocks of host arrays.
+
+        Ledger-committed rounds are dealt as all-padding (-1) columns:
+        shapes stay static, contributions are exactly zero, and the
+        ledger keeps exactly-once semantics across restarts and
+        speculative re-execution (distributed/fault_tolerance.py).
+        """
+        s = self.schedule.batch_size
+        k = self.schedule.derived_per_round
+        rounds = self.schedule.rounds
+        for start in range(0, len(rounds), self.fr):
+            block = rounds[start : start + self.fr]
+            srcs = np.full((self.fr, s), -1, np.int32)
+            ders = np.full((self.fr, k, 3), -1, np.int32)
+            live = []
+            for r, rnd in enumerate(block):
+                rid = start + r
+                if self.ledger is not None and not self.ledger.try_commit(rid):
+                    continue  # already accumulated by a previous run
+                srcs[r] = rnd.sources
+                ders[r] = rnd.derived
+                live.append(rid)
+            if live:
+                yield srcs, ders, live
+
+    def _collect_bc(self, bc_acc) -> np.ndarray:
+        """Checkpoint-seed + device accumulator, in per-vertex f64 space."""
+        bc = self._bc0.copy()
+        if bc_acc is not None:
+            dev = np.asarray(jax.device_get(bc_acc), np.float64)
+            if dev.ndim > 1:  # sub-cluster replicas are additive (§3.3)
+                dev = dev.reshape(-1, dev.shape[-1]).sum(axis=0)
+            bc = bc + dev[: self.n]
+        return bc
+
+    def run(self) -> BCResult:
+        bc_acc = None
+        inflight: collections.deque = collections.deque()
+        ns_by_root: dict[int, float] = dict(self._ns0)
+        drained: list[int] = self.ledger.state() if self.checkpoint else []
+        rounds_run = 0
+        fwd_cols = 0
+        bwd_cols = 0
+        blocks_since_snapshot = 0
+
+        def drain_one():
+            ns_dev, roots_dev, rids = inflight.popleft()
+            roots_np = np.asarray(roots_dev)  # device_get: block boundary
+            ns_np = np.asarray(ns_dev, np.float64)
+            for r in range(roots_np.shape[0]):
+                for root, nv in zip(roots_np[r], ns_np[r]):
+                    if root >= 0:
+                        ns_by_root[int(root)] = float(nv)
+            drained.extend(rids)
+
+        def snapshot():
+            # drain everything first so (bc, ns, committed) is a
+            # consistent prefix — see fault_tolerance.BCCheckpoint.
+            while inflight:
+                drain_one()
+            self.checkpoint.save(
+                self._collect_bc(bc_acc), ns_by_root, drained, self._fingerprint
+            )
+
+        for srcs, ders, live in self._blocks():
+            bc_blk, ns, roots = self.round_fn(jnp.asarray(srcs), jnp.asarray(ders))
+            bc_acc = bc_blk if bc_acc is None else self._accumulate(bc_acc, bc_blk)
+            inflight.append((ns, roots, live))
+            rounds_run += len(live)
+            fwd_cols += int((srcs >= 0).sum())
+            bwd_cols += int((srcs >= 0).sum() + (ders[:, :, 0] >= 0).sum())
+            while len(inflight) > self.max_inflight:
+                drain_one()
+            blocks_since_snapshot += 1
+            if self.checkpoint is not None and (
+                blocks_since_snapshot >= self.checkpoint_every
+            ):
+                snapshot()
+                blocks_since_snapshot = 0
+        while inflight:
+            drain_one()
+        if self.checkpoint is not None:
+            snapshot()
+
+        bc = self._collect_bc(bc_acc)
+        if self.prep is not None:
+            apply_reduction_corrections(bc, self.prep, self.schedule, ns_by_root)
+
+        return BCResult(
+            bc=bc,
+            schedule=self.schedule,
+            rounds_run=rounds_run,
+            forward_columns=fwd_cols,
+            backward_columns=bwd_cols,
+        )

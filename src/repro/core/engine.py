@@ -1,4 +1,4 @@
-"""Single-device traversal engine: multi-source BFS + dependency sweep.
+"""The engine layer: the two level loops, written once.
 
 TPU-native formulation of the paper's node-level parallelism (§3.1):
 instead of queue-based frontiers with prefix-sum/binary-search data→thread
@@ -17,33 +17,41 @@ Both sweeps share the depth array ``d`` as the level structure: the paper's
 "reuse the forward prefix-sum offsets in the backward sweep" optimization is
 inherited structurally (there are no offsets to recompute).
 
-Two interchangeable operators provide ``A @ x``:
+:func:`forward_counting` and :func:`backward_accumulation` are the *only*
+loop implementations in the repository.  They are written against the
+:class:`repro.core.operators.TraversalOperator` protocol, so the same
+code drives:
 
-* dense  — ``[n, n]`` 0/1 matrix on the MXU (small graphs, Pallas kernel
-  target, and the per-block compute of the distributed engine);
-* sparse — padded symmetric arc list + gather/``segment_sum`` (the TPU
-  replacement for the paper's atomic scatter-adds).
+* dense / sparse single-device operators (XLA),
+* the fused Pallas dense-block operator (one kernel launch per level),
+* the 2-D distributed operators, sparse or Pallas-dense-block, inside a
+  ``shard_map`` body — liveness (``newly.any()``) and the max depth are
+  agreed on through the operator's collective reduction hooks.
 
 ω is the 1-degree reduction weight vector (zeros when the heuristic is
 off); the formulas above then reduce to plain Brandes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-Operator = Callable[[jnp.ndarray], jnp.ndarray]
+from repro.core.operators import (
+    DenseOperator,
+    SparseOperator,
+    TraversalOperator,
+    as_operator,
+)
+
+Operator = Callable[[jnp.ndarray], jnp.ndarray]  # legacy alias (bare A @ x)
 
 __all__ = [
     "make_dense_operator",
     "make_sparse_operator",
     "forward_counting",
     "backward_accumulation",
-    "forward_counting_fused",
-    "backward_accumulation_fused",
     "ForwardState",
 ]
 
@@ -54,71 +62,50 @@ class ForwardState(NamedTuple):
     max_depth: jnp.ndarray  # i32 [] deepest level discovered
 
 
-def make_dense_operator(adjacency: jnp.ndarray) -> Operator:
+def make_dense_operator(adjacency: jnp.ndarray) -> DenseOperator:
     """``A @ x`` with a dense [n, n] 0/1 adjacency (undirected ⇒ symmetric)."""
-
-    def apply(x: jnp.ndarray) -> jnp.ndarray:
-        return adjacency @ x
-
-    return apply
+    return DenseOperator(adjacency)
 
 
-def make_sparse_operator(src: jnp.ndarray, dst: jnp.ndarray, n: int) -> Operator:
-    """``A @ x`` via arc-list gather + segment-sum.
-
-    ``src``/``dst`` are the padded symmetric arc arrays; padding arcs use
-    the sentinel vertex ``n`` on both endpoints, which reads from / writes
-    to a discarded extra row. ``out[v] = Σ_{(u,v) arcs} x[u]``.
-    """
-
-    def apply(x: jnp.ndarray) -> jnp.ndarray:
-        x_pad = jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
-        msgs = x_pad[src]
-        out = jax.ops.segment_sum(msgs, dst, num_segments=n + 1)
-        return out[:n]
-
-    return apply
-
-
-def _forward_level(operator: Operator, lvl, sigma, depth):
-    frontier = sigma * (depth == lvl - 1)
-    contrib = operator(frontier)
-    newly = (contrib > 0) & (depth < 0)
-    depth = jnp.where(newly, lvl, depth)
-    sigma = sigma + jnp.where(newly, contrib, 0.0)
-    return sigma, depth, newly.any()
+def make_sparse_operator(src: jnp.ndarray, dst: jnp.ndarray, n: int) -> SparseOperator:
+    """``A @ x`` via arc-list gather + segment-sum (see SparseOperator)."""
+    return SparseOperator(src, dst, n)
 
 
 def forward_counting(
-    operator: Operator,
+    operator: TraversalOperator | Operator,
     src_onehot: jnp.ndarray,
     num_levels: int | None = None,
 ) -> ForwardState:
     """Multi-source shortest-path counting (Alg. 2 analogue).
 
     Args:
-      operator:   ``A @ x`` closure.
-      src_onehot: f32 [n, s]; column j is the indicator of source j
-                  (all-zeros columns are inert padding).
+      operator:   a TraversalOperator (or bare ``A @ x`` closure).
+      src_onehot: f32 [n_rows, s]; column j is the indicator of source j
+                  restricted to the operator's rows (all-zeros columns
+                  are inert padding).
       num_levels: None → ``lax.while_loop`` with early exit (real runs);
                   int  → ``lax.fori_loop`` with that static trip count
                   (dry-run / roofline path, so XLA records
                   ``known_trip_count``; extra levels are no-ops).
     """
-    n = src_onehot.shape[0]
+    op = as_operator(operator)
+    if op.n_rows < 0:
+        op.n_rows = src_onehot.shape[0]
     sigma0 = src_onehot.astype(jnp.float32)
     depth0 = jnp.where(src_onehot > 0, 0, -1).astype(jnp.int32)
 
     if num_levels is None:
+        cap = op.level_cap()
 
         def cond(carry):
             _, _, lvl, alive = carry
-            return alive & (lvl <= n)
+            return alive & (lvl <= cap)
 
         def body(carry):
             sigma, depth, lvl, _ = carry
-            sigma, depth, alive = _forward_level(operator, lvl, sigma, depth)
-            return sigma, depth, lvl + 1, alive
+            sigma, depth, local_alive = op.forward_level(lvl, sigma, depth)
+            return sigma, depth, lvl + 1, op.reduce_any(local_alive)
 
         sigma, depth, lvl, _ = jax.lax.while_loop(
             cond, body, (sigma0, depth0, jnp.int32(1), jnp.bool_(True))
@@ -128,24 +115,17 @@ def forward_counting(
 
         def fbody(k, carry):
             sigma, depth = carry
-            sigma, depth, _ = _forward_level(operator, k + 1, sigma, depth)
+            sigma, depth, _ = op.forward_level(k + 1, sigma, depth)
             return sigma, depth
 
         sigma, depth = jax.lax.fori_loop(0, num_levels, fbody, (sigma0, depth0))
-        max_depth = jnp.max(depth)
+        max_depth = op.reduce_max(jnp.max(depth))
 
     return ForwardState(sigma=sigma, depth=depth, max_depth=max_depth.astype(jnp.int32))
 
 
-def _backward_level(operator: Operator, lvl, sigma, depth, omega_col, delta):
-    safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
-    g = jnp.where(depth == lvl + 1, (1.0 + delta + omega_col) / safe_sigma, 0.0)
-    t = operator(g)
-    return delta + jnp.where(depth == lvl, sigma * t, 0.0)
-
-
 def backward_accumulation(
-    operator: Operator,
+    operator: TraversalOperator | Operator,
     sigma: jnp.ndarray,
     depth: jnp.ndarray,
     omega: jnp.ndarray,
@@ -154,13 +134,16 @@ def backward_accumulation(
 ) -> jnp.ndarray:
     """Dependency accumulation (Alg. 4/5 analogue, checking successors).
 
-    Returns δ f32 [n, s].  ``omega`` is f32 [n] (1-degree weights; zeros
-    disable the heuristic).  Levels run from ``max_depth - 1`` down to 1;
+    Returns δ f32 [n_rows, s].  ``omega`` is f32 [n_rows] (1-degree
+    weights; zeros disable the heuristic).  ``max_depth`` must already be
+    the *global* max (callers on a mesh reduce it with
+    ``op.reduce_max``).  Levels run from ``max_depth - 1`` down to 1;
     columns of different depths are handled by masking (this is what makes
     the 2-degree "Dynamic Merging of Frontiers" implicit — see
     heuristics/two_degree.py).
     """
-    omega_col = omega.astype(jnp.float32)[:, None]
+    op = as_operator(operator)
+    omega_f = omega.astype(jnp.float32)
     delta0 = jnp.zeros_like(sigma)
 
     if num_levels is None:
@@ -171,7 +154,7 @@ def backward_accumulation(
 
         def body(carry):
             delta, lvl = carry
-            delta = _backward_level(operator, lvl, sigma, depth, omega_col, delta)
+            delta = op.backward_level(lvl, sigma, depth, omega_f, delta)
             return delta, lvl - 1
 
         start = jnp.asarray(max_depth, jnp.int32) - 1
@@ -180,100 +163,7 @@ def backward_accumulation(
 
         def fbody(k, delta):
             lvl = num_levels - 1 - k  # static bound; masked no-ops when deep
-            return _backward_level(operator, lvl, sigma, depth, omega_col, delta)
-
-        delta = jax.lax.fori_loop(0, num_levels - 1, fbody, delta0)
-
-    return delta
-
-
-# --------------------------------------------------------------------------
-# Fused Pallas-kernel paths (kernels/frontier_spmm.py, dependency_spmm.py):
-# identical semantics, one kernel launch per level, no HBM-materialized
-# frontier/g intermediates.  Dense adjacency only.
-# --------------------------------------------------------------------------
-
-
-def forward_counting_fused(
-    adjacency: jnp.ndarray,
-    src_onehot: jnp.ndarray,
-    num_levels: int | None = None,
-    interpret: bool | None = None,
-) -> ForwardState:
-    """Kernel-fused forward counting (semantics == forward_counting)."""
-    from repro.kernels import ops as kops
-
-    sigma0 = src_onehot.astype(jnp.float32)
-    depth0 = jnp.where(src_onehot > 0, 0, -1).astype(jnp.int32)
-    n = src_onehot.shape[0]
-
-    def level(lvl, sigma, depth):
-        return kops.frontier_spmm(adjacency, sigma, depth, lvl, interpret=interpret)
-
-    if num_levels is None:
-
-        def cond(carry):
-            _, _, lvl, alive = carry
-            return alive & (lvl <= n)
-
-        def body(carry):
-            sigma, depth, lvl, _ = carry
-            sigma2, depth2 = level(lvl, sigma, depth)
-            alive = jnp.any(depth2 != depth)
-            return sigma2, depth2, lvl + 1, alive
-
-        sigma, depth, lvl, _ = jax.lax.while_loop(
-            cond, body, (sigma0, depth0, jnp.int32(1), jnp.bool_(True))
-        )
-        max_depth = lvl - 2
-    else:
-
-        def fbody(k, carry):
-            sigma, depth = carry
-            return level(k + 1, sigma, depth)
-
-        sigma, depth = jax.lax.fori_loop(0, num_levels, fbody, (sigma0, depth0))
-        max_depth = jnp.max(depth)
-
-    return ForwardState(sigma=sigma, depth=depth, max_depth=max_depth.astype(jnp.int32))
-
-
-def backward_accumulation_fused(
-    adjacency: jnp.ndarray,
-    sigma: jnp.ndarray,
-    depth: jnp.ndarray,
-    omega: jnp.ndarray,
-    max_depth: jnp.ndarray | int,
-    num_levels: int | None = None,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """Kernel-fused dependency accumulation (== backward_accumulation)."""
-    from repro.kernels import ops as kops
-
-    omega_f = omega.astype(jnp.float32)
-    delta0 = jnp.zeros_like(sigma)
-
-    def level(lvl, delta):
-        return kops.dependency_spmm(
-            adjacency, sigma, depth, delta, omega_f, lvl, interpret=interpret
-        )
-
-    if num_levels is None:
-
-        def cond(carry):
-            _, lvl = carry
-            return lvl >= 1
-
-        def body(carry):
-            delta, lvl = carry
-            return level(lvl, delta), lvl - 1
-
-        start = jnp.asarray(max_depth, jnp.int32) - 1
-        delta, _ = jax.lax.while_loop(cond, body, (delta0, start))
-    else:
-
-        def fbody(k, delta):
-            return level(num_levels - 1 - k, delta)
+            return op.backward_level(lvl, sigma, depth, omega_f, delta)
 
         delta = jax.lax.fori_loop(0, num_levels - 1, fbody, delta0)
 

@@ -1,0 +1,413 @@
+"""The operator layer of the traversal stack (paper §3.1–§3.2).
+
+One traversal algorithm — level-synchronous shortest-path counting plus
+dependency accumulation — runs everywhere in this codebase; what varies
+is *how a level is applied* and *how level-global facts are agreed on*.
+:class:`TraversalOperator` is that seam.  The engine layer
+(:mod:`repro.core.engine`) owns the level loops; the driver layer
+(:mod:`repro.core.driver`) owns the per-round algebra and the host round
+loop; operators own everything below a level:
+
+  apply(x)                 A @ x over the rows this operator holds
+  forward_level(...)       one forward BFS level (default: masked matmul
+                           via ``apply``; Pallas operators fuse it)
+  backward_level(...)      one dependency level (same contract)
+  reduce_any/max/sum       collective agreement on frontier liveness,
+                           max depth, and additive per-column facts
+                           (identity on a single device; psum/pmax on a
+                           2-D grid)
+  row_ids / level_cap      which global vertices the local rows are, and
+                           the worst-case level count
+  root_omega               look up ω at the round's root vertices
+
+Implementations:
+
+* :class:`DenseOperator`     — [n, n] 0/1 matmul on the MXU (§3.1).
+* :class:`SparseOperator`    — padded arc list + gather/segment-sum, the
+                               TPU stand-in for atomic scatter-add (§3.1).
+* :class:`PallasDenseOperator` — fused level kernels
+                               (kernels/frontier_spmm.py,
+                               kernels/dependency_spmm.py): one kernel
+                               launch per level, no HBM-materialized
+                               frontier/g intermediates.
+* :class:`DistributedOperator` — the paper's 2-D decomposition (§3.2):
+                               expand (all_gather over grid rows) →
+                               block-local compute → fold (psum_scatter
+                               over grid columns), with arc-list local
+                               compute.
+* :class:`DistributedPallasOperator` — same collective skeleton, but the
+                               block-local compute is the fused Pallas
+                               kernel applied to the device's dense
+                               adjacency block — the paper's coarse/fine
+                               hybrid (cf. Mishra et al.,
+                               arXiv:2008.05718) made reachable from the
+                               distributed path.
+
+``_forward_level`` / ``_backward_level`` below are the *only*
+implementations of the level recurrences in the repository; every
+non-fused operator routes through them.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "TraversalOperator",
+    "DenseOperator",
+    "SparseOperator",
+    "PallasDenseOperator",
+    "DistributedOperator",
+    "DistributedPallasOperator",
+    "as_operator",
+]
+
+
+def _forward_level(op: "TraversalOperator", lvl, sigma, depth):
+    """One forward BFS level (paper Alg. 2 analogue — the sole copy).
+
+        t = A @ (σ ⊙ [d = lvl-1]);  newly = (t > 0) ∧ (d < 0)
+        d := lvl on newly;          σ += t on newly
+    """
+    frontier = sigma * (depth == lvl - 1)
+    contrib = op.apply(frontier)
+    newly = (contrib > 0) & (depth < 0)
+    depth = jnp.where(newly, lvl, depth)
+    sigma = sigma + jnp.where(newly, contrib, 0.0)
+    return sigma, depth, newly.any()
+
+
+def _backward_level(op: "TraversalOperator", lvl, sigma, depth, omega, delta):
+    """One dependency level (paper Alg. 4/5 analogue — the sole copy).
+
+        g = (1 + δ + ω) / σ on d = lvl+1;  δ += σ ⊙ (A @ g) on d = lvl
+
+    Checking successors (Madduri et al.) — no predecessor lists.
+    """
+    omega_col = omega.astype(jnp.float32)[:, None]
+    safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+    g = jnp.where(depth == lvl + 1, (1.0 + delta + omega_col) / safe_sigma, 0.0)
+    t = op.apply_backward(g)
+    return delta + jnp.where(depth == lvl, sigma * t, 0.0)
+
+
+class TraversalOperator:
+    """Protocol base: single-device semantics, no collectives."""
+
+    # rows this operator holds (static python int)
+    n_rows: int
+
+    # ------------------------------------------------------------- core
+    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        """A @ x for the local rows."""
+        raise NotImplementedError
+
+    def apply_backward(self, g: jnp.ndarray) -> jnp.ndarray:
+        """A @ g in the dependency sweep (hook for payload-split modes)."""
+        return self.apply(g)
+
+    # ------------------------------------------------------ level steps
+    def forward_level(self, lvl, sigma, depth):
+        """(σ, d) -> (σ', d', local_alive) for one forward level."""
+        return _forward_level(self, lvl, sigma, depth)
+
+    def backward_level(self, lvl, sigma, depth, omega, delta):
+        """Running δ -> δ' for one dependency level (ω is f32 [n_rows])."""
+        return _backward_level(self, lvl, sigma, depth, omega, delta)
+
+    # ------------------------------------------- collective agreements
+    def reduce_any(self, alive: jnp.ndarray) -> jnp.ndarray:
+        """Global 'any column discovered a vertex this level'."""
+        return alive
+
+    def reduce_max(self, value: jnp.ndarray) -> jnp.ndarray:
+        """Global max (depth agreement before the backward sweep)."""
+        return value
+
+    def reduce_sum(self, value: jnp.ndarray) -> jnp.ndarray:
+        """Global sum of an additive per-column quantity (e.g. n_s)."""
+        return value
+
+    # ------------------------------------------------------- geometry
+    def row_ids(self) -> jnp.ndarray:
+        """Global vertex id of each local row (i32 [n_rows])."""
+        return jnp.arange(self.n_rows, dtype=jnp.int32)
+
+    def level_cap(self) -> int:
+        """Static upper bound on the number of BFS levels (global n)."""
+        return self.n_rows
+
+    def root_omega(self, roots: jnp.ndarray, omega: jnp.ndarray) -> jnp.ndarray:
+        """ω at the round's root vertices (f32 [num_roots]; 0 at padding)."""
+        safe = jnp.clip(roots, 0, omega.shape[0] - 1)
+        return jnp.where(roots >= 0, omega[safe].astype(jnp.float32), 0.0)
+
+
+class _CallableOperator(TraversalOperator):
+    """Adapter: a bare ``A @ x`` closure as a TraversalOperator."""
+
+    def __init__(self, fn: Callable[[jnp.ndarray], jnp.ndarray], n_rows: int | None = None):
+        self._fn = fn
+        self.n_rows = n_rows if n_rows is not None else -1
+
+    def apply(self, x):
+        return self._fn(x)
+
+    def row_ids(self):
+        if self.n_rows < 0:
+            raise ValueError("callable operator needs n_rows for row_ids()")
+        return super().row_ids()
+
+
+def as_operator(op) -> TraversalOperator:
+    """Accept a TraversalOperator or a bare ``A @ x`` callable."""
+    if isinstance(op, TraversalOperator):
+        return op
+    if callable(op):
+        return _CallableOperator(op)
+    raise TypeError(f"not an operator: {op!r}")
+
+
+class DenseOperator(TraversalOperator):
+    """``A @ x`` with a dense [n, n] 0/1 adjacency (undirected ⇒ symmetric)."""
+
+    def __init__(self, adjacency: jnp.ndarray):
+        self.adjacency = adjacency
+        self.n_rows = adjacency.shape[0]
+
+    def apply(self, x):
+        return self.adjacency.astype(jnp.float32) @ x
+
+
+class SparseOperator(TraversalOperator):
+    """``A @ x`` via arc-list gather + segment-sum.
+
+    ``src``/``dst`` are the padded symmetric arc arrays; padding arcs use
+    the sentinel vertex ``n`` on both endpoints, which reads from / writes
+    to a discarded extra row.  ``out[v] = Σ_{(u,v) arcs} x[u]``.
+    """
+
+    def __init__(self, src: jnp.ndarray, dst: jnp.ndarray, n: int):
+        self.src = src
+        self.dst = dst
+        self.n_rows = n
+
+    def apply(self, x):
+        n = self.n_rows
+        x_pad = jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
+        msgs = x_pad[self.src]
+        out = jax.ops.segment_sum(msgs, self.dst, num_segments=n + 1)
+        return out[:n]
+
+
+class PallasDenseOperator(TraversalOperator):
+    """Fused level kernels on a dense adjacency (single device).
+
+    Overrides the level steps — not ``apply`` — because the kernels fuse
+    the frontier mask / g computation and the state update into the
+    matmul (see kernels/frontier_spmm.py).  The adjacency may be bf16
+    (0/1 values are exact); the accumulator stays f32.
+    """
+
+    def __init__(self, adjacency: jnp.ndarray, interpret: bool | None = None):
+        self.adjacency = adjacency
+        self.n_rows = adjacency.shape[0]
+        self.interpret = interpret
+
+    def apply(self, x):  # reference semantics, used by parity tests
+        return self.adjacency.astype(jnp.float32) @ x
+
+    def forward_level(self, lvl, sigma, depth):
+        from repro.kernels import ops as kops
+
+        sigma2, depth2 = kops.frontier_spmm(
+            self.adjacency, sigma, depth, lvl, interpret=self.interpret
+        )
+        return sigma2, depth2, jnp.any(depth2 != depth)
+
+    def backward_level(self, lvl, sigma, depth, omega, delta):
+        from repro.kernels import ops as kops
+
+        return kops.dependency_spmm(
+            self.adjacency,
+            sigma,
+            depth,
+            delta,
+            omega.astype(jnp.float32),
+            lvl,
+            interpret=self.interpret,
+        )
+
+
+class DistributedOperator(TraversalOperator):
+    """2-D-decomposed operator (paper §3.2) — built *inside* a shard_map
+    body, where the mesh axis names are live.
+
+    Per application:
+      expand (vertical, Alg. 2 line 15):  all_gather over ``row_axis``
+          delivers the frontier slice of grid column j — O(√p) partners.
+      local compute (node level):         gather x_col[src_local] +
+          segment_sum into dst_local.
+      fold (horizontal, Alg. 2 line 19):  psum_scatter over ``col_axis``
+          sums the C partials and delivers each device its owned chunk.
+
+    Only frontier-σ / g ever travel; the depth test of the far endpoint
+    is folded into the gathered quantity (beyond-paper: one exchange per
+    level instead of the paper's σ+d pair).
+
+    ``split_backward`` mimics the paper's unfused σ/d exchange by
+    splitting the backward gather into two half-width collectives
+    (Fig. 9 benchmark mode).
+    """
+
+    def __init__(
+        self,
+        src_local: jnp.ndarray,  # i32 [max_arcs] — into the gathered column
+        dst_local: jnp.ndarray,  # i32 [max_arcs] — into the C*chunk partial
+        *,
+        chunk: int,
+        R: int,
+        C: int,
+        row_axis: str,
+        col_axis: str,
+        split_backward: bool = False,
+    ):
+        self.src_local = src_local
+        self.dst_local = dst_local
+        self.chunk = chunk
+        self.R = R
+        self.C = C
+        self.row_axis = row_axis
+        self.col_axis = col_axis
+        self.grid_axes = (row_axis, col_axis)
+        self.split_backward = split_backward
+        self.n_rows = chunk
+
+    # ---------------------------------------------- collective skeleton
+    def _expand(self, x_owned):
+        return jax.lax.all_gather(x_owned, self.row_axis, tiled=True)
+
+    def _fold(self, partial):
+        return jax.lax.psum_scatter(
+            partial, self.col_axis, scatter_dimension=0, tiled=True
+        )
+
+    def _local(self, x_col):
+        msgs = x_col[self.src_local]  # [max_arcs, s]
+        return jax.ops.segment_sum(
+            msgs, self.dst_local, num_segments=self.C * self.chunk + 1
+        )[: self.C * self.chunk]
+
+    def apply(self, x_owned):
+        return self._fold(self._local(self._expand(x_owned)))
+
+    def apply_backward(self, g):
+        if not self.split_backward:
+            return self.apply(g)
+        half = g.shape[1] // 2  # paper-style split payload (benchmark mode)
+        return jnp.concatenate([self.apply(g[:, :half]), self.apply(g[:, half:])], axis=1)
+
+    # ------------------------------------------- collective agreements
+    def reduce_any(self, alive):
+        return jax.lax.psum(alive.astype(jnp.int32), self.grid_axes) > 0
+
+    def reduce_max(self, value):
+        return jax.lax.pmax(value, self.grid_axes)
+
+    def reduce_sum(self, value):
+        return jax.lax.psum(value, self.grid_axes)
+
+    # ------------------------------------------------------- geometry
+    def row_ids(self):
+        i = jax.lax.axis_index(self.row_axis)
+        j = jax.lax.axis_index(self.col_axis)
+        base = (j * self.R + i) * self.chunk  # first owned global vertex id
+        return base + jnp.arange(self.chunk, dtype=jnp.int32)
+
+    def level_cap(self):
+        return self.chunk * self.R * self.C  # n_pad
+
+    def root_omega(self, roots, omega):
+        owned_ids = self.row_ids()
+        local = jnp.where(
+            roots[None, :] == owned_ids[:, None],
+            omega.astype(jnp.float32)[:, None],
+            0.0,
+        ).sum(axis=0)
+        return self.reduce_sum(local)
+
+
+class DistributedPallasOperator(DistributedOperator):
+    """2-D decomposition with fused-Pallas dense-block local compute.
+
+    The device's adjacency block A[rows_i, cols_j] (shape
+    [C·chunk, R·chunk]) is dense; block-local compute calls the
+    frontier/dependency SpMM kernels in *partial* mode — the operand
+    fusion (mask / g recompute in VMEM) is unchanged, the epilogue is
+    deferred past the fold because the state update needs the globally
+    summed ``t``.  Exchanges therefore carry (σ, d) forward and
+    (σ, d, δ, ω) backward — the paper's §3.2 exchange set — instead of
+    the pre-masked single tensor of the arc-list operator; the A-stream
+    moves to the MXU and may be bf16.
+    """
+
+    def __init__(
+        self,
+        adjacency_block: jnp.ndarray,  # [C*chunk, R*chunk] dense 0/1 block
+        *,
+        chunk: int,
+        R: int,
+        C: int,
+        row_axis: str,
+        col_axis: str,
+        interpret: bool | None = None,
+    ):
+        super().__init__(
+            src_local=None,
+            dst_local=None,
+            chunk=chunk,
+            R=R,
+            C=C,
+            row_axis=row_axis,
+            col_axis=col_axis,
+        )
+        self.adjacency_block = adjacency_block
+        self.interpret = interpret
+
+    def _local(self, x_col):
+        return self.adjacency_block.astype(jnp.float32) @ x_col
+
+    def forward_level(self, lvl, sigma, depth):
+        from repro.kernels import ops as kops
+
+        sigma_col = self._expand(sigma)  # [R*chunk, s]
+        depth_col = self._expand(depth)
+        partial = kops.frontier_spmm_partial(
+            self.adjacency_block, sigma_col, depth_col, lvl, interpret=self.interpret
+        )  # [C*chunk, s]
+        t = self._fold(partial)  # [chunk, s]
+        newly = (t > 0) & (depth < 0)
+        depth = jnp.where(newly, lvl, depth)
+        sigma = sigma + jnp.where(newly, t, 0.0)
+        return sigma, depth, newly.any()
+
+    def backward_level(self, lvl, sigma, depth, omega, delta):
+        from repro.kernels import ops as kops
+
+        sigma_col = self._expand(sigma)
+        depth_col = self._expand(depth)
+        delta_col = self._expand(delta)
+        omega_col = self._expand(omega.astype(jnp.float32))
+        partial = kops.dependency_spmm_partial(
+            self.adjacency_block,
+            sigma_col,
+            depth_col,
+            delta_col,
+            omega_col,
+            lvl,
+            interpret=self.interpret,
+        )
+        t = self._fold(partial)
+        return delta + jnp.where(depth == lvl, sigma * t, 0.0)

@@ -22,9 +22,17 @@ operator intervention.  The moving parts:
 from __future__ import annotations
 
 import dataclasses
+import os
 import statistics
 
-__all__ = ["MeshPlan", "plan_elastic_remesh", "StragglerPolicy", "RoundLedger"]
+__all__ = [
+    "MeshPlan",
+    "plan_elastic_remesh",
+    "StragglerPolicy",
+    "RoundLedger",
+    "BCCheckpoint",
+    "schedule_fingerprint",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,7 +115,17 @@ class StragglerPolicy:
 
 
 class RoundLedger:
-    """Exactly-once commit of additive work units (BC rounds / steps)."""
+    """Exactly-once commit of additive work units (BC rounds / steps).
+
+    The shared round loop (:class:`repro.core.driver.BCDriver`) consumes
+    a ledger directly: committed rounds are re-dealt as inert padding
+    columns, so a speculatively duplicated round is accumulated exactly
+    once.  The ledger is deliberately *in-memory only* — a round is
+    marked committed at dispatch, before its contribution is anywhere
+    durable, so persisting the ledger alone would drop work on a crash.
+    Durable kill-and-resume is :class:`BCCheckpoint`, which snapshots
+    the committed set together with the matching partial BC sums.
+    """
 
     def __init__(self):
         self._committed: set[int] = set()
@@ -130,3 +148,91 @@ class RoundLedger:
         led = cls()
         led._committed = set(committed)
         return led
+
+
+class BCCheckpoint:
+    """Durable (partial BC, n_s bookkeeping, committed rounds) triple.
+
+    A ledger alone is not enough to resume BC: the committed rounds'
+    *contributions* live in the (volatile) device accumulator.  The
+    shared round loop (:class:`repro.core.driver.BCDriver`) therefore
+    periodically snapshots a consistent prefix — the drained rounds'
+    summed BC, their per-root component sizes, and exactly that round
+    set — through this object; a restarted run seeds the driver from the
+    snapshot and re-deals only the uncommitted rounds.  Consistency
+    invariant: the stored bc/ns always correspond exactly to the stored
+    committed set (snapshots happen only after the in-flight queue is
+    fully drained), so a crash between snapshots merely redoes the tail.
+    The stored bc is correction-free (the 1-degree analytic credits are
+    pure post-processing and are re-applied on every finalize).
+
+    Round ids are only meaningful relative to one schedule, so every
+    snapshot carries a schedule fingerprint (see
+    :func:`schedule_fingerprint`); resuming against a different schedule
+    — other graph, batch size or heuristics — raises instead of silently
+    mixing incompatible partial sums.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path)
+
+    def load(self, expected_fingerprint: str | None = None):
+        """Returns (bc f64 [n] | None, ns_by_root dict, committed list).
+
+        Raises ValueError when the snapshot was written for a different
+        schedule than ``expected_fingerprint``.
+        """
+        if not self.exists():
+            return None, {}, []
+        import numpy as np
+
+        with np.load(self.path) as z:
+            stored = str(z["fingerprint"])
+            if expected_fingerprint is not None and stored != expected_fingerprint:
+                raise ValueError(
+                    f"checkpoint {self.path} was written for a different "
+                    f"schedule (stored {stored}, expected "
+                    f"{expected_fingerprint}) — same graph, batch size and "
+                    f"heuristics are required to resume"
+                )
+            bc = z["bc"].astype(np.float64)
+            ns_by_root = {
+                int(r): float(v) for r, v in zip(z["ns_roots"], z["ns_vals"])
+            }
+            committed = [int(r) for r in z["committed"]]
+        return bc, ns_by_root, committed
+
+    def save(
+        self, bc, ns_by_root: dict, committed: list[int], fingerprint: str
+    ) -> None:
+        import numpy as np
+
+        roots = np.asarray(sorted(ns_by_root), np.int64)
+        vals = np.asarray([ns_by_root[int(r)] for r in roots], np.float64)
+        tmp = f"{self.path}.tmp.npz"
+        np.savez(
+            tmp,
+            bc=np.asarray(bc, np.float64),
+            ns_roots=roots,
+            ns_vals=vals,
+            committed=np.asarray(sorted(committed), np.int64),
+            fingerprint=np.asarray(fingerprint),
+        )
+        os.replace(tmp, self.path)
+
+
+def schedule_fingerprint(n: int, schedule) -> str:
+    """Content hash tying a checkpoint to one (graph, schedule) pair."""
+    import zlib
+
+    crc = 0
+    for rnd in schedule.rounds:
+        crc = zlib.crc32(rnd.sources.tobytes(), crc)
+        crc = zlib.crc32(rnd.derived.tobytes(), crc)
+    return (
+        f"n{n}_b{schedule.batch_size}_k{schedule.derived_per_round}_"
+        f"r{len(schedule.rounds)}_{crc:08x}"
+    )

@@ -74,6 +74,26 @@ class TwoDPartition:
         j = chunks // self.R
         return (i * self.C + j).astype(np.int32)
 
+    def dense_blocks(self, dtype=np.float32) -> np.ndarray:
+        """Dense per-device adjacency blocks [R, C, C·chunk, R·chunk].
+
+        Block (i, j) is A[rows_i, cols_j] in the local index spaces the
+        collectives use: rows index the [C·chunk] fold partial, columns
+        index the [R·chunk] row-gathered frontier.  This feeds the fused
+        Pallas dense-block engine (operators.DistributedPallasOperator);
+        memory is (n_pad²/p)·dtype per device, so it is the dense-regime
+        counterpart of the arc-list layout, not a replacement.
+        """
+        sentinel = self.C * self.chunk
+        blocks = np.zeros(
+            (self.R, self.C, self.C * self.chunk, self.R * self.chunk), dtype
+        )
+        for i in range(self.R):
+            for j in range(self.C):
+                valid = self.dst_local[i, j] != sentinel
+                blocks[i, j, self.dst_local[i, j, valid], self.src_local[i, j, valid]] = 1
+        return blocks
+
 
 def partition_2d(
     graph: Graph,

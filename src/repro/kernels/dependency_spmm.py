@@ -24,7 +24,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dependency_spmm_kernel", "dependency_spmm_pallas"]
+__all__ = [
+    "dependency_spmm_kernel",
+    "dependency_spmm_pallas",
+    "dependency_partial_kernel",
+    "dependency_partial_pallas",
+]
 
 
 def dependency_spmm_kernel(
@@ -114,3 +119,91 @@ def dependency_spmm_pallas(
         scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
         interpret=interpret,
     )(lvl_arr, adjacency, sigma, depth, delta, omega_col, sigma, depth, delta)
+
+
+# --------------------------------------------------------------------------
+# Partial (pre-fold) variant for the 2-D distributed engine: rectangular
+# adjacency block, gathered (σ, d, δ, ω) operands along the contraction
+# dim, raw output t = A_block @ g with the g recompute fused in VMEM.
+# The δ-update epilogue is deferred past the psum_scatter fold (see
+# operators.DistributedPallasOperator and frontier_spmm.py).
+# --------------------------------------------------------------------------
+
+
+def dependency_partial_kernel(
+    lvl_ref,  # (1,1) i32
+    a_ref,  # [bm, bk] adjacency-block tile
+    sigma_k_ref,  # [bk, bs]
+    depth_k_ref,  # [bk, bs]
+    delta_k_ref,  # [bk, bs]
+    omega_k_ref,  # [bk, 1]
+    t_out_ref,  # [bm, bs]
+    acc_ref,  # VMEM [bm, bs] f32
+    *,
+    k_steps: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lvl = lvl_ref[0, 0]
+    sigma_k = sigma_k_ref[...]
+    safe_sigma = jnp.where(sigma_k > 0, sigma_k, 1.0)
+    g = jnp.where(
+        depth_k_ref[...] == lvl + 1,
+        (1.0 + delta_k_ref[...] + omega_k_ref[...]) / safe_sigma,
+        0.0,
+    )
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32), g, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        t_out_ref[...] = acc_ref[...]
+
+
+def dependency_partial_pallas(
+    adjacency: jnp.ndarray,  # [m, kdim]
+    sigma: jnp.ndarray,  # [kdim, s]
+    depth: jnp.ndarray,  # [kdim, s]
+    delta: jnp.ndarray,  # [kdim, s]
+    omega: jnp.ndarray,  # [kdim]
+    lvl: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bs: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call; block-aligned shapes required (see ops.py)."""
+    m, kdim = adjacency.shape
+    _, s = sigma.shape
+    assert m % bm == 0 and kdim % bk == 0 and s % bs == 0, (m, kdim, s, bm, bk, bs)
+    k_steps = kdim // bk
+    grid = (m // bm, s // bs, k_steps)
+
+    lvl_arr = jnp.asarray(lvl, jnp.int32).reshape(1, 1)
+    omega_col = omega.astype(jnp.float32).reshape(kdim, 1)
+    kernel = functools.partial(dependency_partial_kernel, k_steps=k_steps)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # lvl
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # A block tile
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # σ (contraction)
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # d (contraction)
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # δ (contraction)
+            pl.BlockSpec((bk, 1), lambda i, j, k: (k, 0)),  # ω
+        ],
+        out_specs=pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, s), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
+        interpret=interpret,
+    )(lvl_arr, adjacency, sigma, depth, delta, omega_col)

@@ -28,7 +28,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["frontier_spmm_kernel", "frontier_spmm_pallas"]
+__all__ = [
+    "frontier_spmm_kernel",
+    "frontier_spmm_pallas",
+    "frontier_partial_kernel",
+    "frontier_partial_pallas",
+]
 
 
 def frontier_spmm_kernel(
@@ -120,3 +125,81 @@ def _vmem_scratch(bm: int, bs: int):
     from jax.experimental.pallas import tpu as pltpu
 
     return pltpu.VMEM((bm, bs), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Partial (pre-fold) variant for the 2-D distributed engine: the adjacency
+# is one device's rectangular block A[rows_i, cols_j], the (σ, d) operands
+# are the row-gathered column slice, and the output is the *raw* masked
+# product t = A_block @ (σ ⊙ [d = lvl-1]).  The state-update epilogue is
+# deferred: it needs the psum_scatter-folded t, so it runs in jnp on the
+# owned chunk (see operators.DistributedPallasOperator).  The operand
+# fusion — recomputing the frontier tile from (σ, d) in VMEM instead of
+# materializing it in HBM — is identical to the square kernel above.
+# --------------------------------------------------------------------------
+
+
+def frontier_partial_kernel(
+    lvl_ref,  # (1,1) i32
+    a_ref,  # [bm, bk] adjacency-block tile
+    sigma_k_ref,  # [bk, bs] gathered σ tile (contraction dim)
+    depth_k_ref,  # [bk, bs] gathered d tile (contraction dim)
+    t_out_ref,  # [bm, bs] partial product
+    acc_ref,  # VMEM scratch [bm, bs] f32
+    *,
+    k_steps: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lvl = lvl_ref[0, 0]
+    frontier = sigma_k_ref[...] * (depth_k_ref[...] == lvl - 1).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        frontier,
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        t_out_ref[...] = acc_ref[...]
+
+
+def frontier_partial_pallas(
+    adjacency: jnp.ndarray,  # [m, kdim] rectangular block
+    sigma: jnp.ndarray,  # [kdim, s]
+    depth: jnp.ndarray,  # [kdim, s]
+    lvl: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bs: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call; block-aligned shapes required (see ops.py)."""
+    m, kdim = adjacency.shape
+    _, s = sigma.shape
+    assert m % bm == 0 and kdim % bk == 0 and s % bs == 0, (m, kdim, s, bm, bk, bs)
+    k_steps = kdim // bk
+    grid = (m // bm, s // bs, k_steps)
+
+    lvl_arr = jnp.asarray(lvl, jnp.int32).reshape(1, 1)
+    kernel = functools.partial(frontier_partial_kernel, k_steps=k_steps)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # lvl
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # A block tile
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # σ (contraction)
+            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # d (contraction)
+        ],
+        out_specs=pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, s), jnp.float32),
+        scratch_shapes=[_vmem_scratch(bm, bs)],
+        interpret=interpret,
+    )(lvl_arr, adjacency, sigma, depth)

@@ -18,11 +18,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.dependency_spmm import dependency_spmm_pallas
-from repro.kernels.frontier_spmm import frontier_spmm_pallas
+from repro.kernels.dependency_spmm import (
+    dependency_partial_pallas,
+    dependency_spmm_pallas,
+)
+from repro.kernels.frontier_spmm import frontier_partial_pallas, frontier_spmm_pallas
 from repro.kernels.segment_bag import segment_bag_pallas
 
-__all__ = ["frontier_spmm", "dependency_spmm", "segment_bag", "on_tpu"]
+__all__ = [
+    "frontier_spmm",
+    "dependency_spmm",
+    "frontier_spmm_partial",
+    "dependency_spmm_partial",
+    "segment_bag",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -119,6 +129,84 @@ def _gcd(a: int, b: int) -> int:
     while b:
         a, b = b, a % b
     return a
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bm", "bk", "bs"))
+def frontier_spmm_partial(
+    adjacency,
+    sigma,
+    depth,
+    lvl,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    bm: int = 128,
+    bk: int = 128,
+    bs: int = 128,
+):
+    """Pre-fold forward partial on a rectangular adjacency block.
+
+    ``adjacency`` is [m, k] (one device's A[rows_i, cols_j]); ``sigma``
+    and ``depth`` are the row-gathered [k, s] operands.  Returns the raw
+    t = A_block @ (σ ⊙ [d = lvl-1]) f32 [m, s] — callers fold the C
+    partials with psum_scatter and apply the state update afterwards.
+    See kernels/frontier_spmm.py (partial variant).
+    """
+    if not use_pallas:
+        return ref.frontier_partial_ref(adjacency, sigma, depth, lvl)
+    if interpret is None:
+        interpret = not on_tpu()
+    m, kdim = adjacency.shape
+    _, s = sigma.shape
+    bm = _pick_block(m, bm, 8)
+    bk = _pick_block(kdim, bk, 8)
+    bs = _pick_block(s, bs, 128)
+    a = _pad_to(_pad_to(adjacency, 0, bm), 1, bk)
+    sg = _pad_to(_pad_to(sigma, 0, bk), 1, bs)
+    dp = _pad_to(_pad_to(depth, 0, bk, fill=-1), 1, bs, fill=-1)
+    t = frontier_partial_pallas(a, sg, dp, lvl, bm=bm, bk=bk, bs=bs, interpret=interpret)
+    return t[:m, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bm", "bk", "bs"))
+def dependency_spmm_partial(
+    adjacency,
+    sigma,
+    depth,
+    delta,
+    omega,
+    lvl,
+    *,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    bm: int = 128,
+    bk: int = 128,
+    bs: int = 128,
+):
+    """Pre-fold backward partial on a rectangular adjacency block.
+
+    Operands are the row-gathered [k, s] (σ, d, δ) and [k] ω; the g
+    recompute is fused into the block matmul.  Returns t = A_block @ g
+    f32 [m, s].  See kernels/dependency_spmm.py (partial variant).
+    """
+    if not use_pallas:
+        return ref.dependency_partial_ref(adjacency, sigma, depth, delta, omega, lvl)
+    if interpret is None:
+        interpret = not on_tpu()
+    m, kdim = adjacency.shape
+    _, s = sigma.shape
+    bm = _pick_block(m, bm, 8)
+    bk = _pick_block(kdim, bk, 8)
+    bs = _pick_block(s, bs, 128)
+    a = _pad_to(_pad_to(adjacency, 0, bm), 1, bk)
+    sg = _pad_to(_pad_to(sigma, 0, bk), 1, bs)
+    dp = _pad_to(_pad_to(depth, 0, bk, fill=-1), 1, bs, fill=-1)
+    dl = _pad_to(_pad_to(delta, 0, bk), 1, bs)
+    om = _pad_to(omega, 0, bk)
+    t = dependency_partial_pallas(
+        a, sg, dp, dl, om, lvl, bm=bm, bk=bk, bs=bs, interpret=interpret
+    )
+    return t[:m, :s]
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bd"))

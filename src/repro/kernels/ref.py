@@ -7,7 +7,13 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["frontier_spmm_ref", "dependency_spmm_ref", "segment_bag_ref"]
+__all__ = [
+    "frontier_spmm_ref",
+    "dependency_spmm_ref",
+    "frontier_partial_ref",
+    "dependency_partial_ref",
+    "segment_bag_ref",
+]
 
 
 def frontier_spmm_ref(adjacency, sigma, depth, lvl):
@@ -48,6 +54,42 @@ def dependency_spmm_ref(adjacency, sigma, depth, delta, omega, lvl):
     )
     t = adjacency.astype(jnp.float32) @ g
     return delta + jnp.where(depth == lvl, sigma * t, 0.0)
+
+
+def frontier_partial_ref(adjacency, sigma, depth, lvl):
+    """Pre-fold forward partial for a rectangular adjacency block.
+
+    Args:
+      adjacency: [m, k] 0/1 block (any float dtype).
+      sigma:     f32 [k, s] gathered path counts (contraction side).
+      depth:     i32 [k, s] gathered discovery levels.
+      lvl:       i32 scalar.
+
+    Returns t f32 [m, s] = A_block @ (σ ⊙ [d = lvl-1]); the state update
+    happens after the cross-device fold (operators.DistributedPallasOperator).
+    """
+    frontier = sigma * (depth == lvl - 1)
+    return adjacency.astype(jnp.float32) @ frontier
+
+
+def dependency_partial_ref(adjacency, sigma, depth, delta, omega, lvl):
+    """Pre-fold backward partial for a rectangular adjacency block.
+
+    Args:
+      adjacency: [m, k] 0/1 block.
+      sigma:     f32 [k, s] (contraction side).
+      depth:     i32 [k, s].
+      delta:     f32 [k, s].
+      omega:     f32 [k].
+      lvl:       i32 scalar.
+
+    Returns t f32 [m, s] = A_block @ g with g = (1+δ+ω)/σ on d = lvl+1.
+    """
+    safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+    g = jnp.where(
+        depth == lvl + 1, (1.0 + delta + omega[:, None]) / safe_sigma, 0.0
+    )
+    return adjacency.astype(jnp.float32) @ g
 
 
 def segment_bag_ref(table, indices, weights=None):

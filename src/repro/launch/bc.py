@@ -3,26 +3,28 @@
     PYTHONPATH=src python -m repro.launch.bc --rmat-scale 10 --edge-factor 8 \
         --heuristics h3 --batch-size 32
     PYTHONPATH=src python -m repro.launch.bc --grid 40x40 --heuristics h1 \
-        --mesh 2x4 --ckpt-dir /tmp/bc_ckpt
+        --mesh 2x4 --engine pallas --ckpt-dir /tmp/bc_ckpt
 
-Supports single-device and distributed (``--mesh RxC``) execution,
-round-level checkpointing via the RoundLedger (a killed job resumes
-at the first uncommitted round), and TEPS reporting (paper Eq. 7).
+Supports single-device and distributed (``--mesh RxC``) execution; every
+engine of the unified traversal stack is selectable with ``--engine``
+(single-device: dense | sparse | pallas | pallas_bf16; distributed:
+sparse arc-list or the Pallas dense-block engines).  ``--ckpt-dir``
+snapshots (partial BC, n_s, committed rounds) through a BCCheckpoint —
+a killed job resumes at the first uncommitted round — and TEPS is
+reported per paper Eq. 7.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import numpy as np
 
-import jax
-
 from repro.core import betweenness_centrality
+from repro.core.bc import ENGINE_KINDS
 from repro.core.distributed import distributed_betweenness_centrality
-from repro.distributed.fault_tolerance import RoundLedger
+from repro.distributed.fault_tolerance import BCCheckpoint
 from repro.graphs import grid_graph, rmat_graph, road_like_graph
 
 
@@ -34,8 +36,9 @@ def main() -> None:
     ap.add_argument("--road", default=None, help="RxC road-like graph")
     ap.add_argument("--heuristics", default="h0", choices=["h0", "h1", "h2", "h3"])
     ap.add_argument("--batch-size", type=int, default=32)
-    ap.add_argument("--engine", default="dense", choices=["dense", "sparse", "pallas"])
+    ap.add_argument("--engine", default="dense", choices=list(ENGINE_KINDS))
     ap.add_argument("--mesh", default=None, help="distributed RxC device mesh")
+    ap.add_argument("--ckpt-dir", default=None, help="round-ledger resume dir")
     ap.add_argument("--out", default=None)
     ap.add_argument("--top", type=int, default=10)
     args = ap.parse_args()
@@ -54,19 +57,34 @@ def main() -> None:
     else:
         raise SystemExit("pick --rmat-scale, --grid or --road")
 
-    print(f"{name}: n={graph.n} m={graph.num_edges} heuristics={args.heuristics}")
+    checkpoint = None
+    if args.ckpt_dir:
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        checkpoint = BCCheckpoint(os.path.join(args.ckpt_dir, f"{name}.npz"))
+        if checkpoint.exists():
+            _, _, committed = checkpoint.load()
+            print(f"resuming: {len(committed)} rounds already committed")
+
+    print(
+        f"{name}: n={graph.n} m={graph.num_edges} "
+        f"heuristics={args.heuristics} engine={args.engine}"
+    )
     t0 = time.time()
     if args.mesh:
         r, c = map(int, args.mesh.split("x"))
-        mesh = jax.make_mesh(
-            (r, c), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((r, c), ("data", "model"))
+        # the distributed engine's arc-list local compute is the sparse
+        # path; dense-block MXU compute is the pallas pair.
+        engine_kind = "sparse" if args.engine in ("dense", "sparse") else args.engine
         bc, schedule = distributed_betweenness_centrality(
             graph,
             mesh,
             batch_size=args.batch_size,
             heuristics=args.heuristics,
+            engine_kind=engine_kind,
+            checkpoint=checkpoint,
         )
         rounds = len(schedule.rounds)
     else:
@@ -75,6 +93,7 @@ def main() -> None:
             batch_size=args.batch_size,
             heuristics=args.heuristics,
             engine_kind=args.engine,
+            checkpoint=checkpoint,
         )
         bc, rounds = res.bc, res.rounds_run
     dt = time.time() - t0

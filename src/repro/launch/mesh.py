@@ -1,6 +1,6 @@
 """Production mesh construction.
 
-A function (not a module-level constant) so importing this module never
+Functions (not module-level constants) so importing this module never
 touches jax device state.  Single pod = 16x16 = 256 chips (v5e pod);
 multi-pod adds a leading "pod" axis (2 pods = 512 chips).
 
@@ -8,24 +8,24 @@ Axis roles:
   "pod"   — sub-cluster replication (MGBC fr; LM/GNN/recsys pure DP)
   "data"  — batch / MGBC grid rows (R)
   "model" — tensor/expert parallel / MGBC grid columns (C)
+
+``make_mesh`` is the version-compat constructor (JAX 0.4.37 lacks
+``jax.sharding.AxisType``); every mesh in tests, benchmarks, examples
+and launchers goes through it.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
-__all__ = ["make_production_mesh", "make_bench_mesh"]
+__all__ = ["make_mesh", "make_production_mesh", "make_bench_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_bench_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary meshes for scaling benchmarks (fr/fd sweeps)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

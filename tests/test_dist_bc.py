@@ -23,9 +23,9 @@ pytestmark = pytest.mark.skipif(
 
 
 def _mesh(shape, names):
-    return jax.make_mesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
-    )
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh(shape, names)
 
 
 def _check(graph, mesh_shape=(2, 4), heuristics="h0", replica=False, **kw):
@@ -79,6 +79,28 @@ def test_rmat_distributed():
 
 def test_road_like_distributed():
     _check(road_like_graph(4, 4, spur_fraction=0.6, seed=2), (2, 4), "h3")
+
+
+@pytest.mark.parametrize("mesh_shape", [(2, 4), (4, 2)])
+@pytest.mark.parametrize("engine_kind", ["pallas", "pallas_bf16"])
+def test_pallas_dense_block_engine(mesh_shape, engine_kind):
+    """Fused Pallas kernels as the 2-D block-local compute == oracle."""
+    g = gnp_graph(26, 0.15, seed=0)
+    mesh = _mesh(mesh_shape, ("data", "model"))
+    bc, _ = distributed_betweenness_centrality(
+        g, mesh, heuristics="h3", batch_size=8, engine_kind=engine_kind
+    )
+    np.testing.assert_allclose(bc, brandes_reference(g), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("engine_kind", ["pallas"])
+def test_pallas_dense_block_engine_subcluster(engine_kind):
+    g = gnp_graph(25, 0.15, seed=2)
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    bc, _ = distributed_betweenness_centrality(
+        g, mesh, replica_axis="pod", heuristics="h0", engine_kind=engine_kind
+    )
+    np.testing.assert_allclose(bc, brandes_reference(g), rtol=1e-6, atol=1e-6)
 
 
 def test_static_levels_distributed():

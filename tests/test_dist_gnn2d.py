@@ -27,9 +27,9 @@ R, C = 2, 4
 
 
 def _mesh():
-    return jax.make_mesh(
-        (R, C), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((R, C), ("data", "model"))
 
 
 def _reduced(name, **kw):

@@ -84,6 +84,40 @@ def test_frontier_spmm_full_level_sequence():
     np.testing.assert_array_equal(np.asarray(depth), np.asarray(want.depth))
 
 
+# rectangular pre-fold variants feeding the 2-D distributed engine
+RECT_SHAPES = [(8, 8, 4), (16, 8, 16), (64, 24, 8), (130, 40, 33)]
+
+
+@pytest.mark.parametrize("m,k,s", RECT_SHAPES)
+@pytest.mark.parametrize("adj_dtype", [jnp.float32, jnp.bfloat16])
+def test_frontier_spmm_partial_matches_ref(m, k, s, adj_dtype):
+    lvl = 2
+    rng = np.random.default_rng(m + k + s)
+    A = jnp.asarray((rng.random((m, k)) < 0.3), adj_dtype)
+    sigma = jnp.asarray(rng.integers(0, 5, (k, s)), jnp.float32)
+    depth = jnp.asarray(rng.integers(-1, lvl + 3, (k, s)), jnp.int32)
+    got = ops.frontier_spmm_partial(A, sigma, depth, lvl, interpret=True)
+    exp = ref.frontier_partial_ref(A, sigma, depth, lvl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,s", RECT_SHAPES)
+@pytest.mark.parametrize("adj_dtype", [jnp.float32, jnp.bfloat16])
+def test_dependency_spmm_partial_matches_ref(m, k, s, adj_dtype):
+    lvl = 1
+    rng = np.random.default_rng(2 * m + k + s)
+    A = jnp.asarray((rng.random((m, k)) < 0.3), adj_dtype)
+    sigma = jnp.asarray(
+        np.maximum(rng.integers(0, 5, (k, s)), 1).astype(np.float32)
+    )
+    depth = jnp.asarray(rng.integers(-1, lvl + 3, (k, s)), jnp.int32)
+    delta = jnp.asarray(rng.random((k, s)), jnp.float32)
+    omega = jnp.asarray(rng.integers(0, 3, k), jnp.float32)
+    got = ops.dependency_spmm_partial(A, sigma, depth, delta, omega, lvl, interpret=True)
+    exp = ref.dependency_partial_ref(A, sigma, depth, delta, omega, lvl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("V,D,B,L", [(32, 8, 4, 3), (64, 128, 8, 5), (128, 96, 16, 10), (1000, 64, 32, 26)])
 @pytest.mark.parametrize("table_dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("weighted", [False, True])

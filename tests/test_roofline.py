@@ -54,9 +54,9 @@ def test_collectives_counted_with_groups():
         pytest.skip("needs 8 devices")
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh(
-        (2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"))
     m = k = n = 256
 
     def f(a, b):

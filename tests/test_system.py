@@ -73,6 +73,88 @@ def test_bc_resumes_from_partial_rounds():
     np.testing.assert_allclose(bc, brandes_reference(g), rtol=1e-5, atol=1e-5)
 
 
+def test_bc_driver_checkpoint_kill_and_resume(tmp_path):
+    """A run killed mid-loop leaves a consistent BCCheckpoint; a fresh
+    driver resumes from it and reproduces the unbroken result exactly."""
+    import jax.numpy as jnp
+
+    from repro.core import engine
+    from repro.core.bc import make_round_fn
+    from repro.core.driver import BCDriver
+    from repro.distributed.fault_tolerance import BCCheckpoint
+
+    g = gnp_graph(30, 0.15, seed=13)
+    full = betweenness_centrality(g, batch_size=4, heuristics="h3")
+
+    schedule, prep, residual, omega_i = build_schedule(g, batch_size=4, heuristics="h3")
+    adjacency = jnp.asarray(residual.dense_adjacency(np.float32))
+    omega = jnp.asarray(omega_i, jnp.float32)
+    base_fn = jax.jit(
+        make_round_fn(lambda: engine.make_dense_operator(adjacency), g.n)
+    )
+
+    class Crash(RuntimeError):
+        pass
+
+    def crashing_round_fn(limit):
+        calls = {"n": 0}
+
+        def fn(sources, derived):
+            calls["n"] += 1
+            if calls["n"] > limit:
+                raise Crash
+            bc_r, ns, roots = base_fn(sources[0], derived[0], omega)
+            return bc_r, ns[None], roots[None]
+
+        return fn
+
+    ckpt = BCCheckpoint(str(tmp_path / "bc.npz"))
+    n_rounds = len(schedule.rounds)
+    assert n_rounds >= 4
+    with pytest.raises(Crash):
+        BCDriver(
+            crashing_round_fn(n_rounds // 2),
+            schedule,
+            n=g.n,
+            prep=prep,
+            checkpoint=ckpt,
+            checkpoint_every=1,
+        ).run()
+    assert ckpt.exists()
+    _, _, committed = ckpt.load()
+    assert 0 < len(committed) < n_rounds
+
+    # resume: only the uncommitted tail is re-dealt
+    resumed = BCDriver(
+        crashing_round_fn(10**9),
+        schedule,
+        n=g.n,
+        prep=prep,
+        checkpoint=ckpt,
+        checkpoint_every=1,
+    ).run()
+    assert resumed.rounds_run == n_rounds - len(committed)
+    np.testing.assert_allclose(resumed.bc, full.bc, rtol=1e-6)
+    np.testing.assert_allclose(resumed.bc, brandes_reference(g), rtol=1e-5, atol=1e-5)
+    # a third run is a no-op that still reproduces the full scores
+    third = BCDriver(
+        crashing_round_fn(0), schedule, n=g.n, prep=prep, checkpoint=ckpt
+    ).run()
+    assert third.rounds_run == 0
+    np.testing.assert_allclose(third.bc, full.bc, rtol=1e-6)
+
+    # resuming against a different schedule must refuse, not mix sums
+    other_schedule, other_prep, _, _ = build_schedule(g, batch_size=8, heuristics="h3")
+    with pytest.raises(ValueError, match="different"):
+        BCDriver(
+            crashing_round_fn(0),
+            other_schedule,
+            n=g.n,
+            prep=other_prep,
+            checkpoint=ckpt,
+        )
+
+
 def test_bc_launcher_cli(tmp_path, capsys):
     import sys
     from repro.launch import bc as bc_cli
