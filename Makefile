@@ -10,4 +10,11 @@ test: verify
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
 
-.PHONY: verify test bench
+# Overlap-schedule subset (fig9 + table3 analogues): writes
+# BENCH_overlap.json — the machine-readable perf trajectory future PRs
+# regress against.  CI runs this as its bench smoke target.
+bench-smoke:
+	PYTHONPATH=src:. python benchmarks/run.py --only fig9
+	PYTHONPATH=src:. python benchmarks/run.py --only table3
+
+.PHONY: verify test bench bench-smoke

@@ -1,15 +1,62 @@
-"""Benchmark utilities: timing + CSV emission."""
+"""Benchmark utilities: device bootstrap, meshes, timing + CSV emission.
+
+This module must stay importable before jax: :func:`ensure_devices` has
+to set ``--xla_force_host_platform_device_count`` *before* the first jax
+import locks the backend, so nothing here imports jax at module scope.
+"""
 from __future__ import annotations
 
+import os
+import re
+import sys
 import time
 
-import jax
+__all__ = ["ensure_devices", "make_mesh", "time_call", "emit"]
 
-__all__ = ["time_call", "emit"]
+_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_devices(n: int) -> bool:
+    """Make sure at least ``n`` XLA host devices exist.
+
+    When jax has not been imported yet, sets
+    ``--xla_force_host_platform_device_count`` in ``XLA_FLAGS`` (raising
+    a pre-existing smaller count — the last occurrence wins) so the
+    backend initializes with ``n`` fake host devices — this is what lets
+    every benchmark run standalone (``PYTHONPATH=src:. python
+    benchmarks/fig9_overlap.py``) instead of hard-skipping outside the
+    ``benchmarks.run`` entry point.  When jax is already initialized the
+    count is locked; the return value then reports whether the
+    requirement is met so callers can skip gracefully.
+    """
+    if "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        found = re.findall(rf"{_DEVICE_FLAG}=(\d+)", flags)
+        if not found or int(found[-1]) < n:
+            os.environ["XLA_FLAGS"] = f"{flags} {_DEVICE_FLAG}={n}".strip()
+    import jax
+
+    return jax.device_count() >= n
+
+
+def make_mesh(shape, names=None):
+    """The one mesh helper for all benchmark scripts.
+
+    ``names`` defaults to the trailing axes of ("pod", "data", "model")
+    matching ``len(shape)`` — the axis-role convention of
+    :mod:`repro.launch.mesh`.
+    """
+    from repro.launch.mesh import make_mesh as _make_mesh
+
+    if names is None:
+        names = ("pod", "data", "model")[-len(shape):]
+    return _make_mesh(tuple(shape), tuple(names))
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
     """Median wall seconds of fn(*args) after warmup (blocks on results)."""
+    import jax
+
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kw))
     times = []

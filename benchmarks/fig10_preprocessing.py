@@ -2,9 +2,12 @@
 preprocessing (paper: near-linear speedup on R-MAT SCALE 23 EF 32)."""
 from __future__ import annotations
 
+from benchmarks.common import emit, ensure_devices, make_mesh, time_call
+
+ensure_devices(8)
+
 import jax
 
-from benchmarks.common import emit, time_call
 from repro.core.distributed import one_degree_reduce_distributed
 from repro.graphs import rmat_graph
 
@@ -15,8 +18,6 @@ def run() -> None:
     for p in (1, 2, 4, 8):
         if p > jax.device_count():
             continue
-        from repro.launch.mesh import make_mesh
-
         mesh = make_mesh((p,), ("data",))
 
         def job():

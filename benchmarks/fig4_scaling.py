@@ -10,18 +10,18 @@ Two views:
 """
 from __future__ import annotations
 
+from benchmarks.common import emit, ensure_devices, make_mesh, time_call
+
+ensure_devices(8)
+
 import jax
 
-from benchmarks.common import emit, time_call
 from repro.core.distributed import distributed_betweenness_centrality
 from repro.graphs import rmat_graph
 
 
 def _mesh(shape):
-    names = ("data", "model")[: len(shape)]
-    from repro.launch.mesh import make_mesh
-
-    return make_mesh(shape, names)
+    return make_mesh(shape, ("data", "model")[: len(shape)])
 
 
 def run() -> None:

@@ -9,44 +9,135 @@
     kernel vs the unfused XLA reference — compared by HBM bytes of one
     level (kernel: A + 2x(σ,d) streams; unfused adds the frontier and
     product intermediates).
+(c) Ring-pipelined expand/fold (paper Fig. 2 / §3.3): the barrier
+    schedule's monolithic all_gather + psum_scatter vs the ppermute ring
+    schedules, compared by per-round collective counts, link bytes, ring
+    hops, and measured per-round wall time.  The numbers are written to
+    ``BENCH_overlap.json`` so future PRs have a machine-readable
+    baseline to regress against.
 """
 from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, ensure_devices, make_mesh
+
+ensure_devices(8)
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from repro.core.distributed import distributed_graph_arrays, make_distributed_round_fn
+from repro.core.driver import BCDriver
 from repro.core.scheduler import build_schedule
-from repro.core.distributed import make_distributed_round_fn
 from repro.graphs import rmat_graph
 from repro.graphs.partition import partition_2d
 from repro.roofline.hlo import analyze_hlo_module
-from repro.roofline.model import link_bytes
+from repro.roofline.model import link_bytes, ring_steps
+
+BENCH_JSON = os.environ.get("BENCH_OVERLAP_JSON", "BENCH_overlap.json")
+
+NUM_LEVELS = 12
+MESH_SHAPE = (2, 4)
 
 
-def _mesh(shape, names):
-    from repro.launch.mesh import make_mesh
+def _collective_counts(coll_records: list[dict]) -> dict[str, int]:
+    """Per-class collective executions per round (trip-count-multiplied
+    instruction counts from the HLO parser — roofline/hlo.py)."""
+    out = {
+        cls: 0
+        for cls in ("all-gather", "reduce-scatter", "all-reduce", "collective-permute")
+    }
+    for rec in coll_records:
+        if rec["class"] in out:
+            out[rec["class"]] += rec.get("count", 1)
+    return out
 
-    return make_mesh(shape, names)
+
+def _overlap_bench(g, schedule, part, mesh) -> dict:
+    """(c): barrier vs ring schedules — HLO collectives + wall time."""
+    s, k = schedule.batch_size, schedule.derived_per_round
+    omega = jnp.zeros(part.n_pad, jnp.float32)
+    record: dict = {
+        "graph": {"name": "rmat_s8_ef8", "n": g.n, "m": int(g.num_edges)},
+        "mesh": f"{MESH_SHAPE[0]}x{MESH_SHAPE[1]}",
+        "num_levels": NUM_LEVELS,
+        "engines": {},
+    }
+    for engine_kind in ("sparse", "pallas"):
+        engine_rec: dict = {}
+        for overlap in ("none", "expand", "expand+fold"):
+            fn = make_distributed_round_fn(
+                part,
+                mesh,
+                num_levels=NUM_LEVELS,
+                engine_kind=engine_kind,
+                overlap=overlap,
+            )
+            graph_args = distributed_graph_arrays(part, engine_kind, overlap)
+            arg_specs = tuple(
+                jax.ShapeDtypeStruct(a.shape, a.dtype) for a in graph_args
+            ) + (
+                jax.ShapeDtypeStruct((part.n_pad,), jnp.float32),
+                jax.ShapeDtypeStruct((1, s), jnp.int32),
+                jax.ShapeDtypeStruct((1, k, 3), jnp.int32),
+            )
+            text = fn.lower(*arg_specs).compile().as_text()
+            terms = analyze_hlo_module(text)
+            colls = terms["collectives"]
+            counts = _collective_counts(colls)
+
+            # per-round wall time through the shared driver (profile
+            # mode).  Sparse only: the Pallas engine runs in interpret
+            # mode on CPU, where wall time measures the interpreter.
+            per_round = None
+            rounds = len(schedule.rounds)
+            if engine_kind == "sparse":
+
+                def block_fn(sources, derived, _fn=fn, _ga=graph_args):
+                    return _fn(*_ga, omega, sources, derived)
+
+                result = BCDriver(block_fn, schedule, n=g.n, profile=True).run()
+                per_round = float(np.median(result.block_times))
+                rounds = result.rounds_run
+            engine_rec[overlap] = {
+                "link_bytes_per_round": link_bytes(colls),
+                "collectives_per_round": int(sum(counts.values())),
+                "collectives_per_round_by_class": counts,
+                "ring_steps_per_round": ring_steps(colls),
+                "round_wall_s": per_round,
+                "rounds": rounds,
+            }
+            emit(
+                f"fig9/overlap_{engine_kind}_{overlap.replace('+', '_')}",
+                0.0 if per_round is None else per_round * 1e6,
+                f"link_MB={link_bytes(colls)/1e6:.2f};"
+                f"collectives={engine_rec[overlap]['collectives_per_round']};"
+                f"all_gather={counts['all-gather']};"
+                f"permute={counts['collective-permute']}",
+            )
+        record["engines"][engine_kind] = engine_rec
+    return record
 
 
 def run() -> None:
-    if jax.device_count() < 8:
+    if not ensure_devices(8):
         emit("fig9/skipped", 0.0, "needs 8 host devices")
         return
     g = rmat_graph(8, 8, seed=0)
     schedule, _, residual, _ = build_schedule(g, batch_size=16)
-    part = partition_2d(residual, 2, 4)
-    mesh = _mesh((2, 4), ("data", "model"))
+    part = partition_2d(residual, *MESH_SHAPE)
+    mesh = make_mesh(MESH_SHAPE, ("data", "model"))
     omega = jnp.zeros(part.n_pad, jnp.float32)
-    rnd = schedule.rounds[0]
 
+    # (a) fused vs split backward payload (barrier schedule)
     stats = {}
     for fused in (True, False):
         fn = make_distributed_round_fn(
-            part, mesh, fuse_backward_payload=fused, num_levels=12
+            part, mesh, fuse_backward_payload=fused, num_levels=NUM_LEVELS
         )
         lowered = fn.lower(
             jax.ShapeDtypeStruct(part.src_local.shape, jnp.int32),
@@ -82,6 +173,12 @@ def run() -> None:
     # kernel model: A + sigma/depth in + out once
     kernel_bytes = n * n * 4 + 4 * (n * s * 4)
     emit("fig9/level_pallas_model", 0.0, f"hbm_MB={kernel_bytes/1e6:.1f}")
+
+    # (c) barrier vs ring-pipelined schedules → BENCH_overlap.json
+    record = _overlap_bench(g, schedule, part, mesh)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    emit("fig9/bench_json", 0.0, f"wrote={BENCH_JSON}")
 
 
 if __name__ == "__main__":

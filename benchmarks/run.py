@@ -5,16 +5,13 @@ Prints ``name,us_per_call,derived`` CSV rows.
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run --only table4
 
-Needs 8 host devices for the distributed benchmarks, so it sets the XLA
-flag before importing jax (this entrypoint only — tests see 1 device).
+Needs 8 host devices for the distributed benchmarks; each benchmark
+module (and this entrypoint) calls :func:`benchmarks.common.ensure_devices`
+to set the XLA flag before jax initializes — tests still see 1 device.
 """
-import os
-import sys
+from benchmarks.common import ensure_devices
 
-if "jax" not in sys.modules:
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
-    ).strip()
+ensure_devices(8)
 
 import argparse
 

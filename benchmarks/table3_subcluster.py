@@ -8,21 +8,16 @@ more concurrent rounds — the paper's observed trade-off.
 """
 from __future__ import annotations
 
-import jax
+from benchmarks.common import emit, ensure_devices, make_mesh, time_call
 
-from benchmarks.common import emit, time_call
+ensure_devices(8)
+
 from repro.core.distributed import distributed_betweenness_centrality
 from repro.graphs import rmat_graph
 
 
-def _mesh(shape, names):
-    from repro.launch.mesh import make_mesh
-
-    return make_mesh(shape, names)
-
-
 def run() -> None:
-    if jax.device_count() < 8:
+    if not ensure_devices(8):
         emit("table3/skipped", 0.0, "needs 8 host devices")
         return
     g = rmat_graph(8, 8, seed=0)
@@ -32,7 +27,7 @@ def run() -> None:
         "fr4_fd2": ((4, 1, 2), ("pod", "data", "model"), "pod"),
     }
     for name, (shape, names, rep) in configs.items():
-        mesh = _mesh(shape, names)
+        mesh = make_mesh(shape, names)
 
         def job():
             return distributed_betweenness_centrality(

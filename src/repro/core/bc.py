@@ -20,7 +20,7 @@ from repro.core.driver import (
     apply_reduction_corrections,
     traversal_round,
 )
-from repro.core.operators import PallasDenseOperator
+from repro.core.operators import PallasDenseOperator, normalize_overlap
 from repro.core.scheduler import build_schedule
 from repro.graphs.graph import Graph
 
@@ -96,6 +96,7 @@ def betweenness_centrality(
     jit: bool = True,
     ledger=None,
     checkpoint=None,
+    overlap: str = "none",
 ) -> BCResult:
     """Exact BC of an undirected, unweighted graph (paper conventions:
     unnormalized, both traversal directions counted).
@@ -113,7 +114,16 @@ def betweenness_centrality(
                    (in-memory exactly-once, e.g. speculative re-execution).
       checkpoint:  optional fault_tolerance.BCCheckpoint — durable
                    kill-and-resume (launch/bc.py --ckpt-dir).
+      overlap:     collective-schedule policy, accepted for protocol
+                   uniformity with the distributed entry point; a single
+                   device has no collectives to overlap, so only "none"
+                   is valid here.
     """
+    if normalize_overlap(overlap) != "none":
+        raise ValueError(
+            "overlap schedules are a distributed-engine feature; "
+            "single-device engines have no collectives to pipeline"
+        )
     n = graph.n
     schedule, prep, residual, omega_i = build_schedule(
         graph, batch_size=batch_size, heuristics=heuristics

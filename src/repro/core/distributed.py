@@ -19,6 +19,16 @@ grid of devices; see graphs/partition.py for the chunk layout):
       psum_scatter(partials, axis=col) — sums the C partial
       contributions and delivers each device exactly its owned chunk.
 
+That is the *barrier* schedule (``overlap="none"``): every device idles
+through both collectives.  ``overlap="expand"`` replaces the all_gather
+with R-1 ``ppermute`` ring steps, accumulating each device's per-chunk
+product against the chunk in hand while the next is in flight (paper
+Fig. 2 pipelining / collective-matmul decomposition);
+``overlap="expand+fold"`` additionally replaces the psum_scatter with a
+C-1-step reduce ring, leaving no monolithic collective on the level's
+critical path — per level the cost drops from T_comm + T_compute toward
+max(T_comm, T_compute).
+
 The traversal itself — level loops, round algebra, host loop — is NOT
 implemented here: the shard_map body below constructs a
 :class:`repro.core.operators.DistributedOperator` (or its Pallas
@@ -50,16 +60,41 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.driver import BCDriver, traversal_round
-from repro.core.operators import DistributedOperator, DistributedPallasOperator
+from repro.core.operators import (
+    DistributedOperator,
+    DistributedPallasOperator,
+    normalize_overlap,
+)
 from repro.core.scheduler import Schedule, build_schedule
 from repro.graphs.graph import Graph
 from repro.graphs.partition import TwoDPartition, partition_2d
 
 __all__ = [
     "make_distributed_round_fn",
+    "distributed_graph_arrays",
     "distributed_betweenness_centrality",
     "one_degree_reduce_distributed",
 ]
+
+
+def distributed_graph_arrays(
+    partition: TwoDPartition, engine_kind: str, overlap: str = "none"
+) -> tuple[jnp.ndarray, ...]:
+    """Device arrays for the graph operands of a distributed round fn.
+
+    The single source of the engine_kind × overlap → operand-layout
+    mapping (entry point, benchmarks and tests all lower the same
+    layout): sparse uses the flat arc arrays, or the ring-sliced layout
+    under a ring overlap policy; the Pallas engines use dense blocks
+    (bf16 for ``"pallas_bf16"``).
+    """
+    if engine_kind == "sparse":
+        if normalize_overlap(overlap) != "none":
+            ring_src, ring_dst = partition.ring_arcs()
+            return (jnp.asarray(ring_src), jnp.asarray(ring_dst))
+        return (jnp.asarray(partition.src_local), jnp.asarray(partition.dst_local))
+    dt = jnp.bfloat16 if engine_kind == "pallas_bf16" else jnp.float32
+    return (jnp.asarray(partition.dense_blocks(np.float32), dt),)
 
 
 def one_degree_reduce_distributed(
@@ -129,6 +164,7 @@ def make_distributed_round_fn(
     fuse_backward_payload: bool = True,
     engine_kind: str = "sparse",
     interpret: bool | None = None,
+    overlap: str = "none",
 ):
     """Build the sub-cluster-parallel, 2-D-distributed round function.
 
@@ -154,6 +190,17 @@ def make_distributed_round_fn(
     setting it False splits the backward gather into two half-width
     collectives to mimic the paper's unfused σ/d exchange for the
     Fig. 9 benchmark (sparse engine only).
+
+    ``overlap`` selects the collective schedule per
+    :data:`repro.core.operators.OVERLAP_POLICIES`: ``"none"`` keeps the
+    barrier all_gather → compute → psum_scatter level step; ``"expand"``
+    ring-pipelines the gather (ppermute steps interleaved with per-chunk
+    block compute); ``"expand+fold"`` additionally turns the fold into a
+    reduce ring.  Under a ring policy the sparse engine's two arc
+    arguments are the *ring-sliced* layout
+    (i32 [R, C, R, max_ring_arcs] from
+    :meth:`TwoDPartition.ring_arcs`) instead of the flat arc arrays —
+    same arity, per-row-chunk slicing.
     """
     R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
     if (R, C) != (partition.R, partition.C):
@@ -162,14 +209,27 @@ def make_distributed_round_fn(
         )
     if engine_kind not in ("sparse", "pallas", "pallas_bf16"):
         raise ValueError(f"unknown distributed engine {engine_kind!r}")
+    overlap = normalize_overlap(overlap)
     use_pallas = engine_kind != "sparse"
     if use_pallas and not fuse_backward_payload:
         raise ValueError("split backward payload is a sparse-engine benchmark mode")
+    if overlap != "none" and not fuse_backward_payload:
+        raise ValueError(
+            "split backward payload is a barrier-schedule benchmark mode; "
+            "it cannot be combined with a ring overlap policy"
+        )
     if use_pallas and interpret is None:
         from repro.kernels.ops import on_tpu
 
         interpret = not on_tpu()
     chunk = partition.chunk
+    # Ring hops are mesh-wide collective-permutes: sub-cluster replicas
+    # must stay in level-loop lockstep or the rendezvous deadlocks (the
+    # extra levels a shallow replica runs are masked no-ops) — see
+    # operators.DistributedOperator (sync_axes).
+    sync_axes = (
+        (replica_axis,) if replica_axis is not None and overlap != "none" else ()
+    )
 
     def round_body(op, omega, sources, derived):
         bc_owned, ns, roots = traversal_round(
@@ -188,10 +248,34 @@ def make_distributed_round_fn(
                 row_axis=row_axis,
                 col_axis=col_axis,
                 interpret=interpret,
+                overlap=overlap,
+                sync_axes=sync_axes,
             )
             return round_body(op, omega, sources, derived)
 
         graph_specs = (P(row_axis, col_axis, None, None),)
+    elif overlap != "none":
+
+        def body(ring_src, ring_dst, omega, sources, derived):
+            op = DistributedOperator(
+                None,
+                None,
+                chunk=chunk,
+                R=R,
+                C=C,
+                row_axis=row_axis,
+                col_axis=col_axis,
+                overlap=overlap,
+                ring_src_local=ring_src[0, 0],  # [R, max_ring_arcs] local view
+                ring_dst_local=ring_dst[0, 0],
+                sync_axes=sync_axes,
+            )
+            return round_body(op, omega, sources, derived)
+
+        graph_specs = (
+            P(row_axis, col_axis, None, None),
+            P(row_axis, col_axis, None, None),
+        )
     else:
 
         def body(src_local, dst_local, omega, sources, derived):
@@ -240,6 +324,7 @@ def distributed_betweenness_centrality(
     heuristics: str = "h0",
     num_levels: int | None = None,
     engine_kind: str = "sparse",
+    overlap: str = "none",
     ledger=None,
     checkpoint=None,
 ) -> tuple[np.ndarray, Schedule]:
@@ -250,8 +335,11 @@ def distributed_betweenness_centrality(
     replica dim after the loop so a straggling/preempted replica's round
     can be re-issued (fault tolerance path, distributed/fault_tolerance.py).
     ``engine_kind`` selects the block-local compute: "sparse" (arc list)
-    or "pallas"/"pallas_bf16" (fused dense-block kernels).
+    or "pallas"/"pallas_bf16" (fused dense-block kernels); ``overlap``
+    selects the collective schedule (barrier vs ring-pipelined — see
+    :func:`make_distributed_round_fn`).
     """
+    overlap = normalize_overlap(overlap)
     schedule, prep, residual, omega_i = build_schedule(
         graph, batch_size=batch_size, heuristics=heuristics
     )
@@ -266,6 +354,7 @@ def distributed_betweenness_centrality(
         replica_axis=replica_axis,
         num_levels=num_levels,
         engine_kind=engine_kind,
+        overlap=overlap,
     )
 
     omega_pad = np.zeros(part.n_pad, np.float32)
@@ -274,11 +363,7 @@ def distributed_betweenness_centrality(
     # chunk ids are contiguous in vertex order, so identity layout works.
     omega_dev = jnp.asarray(omega_pad)
 
-    if engine_kind == "sparse":
-        graph_args = (jnp.asarray(part.src_local), jnp.asarray(part.dst_local))
-    else:
-        dt = jnp.bfloat16 if engine_kind == "pallas_bf16" else jnp.float32
-        graph_args = (jnp.asarray(part.dense_blocks(np.float32), dt),)
+    graph_args = distributed_graph_arrays(part, engine_kind, overlap)
 
     def block_fn(sources, derived):
         return round_fn(*graph_args, omega_dev, sources, derived)

@@ -139,6 +139,10 @@ class BCResult:
     rounds_run: int
     forward_columns: int  # explicit BFS columns actually traversed
     backward_columns: int  # dependency columns (explicit + derived)
+    wall_s: float = 0.0  # host wall time of the round loop
+    block_times: list[float] | None = None  # per-dispatch-block seconds
+    #   (profile mode only — the driver blocks per block to measure, so
+    #   async dispatch is disabled; use for benchmarking, not production)
 
 
 class BCDriver:
@@ -150,6 +154,11 @@ class BCDriver:
     per-vertex contribution ([n] on one device; [fr, n_pad] sharded on a
     mesh).  All graph-constant operands (adjacency, ω, arc lists) are
     expected to be partially applied into ``round_fn``.
+
+    ``profile=True`` blocks on every dispatch block and records its wall
+    seconds in ``BCResult.block_times`` (plus total ``wall_s``) — the
+    measurement mode the overlap benchmarks use; it defeats the async
+    pipeline, so leave it off in production.
     """
 
     def __init__(
@@ -164,8 +173,10 @@ class BCDriver:
         checkpoint_every: int = 8,
         rounds_per_dispatch: int = 1,
         max_inflight: int = 2,
+        profile: bool = False,
     ):
         self.round_fn = round_fn
+        self.profile = profile
         self.schedule = schedule
         self.n = n
         self.prep = prep
@@ -231,6 +242,8 @@ class BCDriver:
         return bc
 
     def run(self) -> BCResult:
+        import time
+
         bc_acc = None
         inflight: collections.deque = collections.deque()
         ns_by_root: dict[int, float] = dict(self._ns0)
@@ -239,6 +252,8 @@ class BCDriver:
         fwd_cols = 0
         bwd_cols = 0
         blocks_since_snapshot = 0
+        block_times: list[float] | None = [] if self.profile else None
+        t_start = time.perf_counter()
 
         def drain_one():
             ns_dev, roots_dev, rids = inflight.popleft()
@@ -260,7 +275,11 @@ class BCDriver:
             )
 
         for srcs, ders, live in self._blocks():
+            t_blk = time.perf_counter()
             bc_blk, ns, roots = self.round_fn(jnp.asarray(srcs), jnp.asarray(ders))
+            if block_times is not None:  # profile: sync to time this block
+                jax.block_until_ready(bc_blk)
+                block_times.append(time.perf_counter() - t_blk)
             bc_acc = bc_blk if bc_acc is None else self._accumulate(bc_acc, bc_blk)
             inflight.append((ns, roots, live))
             rounds_run += len(live)
@@ -289,4 +308,6 @@ class BCDriver:
             rounds_run=rounds_run,
             forward_columns=fwd_cols,
             backward_columns=bwd_cols,
+            wall_s=time.perf_counter() - t_start,
+            block_times=block_times,
         )

@@ -19,6 +19,9 @@ loop; operators own everything below a level:
   row_ids / level_cap      which global vertices the local rows are, and
                            the worst-case level count
   root_omega               look up ω at the round's root vertices
+  overlap                  collective-schedule policy (OVERLAP_POLICIES):
+                           barrier all_gather/psum_scatter vs ppermute
+                           ring steps pipelined with block compute
 
 Implementations:
 
@@ -62,7 +65,36 @@ __all__ = [
     "DistributedOperator",
     "DistributedPallasOperator",
     "as_operator",
+    "OVERLAP_POLICIES",
+    "normalize_overlap",
 ]
+
+# Collective-schedule policies for the distributed operators (paper §3.3
+# Fig. 2 pipelining).  "none" is the barrier schedule — monolithic
+# all_gather expand, block compute, psum_scatter fold, every device idle
+# through both collectives.  "expand" decomposes the expand into R-1
+# ppermute ring steps interleaved with per-chunk block compute
+# (collective-matmul style: the next chunk is in flight while the one in
+# hand multiplies).  "expand+fold" additionally decomposes the fold into
+# a C-1-step reduce ring, so no monolithic collective remains on the
+# level's critical path.  Single-device operators have no collectives;
+# they accept only "none".
+OVERLAP_POLICIES = ("none", "expand", "expand+fold")
+
+
+def normalize_overlap(policy: str | None) -> str:
+    """Validate an overlap policy string (None means "none")."""
+    policy = "none" if policy is None else policy
+    if policy not in OVERLAP_POLICIES:
+        raise ValueError(
+            f"unknown overlap policy {policy!r}; expected one of {OVERLAP_POLICIES}"
+        )
+    return policy
+
+
+def _ring_perm(axis_size: int) -> list[tuple[int, int]]:
+    """ppermute permutation for one ring hop: device s sends to s+1."""
+    return [(s, (s + 1) % axis_size) for s in range(axis_size)]
 
 
 def _forward_level(op: "TraversalOperator", lvl, sigma, depth):
@@ -260,12 +292,30 @@ class DistributedOperator(TraversalOperator):
     ``split_backward`` mimics the paper's unfused σ/d exchange by
     splitting the backward gather into two half-width collectives
     (Fig. 9 benchmark mode).
+
+    ``overlap`` selects the collective schedule (see OVERLAP_POLICIES):
+    the ring schedules need the per-row-chunk arc layout
+    (:meth:`repro.graphs.partition.TwoDPartition.ring_arcs`) instead of
+    the flat ``src_local``/``dst_local`` arrays, because each ring step
+    processes only the arcs sourced in the chunk currently in hand.
+
+    ``sync_axes`` lists extra mesh axes whose devices must agree on
+    *loop bounds* (liveness / max depth) — the sub-cluster replica axis
+    under a ring schedule.  Replicas process different rounds, so their
+    level loops have independent data-dependent trip counts; grouped
+    collectives (all_gather/psum/psum_scatter) tolerate that, but a
+    ``ppermute`` lowers to one collective-permute whose source-target
+    pairs span the whole mesh, so every replica must execute the same
+    number of ring hops or the runtime deadlocks at the rendezvous.
+    Including ``sync_axes`` in ``reduce_any``/``reduce_max`` makes each
+    replica run max-over-replicas levels (the extras are masked no-ops);
+    per-column *value* reductions (``reduce_sum``) stay grid-local.
     """
 
     def __init__(
         self,
-        src_local: jnp.ndarray,  # i32 [max_arcs] — into the gathered column
-        dst_local: jnp.ndarray,  # i32 [max_arcs] — into the C*chunk partial
+        src_local: jnp.ndarray | None,  # i32 [max_arcs] — into the gathered column
+        dst_local: jnp.ndarray | None,  # i32 [max_arcs] — into the C*chunk partial
         *,
         chunk: int,
         R: int,
@@ -273,16 +323,29 @@ class DistributedOperator(TraversalOperator):
         row_axis: str,
         col_axis: str,
         split_backward: bool = False,
+        overlap: str = "none",
+        ring_src_local: jnp.ndarray | None = None,  # i32 [R, max_ring_arcs]
+        ring_dst_local: jnp.ndarray | None = None,  # i32 [R, max_ring_arcs]
+        sync_axes: tuple[str, ...] = (),
     ):
         self.src_local = src_local
         self.dst_local = dst_local
+        self.ring_src_local = ring_src_local
+        self.ring_dst_local = ring_dst_local
         self.chunk = chunk
         self.R = R
         self.C = C
         self.row_axis = row_axis
         self.col_axis = col_axis
         self.grid_axes = (row_axis, col_axis)
+        self.loop_axes = (row_axis, col_axis) + tuple(sync_axes)
         self.split_backward = split_backward
+        self.overlap = normalize_overlap(overlap)
+        if self.overlap != "none" and split_backward:
+            raise ValueError(
+                "split_backward is a barrier-schedule benchmark mode; "
+                "it cannot be combined with a ring overlap policy"
+            )
         self.n_rows = chunk
 
     # ---------------------------------------------- collective skeleton
@@ -300,8 +363,74 @@ class DistributedOperator(TraversalOperator):
             msgs, self.dst_local, num_segments=self.C * self.chunk + 1
         )[: self.C * self.chunk]
 
+    # ------------------------------------------------- ring schedules
+    def _fold_partial(self, partial):
+        """Fold the [C·chunk, s] partial per the overlap policy."""
+        if self.overlap == "expand+fold":
+            return self._fold_ring(partial)
+        return self._fold(partial)
+
+    def _fold_ring(self, partial):
+        """Reduce-ring fold: C-1 ppermute hops over the column axis.
+
+        Block m of ``partial`` (rows [m·chunk, (m+1)·chunk)) is device
+        (i, m)'s owned chunk.  The block bound for device j starts at
+        device j+1 with that device's local partial and travels the ring
+        gathering one add per hop; after C-1 hops device j holds the
+        fully summed block j — the exact psum_scatter result, with each
+        hop's send overlappable against the neighbouring adds.
+        """
+        C, chunk = self.C, self.chunk
+        if C == 1:
+            return partial
+        j = jax.lax.axis_index(self.col_axis)
+        perm = _ring_perm(C)
+
+        def block(m):  # m is traced: the block this device contributes now
+            return jax.lax.dynamic_slice_in_dim(partial, m * chunk, chunk, axis=0)
+
+        acc = block(jnp.mod(j - 1, C))
+        for t in range(1, C):
+            acc = jax.lax.ppermute(acc, self.col_axis, perm) + block(
+                jnp.mod(j - 1 - t, C)
+            )
+        return acc
+
+    def _ring_partial(self, x_owned):
+        """Ring-pipelined expand: R-1 ppermute hops over the row axis.
+
+        The owned chunk rotates around the grid column; at step t the
+        chunk of row ``r = (i - t) mod R`` is in hand and exactly its
+        arcs (ring slot r) accumulate into the local partial while the
+        next chunk is already in flight — the collective-matmul overlap
+        of paper Fig. 2, expressed at the arc-list level.
+        """
+        if self.ring_src_local is None or self.ring_dst_local is None:
+            raise ValueError(
+                "overlap != 'none' needs the ring arc layout "
+                "(TwoDPartition.ring_arcs)"
+            )
+        R, C, chunk = self.R, self.C, self.chunk
+        i = jax.lax.axis_index(self.row_axis)
+        perm = _ring_perm(R)
+        hand = x_owned
+        acc = jnp.zeros((C * chunk + 1,) + x_owned.shape[1:], jnp.float32)
+        for t in range(R):
+            nxt = jax.lax.ppermute(hand, self.row_axis, perm) if t + 1 < R else None
+            r = jnp.mod(i - t, R)
+            src_r = jax.lax.dynamic_index_in_dim(self.ring_src_local, r, keepdims=False)
+            dst_r = jax.lax.dynamic_index_in_dim(self.ring_dst_local, r, keepdims=False)
+            acc = acc + jax.ops.segment_sum(
+                hand[src_r], dst_r, num_segments=C * chunk + 1
+            )
+            if nxt is not None:
+                hand = nxt
+        return acc[: C * chunk]
+
     def apply(self, x_owned):
-        return self._fold(self._local(self._expand(x_owned)))
+        if self.overlap == "none":
+            return self._fold(self._local(self._expand(x_owned)))
+        return self._fold_partial(self._ring_partial(x_owned))
 
     def apply_backward(self, g):
         if not self.split_backward:
@@ -311,10 +440,10 @@ class DistributedOperator(TraversalOperator):
 
     # ------------------------------------------- collective agreements
     def reduce_any(self, alive):
-        return jax.lax.psum(alive.astype(jnp.int32), self.grid_axes) > 0
+        return jax.lax.psum(alive.astype(jnp.int32), self.loop_axes) > 0
 
     def reduce_max(self, value):
-        return jax.lax.pmax(value, self.grid_axes)
+        return jax.lax.pmax(value, self.loop_axes)
 
     def reduce_sum(self, value):
         return jax.lax.psum(value, self.grid_axes)
@@ -351,6 +480,14 @@ class DistributedPallasOperator(DistributedOperator):
     (σ, d, δ, ω) backward — the paper's §3.2 exchange set — instead of
     the pre-masked single tensor of the arc-list operator; the A-stream
     moves to the MXU and may be bf16.
+
+    Under a ring overlap policy the expand rotates the owned operand
+    chunks around the row axis with ``ppermute`` and each step multiplies
+    the adjacency sub-block ``A[:, r·chunk:(r+1)·chunk]`` against the
+    chunk in hand through the partial kernels' chunked-operand mode
+    (``acc=`` — the running combine is fused into the kernel's VMEM
+    accumulator init), so the next chunk's transfer overlaps the current
+    chunk's MXU work.
     """
 
     def __init__(
@@ -363,6 +500,8 @@ class DistributedPallasOperator(DistributedOperator):
         row_axis: str,
         col_axis: str,
         interpret: bool | None = None,
+        overlap: str = "none",
+        sync_axes: tuple[str, ...] = (),
     ):
         super().__init__(
             src_local=None,
@@ -372,6 +511,8 @@ class DistributedPallasOperator(DistributedOperator):
             C=C,
             row_axis=row_axis,
             col_axis=col_axis,
+            overlap=overlap,
+            sync_axes=sync_axes,
         )
         self.adjacency_block = adjacency_block
         self.interpret = interpret
@@ -379,15 +520,58 @@ class DistributedPallasOperator(DistributedOperator):
     def _local(self, x_col):
         return self.adjacency_block.astype(jnp.float32) @ x_col
 
+    def _ring_steps(self, operands, step_fn):
+        """Ring-pipelined expand over the row axis (dense-block form).
+
+        ``operands`` is a tuple of owned [chunk, ...] arrays that travel
+        together; ``step_fn(a_chunk, hand, acc)`` folds one chunk's
+        product into the running [C·chunk, s] accumulator.  The ppermute
+        for step t+1 is issued before step t's compute so XLA's async
+        collective-permute overlaps the transfer with the block matmul.
+        """
+        R, chunk = self.R, self.chunk
+        i = jax.lax.axis_index(self.row_axis)
+        perm = _ring_perm(R)
+        hand = tuple(operands)
+        acc = jnp.zeros((self.C * chunk, operands[0].shape[1]), jnp.float32)
+        for t in range(R):
+            nxt = (
+                tuple(jax.lax.ppermute(x, self.row_axis, perm) for x in hand)
+                if t + 1 < R
+                else None
+            )
+            r = jnp.mod(i - t, R)
+            a_r = jax.lax.dynamic_slice_in_dim(
+                self.adjacency_block, r * chunk, chunk, axis=1
+            )
+            acc = step_fn(a_r, hand, acc)
+            if nxt is not None:
+                hand = nxt
+        return acc
+
+    def _ring_partial(self, x_owned):
+        # dense-block counterpart of the arc-list ring (used via apply)
+        return self._ring_steps(
+            (x_owned,), lambda a_r, hand, acc: acc + a_r.astype(jnp.float32) @ hand[0]
+        )
+
     def forward_level(self, lvl, sigma, depth):
         from repro.kernels import ops as kops
 
-        sigma_col = self._expand(sigma)  # [R*chunk, s]
-        depth_col = self._expand(depth)
-        partial = kops.frontier_spmm_partial(
-            self.adjacency_block, sigma_col, depth_col, lvl, interpret=self.interpret
-        )  # [C*chunk, s]
-        t = self._fold(partial)  # [chunk, s]
+        if self.overlap == "none":
+            sigma_col = self._expand(sigma)  # [R*chunk, s]
+            depth_col = self._expand(depth)
+            partial = kops.frontier_spmm_partial(
+                self.adjacency_block, sigma_col, depth_col, lvl, interpret=self.interpret
+            )  # [C*chunk, s]
+        else:
+            partial = self._ring_steps(
+                (sigma, depth),
+                lambda a_r, hand, acc: kops.frontier_spmm_partial(
+                    a_r, hand[0], hand[1], lvl, acc=acc, interpret=self.interpret
+                ),
+            )
+        t = self._fold_partial(partial)  # [chunk, s]
         newly = (t > 0) & (depth < 0)
         depth = jnp.where(newly, lvl, depth)
         sigma = sigma + jnp.where(newly, t, 0.0)
@@ -396,18 +580,34 @@ class DistributedPallasOperator(DistributedOperator):
     def backward_level(self, lvl, sigma, depth, omega, delta):
         from repro.kernels import ops as kops
 
-        sigma_col = self._expand(sigma)
-        depth_col = self._expand(depth)
-        delta_col = self._expand(delta)
-        omega_col = self._expand(omega.astype(jnp.float32))
-        partial = kops.dependency_spmm_partial(
-            self.adjacency_block,
-            sigma_col,
-            depth_col,
-            delta_col,
-            omega_col,
-            lvl,
-            interpret=self.interpret,
-        )
-        t = self._fold(partial)
+        omega_f = omega.astype(jnp.float32)
+        if self.overlap == "none":
+            sigma_col = self._expand(sigma)
+            depth_col = self._expand(depth)
+            delta_col = self._expand(delta)
+            omega_col = self._expand(omega_f)
+            partial = kops.dependency_spmm_partial(
+                self.adjacency_block,
+                sigma_col,
+                depth_col,
+                delta_col,
+                omega_col,
+                lvl,
+                interpret=self.interpret,
+            )
+        else:
+            partial = self._ring_steps(
+                (sigma, depth, delta, omega_f),
+                lambda a_r, hand, acc: kops.dependency_spmm_partial(
+                    a_r,
+                    hand[0],
+                    hand[1],
+                    hand[2],
+                    hand[3],
+                    lvl,
+                    acc=acc,
+                    interpret=self.interpret,
+                ),
+            )
+        t = self._fold_partial(partial)
         return delta + jnp.where(depth == lvl, sigma * t, 0.0)

@@ -74,6 +74,52 @@ class TwoDPartition:
         j = chunks // self.R
         return (i * self.C + j).astype(np.int32)
 
+    def ring_arcs(self, arc_pad_multiple: int = 8) -> tuple[np.ndarray, np.ndarray]:
+        """Ring-sliced arc layout for the pipelined expand schedule.
+
+        The ring schedule replaces the vertical ``all_gather`` with R-1
+        ``ppermute`` steps: at step t device (i, j) holds the frontier
+        chunk of grid row ``r = (i - t) mod R`` in hand and must process
+        exactly the arcs whose source lies in that chunk.  This method
+        re-slices each cell's arc list by source row-chunk so a step is
+        one dynamic-slice away from its arcs.
+
+        Returns ``(ring_src, ring_dst)`` int32 [R, C, R, max_ring_arcs]:
+        slot (i, j, r) holds cell (i, j)'s arcs sourced in global chunk
+        ``j*R + r``.  ``ring_src`` is chunk-relative ([0, chunk)) —
+        it indexes the single chunk in hand, not the gathered slice;
+        ``ring_dst`` is unchanged ([0, C*chunk], sentinel-padded).
+        Padding slots use src 0 / dst sentinel (discarded row).
+        """
+        R, C, chunk = self.R, self.C, self.chunk
+        sentinel = C * chunk
+        max_ring = 1
+        sliced: list[list[list[tuple[np.ndarray, np.ndarray]]]] = []
+        for i in range(R):
+            row: list[list[tuple[np.ndarray, np.ndarray]]] = []
+            for j in range(C):
+                valid = self.dst_local[i, j] != sentinel
+                s_all = self.src_local[i, j][valid]
+                d_all = self.dst_local[i, j][valid]
+                r_all = s_all // chunk
+                slots = []
+                for r in range(R):
+                    sel = r_all == r
+                    slots.append((s_all[sel] % chunk, d_all[sel]))
+                    max_ring = max(max_ring, int(sel.sum()))
+                row.append(slots)
+            sliced.append(row)
+        max_ring += (-max_ring) % arc_pad_multiple
+        ring_src = np.zeros((R, C, R, max_ring), np.int32)
+        ring_dst = np.full((R, C, R, max_ring), sentinel, np.int32)
+        for i in range(R):
+            for j in range(C):
+                for r in range(R):
+                    s_r, d_r = sliced[i][j][r]
+                    ring_src[i, j, r, : s_r.size] = s_r
+                    ring_dst[i, j, r, : d_r.size] = d_r
+        return ring_src, ring_dst
+
     def dense_blocks(self, dtype=np.float32) -> np.ndarray:
         """Dense per-device adjacency blocks [R, C, C·chunk, R·chunk].
 

@@ -28,6 +28,7 @@ __all__ = [
     "dependency_spmm_kernel",
     "dependency_spmm_pallas",
     "dependency_partial_kernel",
+    "dependency_partial_acc_kernel",
     "dependency_partial_pallas",
 ]
 
@@ -127,6 +128,11 @@ def dependency_spmm_pallas(
 # dim, raw output t = A_block @ g with the g recompute fused in VMEM.
 # The δ-update epilogue is deferred past the psum_scatter fold (see
 # operators.DistributedPallasOperator and frontier_spmm.py).
+#
+# Chunked-operand (ring) mode: ``acc`` threads the running [m, s] partial
+# through the ring steps of the pipelined expand — the VMEM accumulator
+# is seeded from the carried tensor instead of zeros (see the frontier
+# kernel for the schedule).
 # --------------------------------------------------------------------------
 
 
@@ -165,6 +171,42 @@ def dependency_partial_kernel(
         t_out_ref[...] = acc_ref[...]
 
 
+def dependency_partial_acc_kernel(
+    lvl_ref,  # (1,1) i32
+    a_ref,  # [bm, bk] adjacency-block tile
+    sigma_k_ref,  # [bk, bs]
+    depth_k_ref,  # [bk, bs]
+    delta_k_ref,  # [bk, bs]
+    omega_k_ref,  # [bk, 1]
+    t_in_ref,  # [bm, bs] running ring accumulator
+    t_out_ref,  # [bm, bs]
+    acc_ref,  # VMEM [bm, bs] f32
+    *,
+    k_steps: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = t_in_ref[...]
+
+    lvl = lvl_ref[0, 0]
+    sigma_k = sigma_k_ref[...]
+    safe_sigma = jnp.where(sigma_k > 0, sigma_k, 1.0)
+    g = jnp.where(
+        depth_k_ref[...] == lvl + 1,
+        (1.0 + delta_k_ref[...] + omega_k_ref[...]) / safe_sigma,
+        0.0,
+    )
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32), g, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        t_out_ref[...] = acc_ref[...]
+
+
 def dependency_partial_pallas(
     adjacency: jnp.ndarray,  # [m, kdim]
     sigma: jnp.ndarray,  # [kdim, s]
@@ -173,6 +215,7 @@ def dependency_partial_pallas(
     omega: jnp.ndarray,  # [kdim]
     lvl: jnp.ndarray,
     *,
+    acc: jnp.ndarray | None = None,  # [m, s] ring accumulator (chunked mode)
     bm: int = 128,
     bk: int = 128,
     bs: int = 128,
@@ -187,23 +230,30 @@ def dependency_partial_pallas(
 
     lvl_arr = jnp.asarray(lvl, jnp.int32).reshape(1, 1)
     omega_col = omega.astype(jnp.float32).reshape(kdim, 1)
-    kernel = functools.partial(dependency_partial_kernel, k_steps=k_steps)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # lvl
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # A block tile
+        pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # σ (contraction)
+        pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # d (contraction)
+        pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # δ (contraction)
+        pl.BlockSpec((bk, 1), lambda i, j, k: (k, 0)),  # ω
+    ]
+    args = [lvl_arr, adjacency, sigma, depth, delta, omega_col]
+    if acc is None:
+        kernel = functools.partial(dependency_partial_kernel, k_steps=k_steps)
+    else:
+        kernel = functools.partial(dependency_partial_acc_kernel, k_steps=k_steps)
+        in_specs.append(pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)))  # t_in
+        args.append(acc)
 
     from jax.experimental.pallas import tpu as pltpu
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # lvl
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # A block tile
-            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # σ (contraction)
-            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # d (contraction)
-            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # δ (contraction)
-            pl.BlockSpec((bk, 1), lambda i, j, k: (k, 0)),  # ω
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, s), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
         interpret=interpret,
-    )(lvl_arr, adjacency, sigma, depth, delta, omega_col)
+    )(*args)

@@ -32,6 +32,7 @@ __all__ = [
     "frontier_spmm_kernel",
     "frontier_spmm_pallas",
     "frontier_partial_kernel",
+    "frontier_partial_acc_kernel",
     "frontier_partial_pallas",
 ]
 
@@ -136,6 +137,12 @@ def _vmem_scratch(bm: int, bs: int):
 # owned chunk (see operators.DistributedPallasOperator).  The operand
 # fusion — recomputing the frontier tile from (σ, d) in VMEM instead of
 # materializing it in HBM — is identical to the square kernel above.
+#
+# Chunked-operand (ring) mode: the pipelined expand schedule feeds the
+# kernel one row-chunk of operands per ring step and threads a running
+# [m, s] accumulator through the steps (``acc``).  Seeding the VMEM
+# accumulator from the carried tensor keeps the per-step combine inside
+# the kernel — no separate [m, s] add round-trips HBM between steps.
 # --------------------------------------------------------------------------
 
 
@@ -168,12 +175,43 @@ def frontier_partial_kernel(
         t_out_ref[...] = acc_ref[...]
 
 
+def frontier_partial_acc_kernel(
+    lvl_ref,  # (1,1) i32
+    a_ref,  # [bm, bk] adjacency-block tile
+    sigma_k_ref,  # [bk, bs] chunk σ tile (contraction dim)
+    depth_k_ref,  # [bk, bs] chunk d tile (contraction dim)
+    t_in_ref,  # [bm, bs] running ring accumulator
+    t_out_ref,  # [bm, bs] accumulator + this chunk's product
+    acc_ref,  # VMEM scratch [bm, bs] f32
+    *,
+    k_steps: int,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = t_in_ref[...]
+
+    lvl = lvl_ref[0, 0]
+    frontier = sigma_k_ref[...] * (depth_k_ref[...] == lvl - 1).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        frontier,
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        t_out_ref[...] = acc_ref[...]
+
+
 def frontier_partial_pallas(
     adjacency: jnp.ndarray,  # [m, kdim] rectangular block
     sigma: jnp.ndarray,  # [kdim, s]
     depth: jnp.ndarray,  # [kdim, s]
     lvl: jnp.ndarray,
     *,
+    acc: jnp.ndarray | None = None,  # [m, s] ring accumulator (chunked mode)
     bm: int = 128,
     bk: int = 128,
     bs: int = 128,
@@ -187,19 +225,26 @@ def frontier_partial_pallas(
     grid = (m // bm, s // bs, k_steps)
 
     lvl_arr = jnp.asarray(lvl, jnp.int32).reshape(1, 1)
-    kernel = functools.partial(frontier_partial_kernel, k_steps=k_steps)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # lvl
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # A block tile
+        pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # σ (contraction)
+        pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # d (contraction)
+    ]
+    args = [lvl_arr, adjacency, sigma, depth]
+    if acc is None:
+        kernel = functools.partial(frontier_partial_kernel, k_steps=k_steps)
+    else:
+        kernel = functools.partial(frontier_partial_acc_kernel, k_steps=k_steps)
+        in_specs.append(pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)))  # t_in
+        args.append(acc)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # lvl
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # A block tile
-            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # σ (contraction)
-            pl.BlockSpec((bk, bs), lambda i, j, k: (k, j)),  # d (contraction)
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bs), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, s), jnp.float32),
         scratch_shapes=[_vmem_scratch(bm, bs)],
         interpret=interpret,
-    )(lvl_arr, adjacency, sigma, depth)
+    )(*args)

@@ -138,6 +138,7 @@ def frontier_spmm_partial(
     depth,
     lvl,
     *,
+    acc=None,
     use_pallas: bool = True,
     interpret: bool | None = None,
     bm: int = 128,
@@ -150,10 +151,16 @@ def frontier_spmm_partial(
     and ``depth`` are the row-gathered [k, s] operands.  Returns the raw
     t = A_block @ (σ ⊙ [d = lvl-1]) f32 [m, s] — callers fold the C
     partials with psum_scatter and apply the state update afterwards.
-    See kernels/frontier_spmm.py (partial variant).
+
+    Chunked-operand (ring) mode: with ``acc`` (f32 [m, s]) the operands
+    are one row-chunk of the gathered slice and the result is
+    ``acc + A_chunk @ frontier_chunk`` — the running combine of the
+    pipelined expand schedule, fused into the kernel's accumulator init.
+    See kernels/frontier_spmm.py (partial variants).
     """
     if not use_pallas:
-        return ref.frontier_partial_ref(adjacency, sigma, depth, lvl)
+        t = ref.frontier_partial_ref(adjacency, sigma, depth, lvl)
+        return t if acc is None else acc + t
     if interpret is None:
         interpret = not on_tpu()
     m, kdim = adjacency.shape
@@ -164,7 +171,10 @@ def frontier_spmm_partial(
     a = _pad_to(_pad_to(adjacency, 0, bm), 1, bk)
     sg = _pad_to(_pad_to(sigma, 0, bk), 1, bs)
     dp = _pad_to(_pad_to(depth, 0, bk, fill=-1), 1, bs, fill=-1)
-    t = frontier_partial_pallas(a, sg, dp, lvl, bm=bm, bk=bk, bs=bs, interpret=interpret)
+    ac = None if acc is None else _pad_to(_pad_to(acc, 0, bm), 1, bs)
+    t = frontier_partial_pallas(
+        a, sg, dp, lvl, acc=ac, bm=bm, bk=bk, bs=bs, interpret=interpret
+    )
     return t[:m, :s]
 
 
@@ -177,6 +187,7 @@ def dependency_spmm_partial(
     omega,
     lvl,
     *,
+    acc=None,
     use_pallas: bool = True,
     interpret: bool | None = None,
     bm: int = 128,
@@ -187,10 +198,13 @@ def dependency_spmm_partial(
 
     Operands are the row-gathered [k, s] (σ, d, δ) and [k] ω; the g
     recompute is fused into the block matmul.  Returns t = A_block @ g
-    f32 [m, s].  See kernels/dependency_spmm.py (partial variant).
+    f32 [m, s].  With ``acc`` (f32 [m, s]) the operands are one row-chunk
+    and the result is ``acc + A_chunk @ g_chunk`` — the pipelined-expand
+    running combine.  See kernels/dependency_spmm.py (partial variants).
     """
     if not use_pallas:
-        return ref.dependency_partial_ref(adjacency, sigma, depth, delta, omega, lvl)
+        t = ref.dependency_partial_ref(adjacency, sigma, depth, delta, omega, lvl)
+        return t if acc is None else acc + t
     if interpret is None:
         interpret = not on_tpu()
     m, kdim = adjacency.shape
@@ -203,8 +217,9 @@ def dependency_spmm_partial(
     dp = _pad_to(_pad_to(depth, 0, bk, fill=-1), 1, bs, fill=-1)
     dl = _pad_to(_pad_to(delta, 0, bk), 1, bs)
     om = _pad_to(omega, 0, bk)
+    ac = None if acc is None else _pad_to(_pad_to(acc, 0, bm), 1, bs)
     t = dependency_partial_pallas(
-        a, sg, dp, dl, om, lvl, bm=bm, bk=bk, bs=bs, interpret=interpret
+        a, sg, dp, dl, om, lvl, acc=ac, bm=bm, bk=bk, bs=bs, interpret=interpret
     )
     return t[:m, :s]
 

@@ -8,7 +8,11 @@
 Supports single-device and distributed (``--mesh RxC``) execution; every
 engine of the unified traversal stack is selectable with ``--engine``
 (single-device: dense | sparse | pallas | pallas_bf16; distributed:
-sparse arc-list or the Pallas dense-block engines).  ``--ckpt-dir``
+sparse arc-list or the Pallas dense-block engines).  ``--overlap``
+selects the distributed collective schedule: ``none`` (barrier
+all_gather/psum_scatter), ``expand`` (ring-pipelined gather) or
+``expand+fold`` (both collectives decomposed into ppermute rings
+overlapped with block compute — paper Fig. 2).  ``--ckpt-dir``
 snapshots (partial BC, n_s, committed rounds) through a BCCheckpoint —
 a killed job resumes at the first uncommitted round — and TEPS is
 reported per paper Eq. 7.
@@ -23,6 +27,7 @@ import numpy as np
 
 from repro.core import betweenness_centrality
 from repro.core.bc import ENGINE_KINDS
+from repro.core.operators import OVERLAP_POLICIES
 from repro.core.distributed import distributed_betweenness_centrality
 from repro.distributed.fault_tolerance import BCCheckpoint
 from repro.graphs import grid_graph, rmat_graph, road_like_graph
@@ -38,6 +43,12 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--engine", default="dense", choices=list(ENGINE_KINDS))
     ap.add_argument("--mesh", default=None, help="distributed RxC device mesh")
+    ap.add_argument(
+        "--overlap",
+        default="none",
+        choices=list(OVERLAP_POLICIES),
+        help="distributed collective schedule (ring pipelining; needs --mesh)",
+    )
     ap.add_argument("--ckpt-dir", default=None, help="round-ledger resume dir")
     ap.add_argument("--out", default=None)
     ap.add_argument("--top", type=int, default=10)
@@ -65,9 +76,12 @@ def main() -> None:
             _, _, committed = checkpoint.load()
             print(f"resuming: {len(committed)} rounds already committed")
 
+    if args.overlap != "none" and not args.mesh:
+        raise SystemExit("--overlap is a distributed schedule; pass --mesh RxC")
+
     print(
         f"{name}: n={graph.n} m={graph.num_edges} "
-        f"heuristics={args.heuristics} engine={args.engine}"
+        f"heuristics={args.heuristics} engine={args.engine} overlap={args.overlap}"
     )
     t0 = time.time()
     if args.mesh:
@@ -84,6 +98,7 @@ def main() -> None:
             batch_size=args.batch_size,
             heuristics=args.heuristics,
             engine_kind=engine_kind,
+            overlap=args.overlap,
             checkpoint=checkpoint,
         )
         rounds = len(schedule.rounds)

@@ -288,7 +288,10 @@ def analyze_hlo_module(text: str, n_partitions_hint: int = 1) -> dict:
         result = {
             "flops": 0.0,
             "bytes": 0.0,
-            "colls": defaultdict(float),  # (class, g) -> operand bytes
+            # (class, g) -> [operand bytes, instruction-site count]; the
+            # count keeps ring-step accounting honest after aggregation
+            # (trip-count-multiplied like the bytes — see model.ring_steps)
+            "colls": defaultdict(lambda: [0.0, 0]),
             "unknown_trip_whiles": 0,
         }
         memo[name] = result  # pre-insert (cycles impossible, but cheap)
@@ -313,7 +316,9 @@ def analyze_hlo_module(text: str, n_partitions_hint: int = 1) -> dict:
                         result["flops"] += trip * c["flops"]
                         result["bytes"] += trip * c["bytes"]
                         for k, v in c["colls"].items():
-                            result["colls"][k] += trip * v
+                            ent = result["colls"][k]
+                            ent[0] += trip * v[0]
+                            ent[1] += trip * v[1]
                         result["unknown_trip_whiles"] += c["unknown_trip_whiles"]
                 continue
             if op == "conditional":
@@ -324,7 +329,9 @@ def analyze_hlo_module(text: str, n_partitions_hint: int = 1) -> dict:
                     result["flops"] += best["flops"]
                     result["bytes"] += best["bytes"]
                     for k, v in best["colls"].items():
-                        result["colls"][k] += v
+                        ent = result["colls"][k]
+                        ent[0] += v[0]
+                        ent[1] += v[1]
                 continue
             if op in _COLLECTIVES:
                 g = _collective_group_size(ins, n_partitions_hint)
@@ -351,7 +358,9 @@ def analyze_hlo_module(text: str, n_partitions_hint: int = 1) -> dict:
                             if m2 and m2.group(1) == "bf16" and n2 >= 0.9 * op_n > 0:
                                 link_b = opnd_b / 2.0
                                 break
-                result["colls"][(cls, g)] += link_b
+                ent = result["colls"][(cls, g)]
+                ent[0] += link_b
+                ent[1] += 1
                 result["bytes"] += opnd_b + out_b  # local HBM touch
                 continue
             if op == "fusion":
@@ -372,16 +381,20 @@ def analyze_hlo_module(text: str, n_partitions_hint: int = 1) -> dict:
                     result["flops"] += c["flops"]
                     result["bytes"] += c["bytes"]
                     for k, v in c["colls"].items():
-                        result["colls"][k] += v
+                        ent = result["colls"][k]
+                        ent[0] += v[0]
+                        ent[1] += v[1]
             result["bytes"] += opnd_b + out_b
         return result
 
     cost = comp_cost(entry)
     colls_flat = defaultdict(float)
     coll_records = []
-    for (cls, g), b in cost["colls"].items():
+    for (cls, g), (b, cnt) in cost["colls"].items():
         colls_flat[cls] += b
-        coll_records.append({"class": cls, "group_size": g, "operand_bytes": b})
+        coll_records.append(
+            {"class": cls, "group_size": g, "operand_bytes": b, "count": cnt}
+        )
     return {
         "flops": cost["flops"],
         "bytes": cost["bytes"],

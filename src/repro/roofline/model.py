@@ -12,12 +12,29 @@ operand bytes the HLO parser recorded (g = participant group size):
     all-reduce        2·(g-1)/g · operand
     all-to-all          (g-1)/g · operand
     collective-permute            operand
+
+Ring schedules additionally pay a per-step launch latency (α in the
+α-β model): every ring hop is a ppermute with its own synchronization,
+so a collective decomposed into k steps costs k·α + bytes/β.
+``ring_steps`` counts the hops each collective class implies,
+``ring_latency_s`` prices them, and ``overlap_step_time`` estimates the
+pipelined level time max(T_comm, T_comp) + min(T_comm, T_comp)/k that
+the ring-pipelined expand/fold schedule converges to (the barrier
+schedule pays T_comm + T_comp).
 """
 from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["V5E", "RooflineTerms", "roofline_terms", "link_bytes"]
+__all__ = [
+    "V5E",
+    "RooflineTerms",
+    "roofline_terms",
+    "link_bytes",
+    "ring_steps",
+    "ring_latency_s",
+    "overlap_step_time",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +43,7 @@ class HardwareSpec:
     peak_bf16_flops: float  # per chip
     hbm_bandwidth: float  # bytes/s per chip
     ici_link_bandwidth: float  # bytes/s per link
+    ici_step_latency_s: float = 1e-6  # per ring-hop launch/sync latency (α)
 
 
 V5E = HardwareSpec(
@@ -47,6 +65,8 @@ class RooflineTerms:
     bottleneck: str
     model_flops_total: float
     useful_fraction: float  # MODEL_FLOPS / (HLO flops × devices)
+    ring_steps: int = 0  # total ring hops implied by the collectives
+    ring_latency_s: float = 0.0  # α term: ring_steps · per-hop latency
 
     @property
     def step_time_s(self) -> float:
@@ -80,6 +100,52 @@ def link_bytes(coll_records: list[dict]) -> float:
     return total
 
 
+def ring_steps(coll_records: list[dict]) -> int:
+    """Total ring hops the recorded collectives imply (α-model step count).
+
+    A monolithic collective over a group of g devices runs a g-1-hop
+    ring internally (2·(g-1) for all-reduce = reduce-scatter +
+    all-gather); an explicit collective-permute IS one hop.  Records
+    carry a ``count`` when they aggregate several instruction sites
+    (roofline/hlo.py multiplies it by loop trip counts).  Comparing
+    this count between the barrier and pipelined lowerings of the same
+    level shows the latency-term price of the overlap schedule.
+    """
+    total = 0
+    for rec in coll_records:
+        g = max(rec.get("group_size", 1), 1)
+        sites = max(rec.get("count", 1), 1)
+        cls = rec["class"]
+        if cls == "all-reduce":
+            total += sites * 2 * (g - 1)
+        elif cls in ("all-gather", "reduce-scatter", "all-to-all"):
+            total += sites * (g - 1)
+        else:  # collective-permute, broadcast: a single hop each
+            total += sites
+    return total
+
+
+def ring_latency_s(coll_records: list[dict], hw: HardwareSpec = V5E) -> float:
+    """α term: per-hop launch latency summed over every implied ring hop."""
+    return ring_steps(coll_records) * hw.ici_step_latency_s
+
+
+def overlap_step_time(compute_s: float, collective_s: float, k: int) -> float:
+    """Pipelined level-time estimate for a k-step ring schedule.
+
+    The barrier schedule pays compute + collective in sequence.  A ring
+    schedule splits both into k per-chunk slices and overlaps slice i's
+    transfer with slice i-1's compute, so only the first (or last) slice
+    of the minor term is exposed:
+
+        max(T_comp, T_comm) + min(T_comp, T_comm) / k
+    """
+    if k <= 1:
+        return compute_s + collective_s
+    lo, hi = sorted((compute_s, collective_s))
+    return hi + lo / k
+
+
 def roofline_terms(
     hlo_terms: dict,
     n_devices: int,
@@ -89,7 +155,9 @@ def roofline_terms(
     """hlo_terms: output of analyze_hlo_module (per-device quantities)."""
     flops = hlo_terms["flops"]
     mem_bytes = hlo_terms["bytes"]
-    lb = link_bytes(hlo_terms.get("collectives", []))
+    colls = hlo_terms.get("collectives", [])
+    lb = link_bytes(colls)
+    steps = ring_steps(colls)
     compute_s = flops / hw.peak_bf16_flops
     memory_s = mem_bytes / hw.hbm_bandwidth
     collective_s = lb / hw.ici_link_bandwidth
@@ -108,4 +176,6 @@ def roofline_terms(
         bottleneck=bottleneck,
         model_flops_total=model_flops_total,
         useful_fraction=useful,
+        ring_steps=steps,
+        ring_latency_s=steps * hw.ici_step_latency_s,
     )

@@ -118,6 +118,48 @@ def test_dependency_spmm_partial_matches_ref(m, k, s, adj_dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("m,k,s", RECT_SHAPES)
+@pytest.mark.parametrize("adj_dtype", [jnp.float32, jnp.bfloat16])
+def test_frontier_partial_acc_chains_chunks(m, k, s, adj_dtype):
+    """Chunked-operand mode: threading ``acc`` over column chunks equals
+    one whole-block partial (the ring-pipelined expand contract)."""
+    lvl = 2
+    rng = np.random.default_rng(3 * m + k + s)
+    A = jnp.asarray((rng.random((m, 2 * k)) < 0.3), adj_dtype)
+    sigma = jnp.asarray(rng.integers(0, 5, (2 * k, s)), jnp.float32)
+    depth = jnp.asarray(rng.integers(-1, lvl + 3, (2 * k, s)), jnp.int32)
+    want = ops.frontier_spmm_partial(A, sigma, depth, lvl, interpret=True)
+    acc = jnp.zeros((m, s), jnp.float32)
+    for c in range(2):
+        sl = slice(c * k, (c + 1) * k)
+        acc = ops.frontier_spmm_partial(
+            A[:, sl], sigma[sl], depth[sl], lvl, acc=acc, interpret=True
+        )
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,s", RECT_SHAPES)
+def test_dependency_partial_acc_chains_chunks(m, k, s):
+    lvl = 1
+    rng = np.random.default_rng(4 * m + k + s)
+    A = jnp.asarray((rng.random((m, 2 * k)) < 0.3), jnp.float32)
+    sigma = jnp.asarray(np.maximum(rng.integers(0, 5, (2 * k, s)), 1), jnp.float32)
+    depth = jnp.asarray(rng.integers(-1, lvl + 3, (2 * k, s)), jnp.int32)
+    delta = jnp.asarray(rng.random((2 * k, s)), jnp.float32)
+    omega = jnp.asarray(rng.integers(0, 3, 2 * k), jnp.float32)
+    want = ops.dependency_spmm_partial(
+        A, sigma, depth, delta, omega, lvl, interpret=True
+    )
+    acc = jnp.zeros((m, s), jnp.float32)
+    for c in range(2):
+        sl = slice(c * k, (c + 1) * k)
+        acc = ops.dependency_spmm_partial(
+            A[:, sl], sigma[sl], depth[sl], delta[sl], omega[sl], lvl,
+            acc=acc, interpret=True,
+        )
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("V,D,B,L", [(32, 8, 4, 3), (64, 128, 8, 5), (128, 96, 16, 10), (1000, 64, 32, 26)])
 @pytest.mark.parametrize("table_dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("weighted", [False, True])

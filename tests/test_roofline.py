@@ -6,7 +6,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.roofline.hlo import analyze_hlo_module
-from repro.roofline.model import link_bytes, roofline_terms
+from repro.roofline.model import (
+    V5E,
+    link_bytes,
+    overlap_step_time,
+    ring_latency_s,
+    ring_steps,
+    roofline_terms,
+)
 
 
 def _compile(fn, *specs, in_shardings=None):
@@ -102,3 +109,61 @@ def test_roofline_terms_shape():
     assert abs(t.collective_s - 1.5) < 1e-9  # 2*(4-1)/4 * 50e9 / 50e9
     assert t.bottleneck == "collective"
     assert abs(t.useful_fraction - 1.0) < 1e-9
+    assert t.ring_steps == 6  # all-reduce over g=4: 2*(g-1) hops
+    assert abs(t.ring_latency_s - 6 * V5E.ici_step_latency_s) < 1e-15
+
+
+def test_ring_step_counts_by_class():
+    recs = [
+        {"class": "all-gather", "group_size": 4, "operand_bytes": 1.0},
+        {"class": "reduce-scatter", "group_size": 4, "operand_bytes": 1.0},
+        {"class": "all-reduce", "group_size": 8, "operand_bytes": 1.0},
+        {"class": "collective-permute", "group_size": 4, "operand_bytes": 1.0},
+    ]
+    # (4-1) + (4-1) + 2*(8-1) + 1
+    assert ring_steps(recs) == 3 + 3 + 14 + 1
+    assert abs(ring_latency_s(recs) - 21 * V5E.ici_step_latency_s) < 1e-15
+
+
+def test_overlap_step_time_model():
+    # barrier (k=1) is strictly additive
+    assert abs(overlap_step_time(3.0, 1.0, 1) - 4.0) < 1e-12
+    # deep ring exposes only the dominant term (+ one slice of the minor)
+    assert abs(overlap_step_time(3.0, 1.0, 4) - (3.0 + 0.25)) < 1e-12
+    assert abs(overlap_step_time(1.0, 3.0, 4) - (3.0 + 0.25)) < 1e-12
+    # pipelining never loses to the barrier schedule
+    for k in (2, 4, 16):
+        assert overlap_step_time(2.0, 2.0, k) <= 4.0
+
+
+def test_ring_lowering_counted_by_parser():
+    """A hand-rolled ppermute ring round-trips through the HLO parser."""
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices")
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    perm = [(s, (s + 1) % 8) for s in range(8)]
+
+    def body(x):
+        acc = x
+        for _ in range(7):
+            x = jax.lax.ppermute(x, "data", perm)
+            acc = acc + x
+        return acc
+
+    fn = jax.jit(
+        shard_map(
+            body, mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False
+        )
+    )
+    text = fn.lower(jax.ShapeDtypeStruct((64, 16), jnp.float32)).compile().as_text()
+    terms = analyze_hlo_module(text)
+    permutes = [
+        r for r in terms["collectives"] if r["class"] == "collective-permute"
+    ]
+    assert permutes, text[:2000]
+    assert ring_steps(permutes) >= 7
