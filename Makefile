@@ -10,11 +10,13 @@ test: verify
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
 
-# Overlap-schedule subset (fig9 + table3 analogues): writes
-# BENCH_overlap.json — the machine-readable perf trajectory future PRs
-# regress against.  CI runs this as its bench smoke target.
+# Overlap + sparse subsets (fig9 + table3 + fig4 analogues): write
+# BENCH_overlap.json and BENCH_sparse.json — the machine-readable perf
+# trajectory future PRs regress against.  CI runs this as its bench
+# smoke target.
 bench-smoke:
 	PYTHONPATH=src:. python benchmarks/run.py --only fig9
 	PYTHONPATH=src:. python benchmarks/run.py --only table3
+	PYTHONPATH=src:. python benchmarks/run.py --only fig4
 
 .PHONY: verify test bench bench-smoke

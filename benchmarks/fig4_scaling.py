@@ -1,27 +1,112 @@
 """Fig. 4-8 analogue: strong/weak scaling of distributed MGBC.
 
-Two views:
+Three views:
   (a) measured wall time on 1..8 host devices (CPU — trends only);
   (b) model-based scaling for the production mesh sizes from the
       dry-run's collective/compute terms (the paper's communication-vs-
       computation breakdown of Fig. 5): per-level link bytes fall as
       1/√p per the 2-D decomposition while per-device compute falls as
-      1/p — reproducing the paper's crossover.
+      1/p — reproducing the paper's crossover;
+  (c) dense-block vs blocked-sparse adjacency: nonzero-tile counts,
+      per-level A-stream bytes, and per-round wall time of the
+      ``pallas_sparse`` engine vs the dense engines on an RMAT graph —
+      written to ``BENCH_sparse.json`` as the machine-readable
+      regression baseline for the O(nnz-tiles) memory claim.
 """
 from __future__ import annotations
+
+import json
+import os
 
 from benchmarks.common import emit, ensure_devices, make_mesh, time_call
 
 ensure_devices(8)
 
-import jax
+import numpy as np
 
-from repro.core.distributed import distributed_betweenness_centrality
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import (
+    distributed_betweenness_centrality,
+    distributed_graph_arrays,
+    make_distributed_round_fn,
+)
+from repro.core.scheduler import build_schedule
 from repro.graphs import rmat_graph
+from repro.graphs.partition import partition_2d
+from repro.roofline.model import adjacency_stream_bytes
+
+BENCH_JSON = os.environ.get("BENCH_SPARSE_JSON", "BENCH_sparse.json")
+
+SPARSE_MESH = (2, 4)
+SPARSE_TILE = 16  # resolves RMAT sparsity at benchmark scale (128 = prod)
+NUM_LEVELS = 10
 
 
 def _mesh(shape):
     return make_mesh(shape, ("data", "model")[: len(shape)])
+
+
+def _sparse_bench() -> dict:
+    """(c): dense vs blocked-sparse A-stream + per-round wall time."""
+    g = rmat_graph(10, 4, seed=0)
+    R, C = SPARSE_MESH
+    schedule, _, residual, _ = build_schedule(g, batch_size=16)
+    part = partition_2d(residual, R, C)
+    mesh = _mesh(SPARSE_MESH)
+    tile = (SPARSE_TILE, SPARSE_TILE)
+    layout = part.blocked_sparse(*tile)
+
+    nnz_max = int(layout.nnz_tiles.max())
+    dense_tiles = layout.num_tile_rows * layout.num_tile_cols
+    bytes_dense = adjacency_stream_bytes("pallas", R=R, C=C, chunk=part.chunk)
+    bytes_sparse = adjacency_stream_bytes(
+        "pallas_sparse",
+        R=R,
+        C=C,
+        chunk=part.chunk,
+        nnz_tiles=nnz_max,
+        bm=tile[0],
+        bk=tile[1],
+    )
+    record: dict = {
+        "graph": {"name": "rmat_s10_ef4", "n": g.n, "m": int(g.num_edges)},
+        "mesh": f"{R}x{C}",
+        "tile": list(tile),
+        "nnz_tiles_max_per_device": nnz_max,
+        "nnz_tiles_total": int(layout.nnz_tiles.sum()),
+        "dense_tiles_per_device": dense_tiles,
+        "a_stream_bytes_per_level": {
+            "pallas": bytes_dense,
+            "pallas_sparse": bytes_sparse,
+        },
+        "adjacency_stored_bytes_per_device": layout.adjacency_bytes(),
+        "round_wall_s": {},
+    }
+    # per-round wall time through one compiled round call (Pallas engines
+    # run in interpret mode on CPU — structure, not speed, is the signal)
+    s, k = schedule.batch_size, schedule.derived_per_round
+    omega = jnp.zeros(part.n_pad, jnp.float32)
+    sources = jnp.asarray(np.arange(s, dtype=np.int32))[None]
+    derived = jnp.full((1, k, 3), -1, jnp.int32)
+    for engine_kind in ("sparse", "pallas", "pallas_sparse"):
+        fn = make_distributed_round_fn(
+            part, mesh, num_levels=NUM_LEVELS, engine_kind=engine_kind
+        )
+        gargs = distributed_graph_arrays(
+            part, engine_kind, tile=tile if engine_kind == "pallas_sparse" else None
+        )
+        sec = time_call(lambda: fn(*gargs, omega, sources, derived), warmup=1, iters=2)
+        record["round_wall_s"][engine_kind] = sec
+        emit(f"fig4/sparse_round_{engine_kind}", sec * 1e6, f"levels={NUM_LEVELS}")
+    emit(
+        "fig4/sparse_a_stream",
+        0.0,
+        f"dense_MB={bytes_dense/1e6:.3f};sparse_MB={bytes_sparse/1e6:.3f};"
+        f"nnz_tiles={nnz_max}/{dense_tiles}",
+    )
+    return record
 
 
 def run() -> None:
@@ -66,6 +151,13 @@ def run() -> None:
             sec * 1e6,
             f"scale={scale};n={gw.n};m={gw.num_edges}",
         )
+
+    # (c) dense vs blocked-sparse adjacency → BENCH_sparse.json
+    if jax.device_count() >= 8:
+        record = _sparse_bench()
+        with open(BENCH_JSON, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        emit("fig4/bench_json", 0.0, f"wrote={BENCH_JSON}")
 
 
 if __name__ == "__main__":

@@ -52,6 +52,8 @@ distributed/fault_tolerance.py).
 """
 from __future__ import annotations
 
+import logging
+
 import numpy as np
 
 import jax
@@ -63,38 +65,236 @@ from repro.core.driver import BCDriver, traversal_round
 from repro.core.operators import (
     DistributedOperator,
     DistributedPallasOperator,
+    DistributedPallasSparseOperator,
     normalize_overlap,
 )
 from repro.core.scheduler import Schedule, build_schedule
 from repro.graphs.graph import Graph
 from repro.graphs.partition import TwoDPartition, partition_2d
+from repro.roofline.model import (
+    V5E,
+    auto_overlap_policy,
+    device_hbm_footprint,
+)
 
 __all__ = [
+    "DIST_ENGINE_KINDS",
     "make_distributed_round_fn",
     "distributed_graph_arrays",
     "distributed_betweenness_centrality",
     "one_degree_reduce_distributed",
+    "resolve_overlap",
+    "estimate_device_footprint",
+    "check_device_memory",
 ]
+
+logger = logging.getLogger(__name__)
+
+#: block-local compute engines of the distributed path: arc-list
+#: gather/segment-sum, fused dense-block Pallas (f32 / bf16 A-stream),
+#: or the blocked-sparse (BCSR tile list) Pallas engine.
+DIST_ENGINE_KINDS = ("sparse", "pallas", "pallas_bf16", "pallas_sparse")
 
 
 def distributed_graph_arrays(
-    partition: TwoDPartition, engine_kind: str, overlap: str = "none"
+    partition: TwoDPartition,
+    engine_kind: str,
+    overlap: str = "none",
+    tile: tuple[int, int] | None = None,
 ) -> tuple[jnp.ndarray, ...]:
     """Device arrays for the graph operands of a distributed round fn.
 
     The single source of the engine_kind × overlap → operand-layout
     mapping (entry point, benchmarks and tests all lower the same
     layout): sparse uses the flat arc arrays, or the ring-sliced layout
-    under a ring overlap policy; the Pallas engines use dense blocks
-    (bf16 for ``"pallas_bf16"``).
+    under a ring overlap policy; the dense Pallas engines use dense
+    blocks (bf16 for ``"pallas_bf16"``); ``"pallas_sparse"`` uses the
+    blocked tile layout (full tile list, or per-ring-chunk slices under
+    a ring policy) — always (tiles, tile_rows, tile_cols).  ``tile``
+    overrides the blocked-sparse (bm, bk) tile shape (default: the
+    largest lane-friendly divisor of ``chunk`` ≤ 128).
     """
     if engine_kind == "sparse":
         if normalize_overlap(overlap) != "none":
             ring_src, ring_dst = partition.ring_arcs()
             return (jnp.asarray(ring_src), jnp.asarray(ring_dst))
         return (jnp.asarray(partition.src_local), jnp.asarray(partition.dst_local))
+    if engine_kind == "pallas_sparse":
+        ring = normalize_overlap(overlap) != "none"
+        bm, bk = tile if tile is not None else (None, None)
+        layout = partition.blocked_sparse(bm, bk, ring=ring)
+        if ring:
+            return (
+                jnp.asarray(layout.ring_tiles),
+                jnp.asarray(layout.ring_tile_rows),
+                jnp.asarray(layout.ring_tile_cols),
+            )
+        return (
+            jnp.asarray(layout.tiles),
+            jnp.asarray(layout.tile_rows),
+            jnp.asarray(layout.tile_cols),
+        )
     dt = jnp.bfloat16 if engine_kind == "pallas_bf16" else jnp.float32
     return (jnp.asarray(partition.dense_blocks(np.float32), dt),)
+
+
+def estimate_device_footprint(
+    partition: TwoDPartition,
+    engine_kind: str,
+    batch_size: int,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    overlap: str = "none",
+    tile_counts: dict | None = None,
+) -> dict:
+    """Per-device adjacency + state HBM bytes for one engine (pre-compile).
+
+    Thin adapter over :func:`repro.roofline.model.device_hbm_footprint`
+    filling in the partition-derived quantities; prices what the chosen
+    ``overlap`` actually allocates, not a lower bound.  For the
+    blocked-sparse engine that is the layout's *stored* tile count —
+    true nonzero tiles plus row-complete fillers, pad-to-worst-cell,
+    and (under a ring policy) the R per-slot slices
+    (:meth:`TwoDPartition.blocked_sparse_counts`, no tile data
+    materialized; pass a precomputed ``tile_counts`` to reuse one
+    counting pass across resolve/guard).  For the arc-list engine under
+    a ring policy it is the 2·R·max_ring_arcs ring layout
+    (:meth:`TwoDPartition.ring_arcs_max`), not the flat arc arrays.
+    ``bm``/``bk`` override the default tile shape; pass the same
+    ``tile`` the engine will be built with.
+    """
+    ring = normalize_overlap(overlap) != "none"
+    kw: dict = {}
+    if engine_kind == "pallas_sparse":
+        counts = tile_counts or partition.blocked_sparse_counts(bm, bk)
+        kw = dict(
+            nnz_tiles=counts["stored_tiles_ring" if ring else "stored_tiles_full"],
+            bm=counts["bm"],
+            bk=counts["bk"],
+        )
+    elif engine_kind == "sparse":
+        max_arcs = int(partition.src_local.shape[-1])
+        if ring:
+            max_arcs = partition.R * partition.ring_arcs_max()
+        kw = dict(max_arcs=max_arcs)
+    return device_hbm_footprint(
+        engine_kind,
+        R=partition.R,
+        C=partition.C,
+        chunk=partition.chunk,
+        batch_size=batch_size,
+        **kw,
+    )
+
+
+def check_device_memory(
+    partition: TwoDPartition,
+    engine_kind: str,
+    batch_size: int,
+    hbm_limit_bytes: float | None,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    overlap: str = "none",
+    tile_counts: dict | None = None,
+) -> dict:
+    """Fail-fast memory guard: error *before* compiling instead of
+    OOMing mid-round, with an actionable suggestion.  Returns the
+    footprint record (always computed, so callers can report it)."""
+    foot = estimate_device_footprint(
+        partition, engine_kind, batch_size,
+        bm=bm, bk=bk, overlap=overlap, tile_counts=tile_counts,
+    )
+    logger.info(
+        "per-device HBM footprint (%s): adjacency %.3f GiB + state %.3f GiB "
+        "= %.3f GiB%s",
+        engine_kind,
+        foot["adjacency_bytes"] / 2**30,
+        foot["state_bytes"] / 2**30,
+        foot["total_bytes"] / 2**30,
+        ""
+        if hbm_limit_bytes is None
+        else f" (budget {hbm_limit_bytes/2**30:.2f} GiB)",
+    )
+    if hbm_limit_bytes is not None and foot["total_bytes"] > hbm_limit_bytes:
+        suggestions = []
+        if engine_kind in ("pallas", "pallas_bf16"):
+            sparse_foot = estimate_device_footprint(
+                partition, "pallas_sparse", batch_size,
+                bm=bm, bk=bk, overlap=overlap, tile_counts=tile_counts,
+            )
+            if sparse_foot["total_bytes"] <= hbm_limit_bytes:
+                suggestions.append(
+                    "engine_kind='pallas_sparse' (blocked-sparse adjacency: "
+                    f"{sparse_foot['total_bytes']/2**30:.2f} GiB/device)"
+                )
+        suggestions.append("a larger mesh (per-device footprint scales ~1/p)")
+        raise MemoryError(
+            f"engine_kind={engine_kind!r} needs "
+            f"{foot['total_bytes']/2**30:.2f} GiB/device "
+            f"(adjacency {foot['adjacency_bytes']/2**30:.2f} GiB + state "
+            f"{foot['state_bytes']/2**30:.2f} GiB) but the HBM budget is "
+            f"{hbm_limit_bytes/2**30:.2f} GiB; try " + " or ".join(suggestions)
+        )
+    return foot
+
+
+def resolve_overlap(
+    overlap: str | None,
+    partition: TwoDPartition,
+    engine_kind: str,
+    batch_size: int,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    tile_counts: dict | None = None,
+    hw=V5E,
+) -> str:
+    """Resolve ``overlap="auto"`` from the roofline's per-level estimate.
+
+    Prices one level's block compute (engine-dependent FLOPs/A-stream)
+    and expand/fold collective bytes with the α-β link model, then picks
+    the schedule :func:`repro.roofline.model.auto_overlap_policy`
+    estimates fastest.  The choice is logged (logging INFO + returned);
+    passing an explicit policy bypasses this entirely.  ``bm``/``bk``:
+    the blocked-sparse tile shape the engine will actually be built with
+    (defaults to the partition default), so the estimate prices the real
+    layout.
+    """
+    if overlap != "auto":
+        return normalize_overlap(overlap)
+    R, C, chunk, s = partition.R, partition.C, partition.chunk, batch_size
+    from repro.roofline.model import adjacency_stream_bytes
+
+    if engine_kind in ("pallas", "pallas_bf16"):
+        flops = 2.0 * (C * chunk) * (R * chunk) * s
+        a_bytes = adjacency_stream_bytes(engine_kind, R=R, C=C, chunk=chunk)
+    elif engine_kind == "pallas_sparse":
+        counts = tile_counts or partition.blocked_sparse_counts(bm, bk)
+        bm, bk, nnz = counts["bm"], counts["bk"], counts["nnz_max"]
+        flops = 2.0 * nnz * bm * bk * s
+        a_bytes = adjacency_stream_bytes(
+            engine_kind, R=R, C=C, chunk=chunk, nnz_tiles=nnz, bm=bm, bk=bk
+        )
+    else:  # arc-list: one gather+add per arc per source column
+        max_arcs = int(partition.src_local.shape[-1])
+        flops = 2.0 * max_arcs * s
+        a_bytes = adjacency_stream_bytes(
+            engine_kind, R=R, C=C, chunk=chunk, max_arcs=max_arcs
+        )
+    compute_s = max(flops / hw.peak_bf16_flops, a_bytes / hw.hbm_bandwidth)
+    n_operands = 2 if engine_kind != "sparse" else 1  # forward exchange set
+    expand_s = (R - 1) * chunk * s * 4 * n_operands / hw.ici_link_bandwidth
+    fold_s = (C - 1) / C * (C * chunk) * s * 4 / hw.ici_link_bandwidth
+    policy, estimates = auto_overlap_policy(compute_s, expand_s, fold_s, R, C, hw=hw)
+    logger.info(
+        "overlap='auto' -> %r for engine %s (per-level estimates: %s)",
+        policy,
+        engine_kind,
+        {k: f"{v*1e6:.2f}us" for k, v in estimates.items()},
+    )
+    return policy
 
 
 def one_degree_reduce_distributed(
@@ -185,6 +385,18 @@ def make_distributed_round_fn(
        omega, sources, derived)  ->  same outputs.
     Build the blocks with :meth:`TwoDPartition.dense_blocks`.
 
+    With ``engine_kind="pallas_sparse"`` (blocked-sparse BCSR local
+    compute) the graph operands are the tile layout of
+    :meth:`TwoDPartition.blocked_sparse`:
+      (tiles      f32 [R, C, T, bm, bk]  — sharded (row, col),
+       tile_rows  i32 [R, C, T],
+       tile_cols  i32 [R, C, T],
+       omega, sources, derived)  ->  same outputs;
+    under a ring overlap policy the three arrays are the per-ring-chunk
+    slices ([R, C, R, Tr, ...], ``blocked_sparse(ring=True)``) — same
+    arity, one extra slot dim.  Per-device adjacency memory is
+    O(nnz_tiles·bm·bk) instead of the dense engines' O(n_pad²/p).
+
     ``fuse_backward_payload`` keeps σ-frontier and g exchanges as a single
     gathered tensor each (the paper's overlap/fusion idea, §3.2 Fig. 2);
     setting it False splits the backward gather into two half-width
@@ -207,10 +419,10 @@ def make_distributed_round_fn(
         raise ValueError(
             f"mesh grid {(R, C)} != partition grid {(partition.R, partition.C)}"
         )
-    if engine_kind not in ("sparse", "pallas", "pallas_bf16"):
+    if engine_kind not in DIST_ENGINE_KINDS:
         raise ValueError(f"unknown distributed engine {engine_kind!r}")
     overlap = normalize_overlap(overlap)
-    use_pallas = engine_kind != "sparse"
+    use_pallas = engine_kind != "sparse"  # any fused-kernel engine
     if use_pallas and not fuse_backward_payload:
         raise ValueError("split backward payload is a sparse-engine benchmark mode")
     if overlap != "none" and not fuse_backward_payload:
@@ -237,7 +449,40 @@ def make_distributed_round_fn(
         )
         return bc_owned[None], ns[None], roots[None]
 
-    if use_pallas:
+    if engine_kind == "pallas_sparse":
+        # (tiles, tile_rows, tile_cols): [R, C, T, bm, bk]-shaped full
+        # layout, or [R, C, R, Tr, bm, bk]-shaped ring slices — the two
+        # layouts have the same arity, so one body serves both and the
+        # static ``overlap`` decides which operator slots they fill.
+        ring = overlap != "none"
+
+        def body(tiles, trows, tcols, omega, sources, derived):
+            local = (tiles[0, 0], trows[0, 0], tcols[0, 0])
+            kw = (
+                dict(ring_tiles=local[0], ring_tile_rows=local[1], ring_tile_cols=local[2])
+                if ring
+                else dict(tiles=local[0], tile_rows=local[1], tile_cols=local[2])
+            )
+            op = DistributedPallasSparseOperator(
+                chunk=chunk,
+                R=R,
+                C=C,
+                row_axis=row_axis,
+                col_axis=col_axis,
+                interpret=interpret,
+                overlap=overlap,
+                sync_axes=sync_axes,
+                **kw,
+            )
+            return round_body(op, omega, sources, derived)
+
+        nd = 6 if ring else 5  # tiles rank; index arrays are nd - 2
+        graph_specs = (
+            P(row_axis, col_axis, *([None] * (nd - 2))),
+            P(row_axis, col_axis, *([None] * (nd - 4))),
+            P(row_axis, col_axis, *([None] * (nd - 4))),
+        )
+    elif use_pallas:
 
         def body(blocks, omega, sources, derived):
             op = DistributedPallasOperator(
@@ -325,6 +570,8 @@ def distributed_betweenness_centrality(
     num_levels: int | None = None,
     engine_kind: str = "sparse",
     overlap: str = "none",
+    tile: tuple[int, int] | None = None,
+    hbm_limit_bytes: float | None = None,
     ledger=None,
     checkpoint=None,
 ) -> tuple[np.ndarray, Schedule]:
@@ -334,17 +581,37 @@ def distributed_betweenness_centrality(
     :class:`repro.core.driver.BCDriver`; the replica merge sums the
     replica dim after the loop so a straggling/preempted replica's round
     can be re-issued (fault tolerance path, distributed/fault_tolerance.py).
-    ``engine_kind`` selects the block-local compute: "sparse" (arc list)
-    or "pallas"/"pallas_bf16" (fused dense-block kernels); ``overlap``
-    selects the collective schedule (barrier vs ring-pipelined — see
-    :func:`make_distributed_round_fn`).
+    ``engine_kind`` selects the block-local compute
+    (:data:`DIST_ENGINE_KINDS`: arc-list "sparse", fused dense-block
+    "pallas"/"pallas_bf16", or blocked-sparse "pallas_sparse");
+    ``overlap`` selects the collective schedule (barrier vs
+    ring-pipelined — see :func:`make_distributed_round_fn`), with
+    ``"auto"`` resolved from the roofline estimate
+    (:func:`resolve_overlap`); ``tile`` overrides the blocked-sparse
+    (bm, bk) tile shape.  ``hbm_limit_bytes`` arms the fail-fast
+    memory guard (:func:`check_device_memory`): the per-device
+    adjacency + state footprint is checked *before* compilation and an
+    over-budget engine errors with a suggestion instead of OOMing
+    mid-round.
     """
-    overlap = normalize_overlap(overlap)
     schedule, prep, residual, omega_i = build_schedule(
         graph, batch_size=batch_size, heuristics=heuristics
     )
     R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
     part = partition_2d(residual, R, C)
+    bm, bk = tile if tile is not None else (None, None)
+    # one host counting pass serves the auto-overlap estimate, the memory
+    # guard, and (conceptually) the layout build that follows
+    tile_counts = (
+        part.blocked_sparse_counts(bm, bk) if engine_kind == "pallas_sparse" else None
+    )
+    overlap = resolve_overlap(
+        overlap, part, engine_kind, batch_size, bm=bm, bk=bk, tile_counts=tile_counts
+    )
+    check_device_memory(
+        part, engine_kind, batch_size, hbm_limit_bytes,
+        bm=bm, bk=bk, overlap=overlap, tile_counts=tile_counts,
+    )
 
     round_fn = make_distributed_round_fn(
         part,
@@ -363,7 +630,7 @@ def distributed_betweenness_centrality(
     # chunk ids are contiguous in vertex order, so identity layout works.
     omega_dev = jnp.asarray(omega_pad)
 
-    graph_args = distributed_graph_arrays(part, engine_kind, overlap)
+    graph_args = distributed_graph_arrays(part, engine_kind, overlap, tile=tile)
 
     def block_fn(sources, derived):
         return round_fn(*graph_args, omega_dev, sources, derived)

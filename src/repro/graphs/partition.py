@@ -28,7 +28,86 @@ import numpy as np
 
 from repro.graphs.graph import Graph
 
-__all__ = ["TwoDPartition", "partition_2d", "partition_arcs_2d"]
+__all__ = [
+    "TwoDPartition",
+    "BlockedSparseLayout",
+    "partition_2d",
+    "partition_arcs_2d",
+    "default_tile_dim",
+]
+
+
+def default_tile_dim(chunk: int, preferred: int = 128) -> int:
+    """Largest divisor of ``chunk`` ≤ ``preferred``, preferring MXU-lane
+    multiples (8).  Tile dims must divide ``chunk`` so ring-chunk slicing
+    lands exactly on chunk boundaries (see :meth:`TwoDPartition.blocked_sparse`)."""
+    divisors = [d for d in range(1, min(chunk, preferred) + 1) if chunk % d == 0]
+    lane_aligned = [d for d in divisors if d % 8 == 0]
+    return max(lane_aligned or divisors)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockedSparseLayout:
+    """Tiled block-compressed (BCSR-style) per-device adjacency layout.
+
+    Each 2-D device block A[rows_i, cols_j] ([C·chunk, R·chunk]) is cut
+    into a grid of (bm × bk) tiles and only nonzero tiles are stored —
+    per-device adjacency memory and A-stream HBM traffic become
+    O(nnz_tiles · bm · bk) instead of O(n_pad²/p).  Tiles are sorted by
+    output tile-row so a flattened-nnz Pallas grid can accumulate one
+    tile-row at a time (kernels/blocked_spmm.py); every tile-row holds at
+    least one (possibly all-zero filler) tile so every output block is
+    written, and cells are padded with trailing zero tiles on the last
+    row to a uniform count for shard_map.
+
+    Attributes:
+      bm, bk:     tile shape (rows × cols); both divide ``chunk``.
+      tiles:      [R, C, T, bm, bk] tile data (0/1 values).
+      tile_rows:  i32 [R, C, T] output tile-row index of each stored tile
+                  (into the [C·chunk/bm] grid), non-decreasing along T.
+      tile_cols:  i32 [R, C, T] operand tile-col index (into [R·chunk/bk]).
+      nnz_tiles:  i64 [R, C] true nonzero-tile count per cell (excludes
+                  fillers/padding — the memory-model quantity).
+      ring_*:     per-ring-chunk slices for the pipelined expand schedule
+                  (``ring=True``): slot r of [R, C, R, Tr, ...] holds the
+                  cell's tiles whose source columns lie in grid-row r's
+                  chunk, ``ring_tile_cols`` re-based to [0, chunk/bk).
+                  Same row-sorted / row-complete / padded invariants per
+                  slot.  None when built with ``ring=False``.
+    """
+
+    bm: int
+    bk: int
+    R: int
+    C: int
+    chunk: int
+    tiles: np.ndarray
+    tile_rows: np.ndarray
+    tile_cols: np.ndarray
+    nnz_tiles: np.ndarray
+    ring_tiles: np.ndarray | None = None
+    ring_tile_rows: np.ndarray | None = None
+    ring_tile_cols: np.ndarray | None = None
+
+    @property
+    def num_tile_rows(self) -> int:
+        return self.C * self.chunk // self.bm
+
+    @property
+    def num_tile_cols(self) -> int:
+        return self.R * self.chunk // self.bk
+
+    def adjacency_bytes(self, dtype_bytes: int = 4) -> int:
+        """Stored per-device adjacency bytes (tile data + index maps) —
+        the layout actually materialized, padding included."""
+        arrs = (
+            (self.ring_tiles, self.ring_tile_rows, self.ring_tile_cols)
+            if self.ring_tiles is not None
+            else (self.tiles, self.tile_rows, self.tile_cols)
+        )
+        per_dev = arrs[0].size // (self.R * self.C) * dtype_bytes
+        per_dev += sum(a.size // (self.R * self.C) * 4 for a in arrs[1:])
+        return per_dev
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +218,202 @@ class TwoDPartition:
                 valid = self.dst_local[i, j] != sentinel
                 blocks[i, j, self.dst_local[i, j, valid], self.src_local[i, j, valid]] = 1
         return blocks
+
+    def _cell_arcs(self, i: int, j: int) -> tuple[np.ndarray, np.ndarray]:
+        """True (dst_local, src_local) arc pairs of one grid cell."""
+        valid = self.dst_local[i, j] != self.C * self.chunk
+        return self.dst_local[i, j][valid], self.src_local[i, j][valid]
+
+    def nnz_tile_counts(self, bm: int | None = None, bk: int | None = None) -> np.ndarray:
+        """int64 [R, C] nonzero (bm × bk)-tile count per device block —
+        the O(nnz-tiles) quantity of the blocked-sparse memory model,
+        computable without materializing any tile data (memory guard /
+        roofline path)."""
+        bm = default_tile_dim(self.chunk) if bm is None else bm
+        bk = default_tile_dim(self.chunk) if bk is None else bk
+        num_tc = self.R * self.chunk // bk
+        counts = np.zeros((self.R, self.C), np.int64)
+        for i in range(self.R):
+            for j in range(self.C):
+                d, s = self._cell_arcs(i, j)
+                counts[i, j] = np.unique((d // bm) * num_tc + (s // bk)).size
+        return counts
+
+    def ring_arcs_max(self, arc_pad_multiple: int = 8) -> int:
+        """``max_ring_arcs`` of :meth:`ring_arcs` without materializing
+        the layout — the worst (cell, slot) arc count, pad included.
+        The ring arc layout allocates 2 · R · max_ring_arcs i32 per
+        device (vs 2 · max_arcs flat), which is what the memory guard
+        must price under a ring overlap policy."""
+        max_ring = 1
+        for i in range(self.R):
+            for j in range(self.C):
+                _, s = self._cell_arcs(i, j)
+                if s.size:
+                    slots = np.bincount(s // self.chunk, minlength=self.R)
+                    max_ring = max(max_ring, int(slots.max()))
+        return max_ring + (-max_ring) % arc_pad_multiple
+
+    def blocked_sparse_counts(
+        self, bm: int | None = None, bk: int | None = None
+    ) -> dict:
+        """Exact stored-tile accounting of :meth:`blocked_sparse` (both
+        the full and ring forms, one pass) without materializing tile
+        data (memory guard / roofline path).
+
+        The shipped layout stores more than the true nonzero tiles: one
+        zero filler per empty tile-row (row-complete invariant), padding
+        to the worst cell's count (shard_map uniformity), and — in the
+        ring form — R per-slot slices each carrying its own fillers and
+        global padding.  ``bytes_full``/``bytes_ring`` match
+        :meth:`BlockedSparseLayout.adjacency_bytes` exactly.
+        """
+        bm = default_tile_dim(self.chunk) if bm is None else bm
+        bk = default_tile_dim(self.chunk) if bk is None else bk
+        R, C, chunk = self.R, self.C, self.chunk
+        num_tr = C * chunk // bm
+        num_tc = R * chunk // bk
+        cpk = chunk // bk
+        nnz_max = nnz_total = full_max = ring_max = 0
+        for i in range(R):
+            for j in range(C):
+                d, s = self._cell_arcs(i, j)
+                key = (d // bm) * num_tc + (s // bk)
+                uniq = np.unique(key)
+                r_u, c_u = uniq // num_tc, uniq % num_tc
+                nnz_max = max(nnz_max, uniq.size)
+                nnz_total += uniq.size
+                full_max = max(full_max, uniq.size + num_tr - np.unique(r_u).size)
+                for r in range(R):
+                    rows_r = r_u[(c_u // cpk) == r]
+                    ring_max = max(
+                        ring_max, rows_r.size + num_tr - np.unique(rows_r).size
+                    )
+        stored_full = max(full_max, 1)
+        stored_ring = R * max(ring_max, 1)
+        per_tile = bm * bk * 4 + 8
+        return {
+            "bm": bm,
+            "bk": bk,
+            "nnz_max": nnz_max,
+            "nnz_total": nnz_total,
+            "stored_tiles_full": stored_full,
+            "stored_tiles_ring": stored_ring,
+            "bytes_full": stored_full * per_tile,
+            "bytes_ring": stored_ring * per_tile,
+        }
+
+    def blocked_sparse(
+        self,
+        bm: int | None = None,
+        bk: int | None = None,
+        *,
+        ring: bool = False,
+        dtype=np.float32,
+    ) -> BlockedSparseLayout:
+        """Build the tiled block-compressed layout (see BlockedSparseLayout).
+
+        ``bm``/``bk`` must divide ``chunk`` (defaults: the largest
+        lane-friendly divisor ≤ 128) so the tile grid is aligned with
+        both the fold-partial rows ([C·chunk]) and — for ``ring=True`` —
+        the per-ring-chunk source slicing of the pipelined expand.
+        """
+        bm = default_tile_dim(self.chunk) if bm is None else bm
+        bk = default_tile_dim(self.chunk) if bk is None else bk
+        if self.chunk % bm or self.chunk % bk:
+            raise ValueError(
+                f"tile dims ({bm}, {bk}) must divide chunk={self.chunk} "
+                "(ring-chunk slicing needs tile-aligned chunk boundaries)"
+            )
+        R, C, chunk = self.R, self.C, self.chunk
+        num_tr = C * chunk // bm
+        num_tc = R * chunk // bk
+        cpk = chunk // bk  # tile-cols per ring chunk
+
+        def materialize(entries, t_max):
+            """entries[i][j] = (rows, cols, data) sorted by row, row-complete.
+            Pad each cell to t_max with zero tiles on the last tile-row."""
+            rows = np.full((R, C, t_max), num_tr - 1, np.int32)
+            cols = np.zeros((R, C, t_max), np.int32)
+            data = np.zeros((R, C, t_max, bm, bk), dtype)
+            for i in range(R):
+                for j in range(C):
+                    r_u, c_u, d_u = entries[i][j]
+                    rows[i, j, : r_u.size] = r_u
+                    cols[i, j, : c_u.size] = c_u
+                    data[i, j, : d_u.shape[0]] = d_u
+            return rows, cols, data
+
+        def row_complete(r_u, c_u, d_u):
+            """Insert one zero filler tile into every absent tile-row so
+            each output block is visited (and, in acc mode, carries the
+            ring accumulator through) — then re-sort by row."""
+            missing = np.setdiff1d(np.arange(num_tr, dtype=np.int64), r_u)
+            if missing.size:
+                r_u = np.concatenate([r_u, missing])
+                c_u = np.concatenate([c_u, np.zeros(missing.size, np.int64)])
+                d_u = np.concatenate(
+                    [d_u, np.zeros((missing.size, bm, bk), dtype)], axis=0
+                )
+                order = np.argsort(r_u, kind="stable")
+                r_u, c_u, d_u = r_u[order], c_u[order], d_u[order]
+            return r_u, c_u, d_u
+
+        nnz = np.zeros((R, C), np.int64)
+        full_entries: list[list[tuple]] = []
+        ring_entries: list[list[list[tuple]]] = []
+        full_max, ring_max = 1, 1
+        for i in range(R):
+            full_row, ring_row = [], []
+            for j in range(C):
+                d, s = self._cell_arcs(i, j)
+                key = (d // bm) * num_tc + (s // bk)
+                uniq, inv = np.unique(key, return_inverse=True)
+                data = np.zeros((uniq.size, bm, bk), dtype)
+                data[inv, d % bm, s % bk] = 1
+                r_u, c_u = uniq // num_tc, uniq % num_tc
+                nnz[i, j] = uniq.size
+                cell = row_complete(r_u, c_u, data)
+                full_max = max(full_max, cell[0].size)
+                full_row.append(cell)
+                if ring:
+                    slots = []
+                    for r in range(R):
+                        sel = (c_u // cpk) == r
+                        slot = row_complete(r_u[sel], c_u[sel] - r * cpk, data[sel])
+                        ring_max = max(ring_max, slot[0].size)
+                        slots.append(slot)
+                    ring_row.append(slots)
+            full_entries.append(full_row)
+            ring_entries.append(ring_row)
+
+        rows_a, cols_a, tiles_a = materialize(full_entries, full_max)
+        ring_rows = ring_cols = ring_tiles = None
+        if ring:
+            ring_rows = np.full((R, C, R, ring_max), num_tr - 1, np.int32)
+            ring_cols = np.zeros((R, C, R, ring_max), np.int32)
+            ring_tiles = np.zeros((R, C, R, ring_max, bm, bk), dtype)
+            for i in range(R):
+                for j in range(C):
+                    for r in range(R):
+                        r_u, c_u, d_u = ring_entries[i][j][r]
+                        ring_rows[i, j, r, : r_u.size] = r_u
+                        ring_cols[i, j, r, : c_u.size] = c_u
+                        ring_tiles[i, j, r, : d_u.shape[0]] = d_u
+        return BlockedSparseLayout(
+            bm=bm,
+            bk=bk,
+            R=R,
+            C=C,
+            chunk=chunk,
+            tiles=tiles_a,
+            tile_rows=rows_a,
+            tile_cols=cols_a,
+            nnz_tiles=nnz,
+            ring_tiles=ring_tiles,
+            ring_tile_rows=ring_rows,
+            ring_tile_cols=ring_cols,
+        )
 
 
 def partition_2d(

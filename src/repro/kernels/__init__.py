@@ -5,6 +5,18 @@ Each kernel ships three layers:
   ops.py    — jit'd wrapper (padding, dispatch, CPU interpret fallback)
   ref.py    — pure-jnp oracle (the semantics; tests assert allclose)
 """
-from repro.kernels.ops import dependency_spmm, frontier_spmm, segment_bag
+from repro.kernels.ops import (
+    dependency_spmm,
+    dependency_spmm_sparse,
+    frontier_spmm,
+    frontier_spmm_sparse,
+    segment_bag,
+)
 
-__all__ = ["frontier_spmm", "dependency_spmm", "segment_bag"]
+__all__ = [
+    "frontier_spmm",
+    "dependency_spmm",
+    "frontier_spmm_sparse",
+    "dependency_spmm_sparse",
+    "segment_bag",
+]

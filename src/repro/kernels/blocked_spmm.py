@@ -1,0 +1,305 @@
+"""Pallas TPU kernels: blocked-sparse (BCSR-style) traversal SpMMs.
+
+The 2-D distributed engine's dense-block kernels stream the whole
+[C·chunk, R·chunk] adjacency block from HBM every level — O(n_pad²/p)
+bytes per device, regardless of sparsity.  RMAT/real-world graphs are
+extremely sparse, so the block is mostly zero tiles; these kernels take
+the tiled block-compressed layout of
+:meth:`repro.graphs.partition.TwoDPartition.blocked_sparse` — only the
+nonzero (bm × bk) tiles, stacked as [T, bm, bk] with per-tile row/col
+index maps — and iterate *only the stored tiles*, dropping the A-stream
+to O(nnz_tiles · bm · bk) bytes per level.
+
+Grid = (s/bs, T) with the tile index minor.  The tile row/col ids are
+**scalar-prefetched** (``pltpu.PrefetchScalarGridSpec``): the BlockSpec
+index maps read them to DMA the right operand tile ([tile_cols[t]·bk
+rows of the gathered operands]) and output tile ([tile_rows[t]·bm rows
+of the partial product]) ahead of the kernel body.  Tiles arrive sorted
+by output tile-row, so each tile-row is one consecutive run of grid
+steps: the f32 VMEM accumulator initializes at the run's first tile
+(from zeros, or from the carried ring accumulator in ``acc`` mode) and
+flushes to the output block at the run's last tile.  The layout
+guarantees every tile-row holds at least one (possibly all-zero filler)
+tile, so every output block is written exactly once per (row, s-block).
+
+Both kernels are *partial* (pre-fold) forms mirroring the dense
+``frontier_partial_pallas`` / ``dependency_partial_pallas``: the operand
+fusion (frontier mask / g recompute in VMEM) is identical, the state
+update stays deferred past the psum_scatter fold.  The same entry point
+serves the full-block barrier schedule (operands = the row-gathered
+[R·chunk, s] slice, tiles = the whole block's list) and the
+ring-pipelined schedule (operands = one [chunk, s] chunk, tiles = that
+ring slot's slice, ``acc`` = the running partial carried between hops).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "frontier_sparse_kernel",
+    "frontier_sparse_acc_kernel",
+    "frontier_sparse_pallas",
+    "dependency_sparse_kernel",
+    "dependency_sparse_acc_kernel",
+    "dependency_sparse_pallas",
+    "tiles_to_dense",
+]
+
+
+def tiles_to_dense(tiles, tile_rows, tile_cols, m: int, kdim: int) -> jnp.ndarray:
+    """Reconstruct the dense [m, kdim] block from a tile list (jnp).
+
+    Reference/debug path only — the kernels never materialize this.
+    Filler/padding tiles are all-zero, so scatter-add is exact.
+    """
+    t, bm, bk = tiles.shape
+    grid = jnp.zeros((m // bm, kdim // bk, bm, bk), jnp.float32)
+    grid = grid.at[tile_rows, tile_cols].add(tiles.astype(jnp.float32))
+    return grid.transpose(0, 2, 1, 3).reshape(m, kdim)
+
+
+def _row_run_bounds(rows_ref, t, num_tiles: int):
+    """(first, last) flags of tile t within its output tile-row run."""
+    row = rows_ref[t]
+    first = (t == 0) | (rows_ref[jnp.maximum(t - 1, 0)] != row)
+    last = (t == num_tiles - 1) | (rows_ref[jnp.minimum(t + 1, num_tiles - 1)] != row)
+    return first, last
+
+
+def frontier_sparse_kernel(
+    rows_ref,  # SMEM i32 [T] (scalar prefetch)
+    cols_ref,  # SMEM i32 [T] (scalar prefetch)
+    lvl_ref,  # SMEM i32 [1] (scalar prefetch)
+    a_ref,  # [1, bm, bk] stored tile
+    sigma_k_ref,  # [bk, bs] operand σ tile at tile_cols[t]
+    depth_k_ref,  # [bk, bs] operand d tile at tile_cols[t]
+    t_out_ref,  # [bm, bs] partial product at tile_rows[t]
+    acc_ref,  # VMEM scratch [bm, bs] f32
+    *,
+    num_tiles: int,
+):
+    t = pl.program_id(1)
+    first, last = _row_run_bounds(rows_ref, t, num_tiles)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lvl = lvl_ref[0]
+    frontier = sigma_k_ref[...] * (depth_k_ref[...] == lvl - 1).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        a_ref[0].astype(jnp.float32), frontier, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(last)
+    def _flush():
+        t_out_ref[...] = acc_ref[...]
+
+
+def frontier_sparse_acc_kernel(
+    rows_ref,
+    cols_ref,
+    lvl_ref,
+    a_ref,
+    sigma_k_ref,
+    depth_k_ref,
+    t_in_ref,  # [bm, bs] running ring accumulator at tile_rows[t]
+    t_out_ref,
+    acc_ref,
+    *,
+    num_tiles: int,
+):
+    t = pl.program_id(1)
+    first, last = _row_run_bounds(rows_ref, t, num_tiles)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = t_in_ref[...]
+
+    lvl = lvl_ref[0]
+    frontier = sigma_k_ref[...] * (depth_k_ref[...] == lvl - 1).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        a_ref[0].astype(jnp.float32), frontier, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(last)
+    def _flush():
+        t_out_ref[...] = acc_ref[...]
+
+
+def dependency_sparse_kernel(
+    rows_ref,
+    cols_ref,
+    lvl_ref,
+    a_ref,  # [1, bm, bk]
+    sigma_k_ref,  # [bk, bs]
+    depth_k_ref,  # [bk, bs]
+    delta_k_ref,  # [bk, bs]
+    omega_k_ref,  # [bk, 1]
+    t_out_ref,  # [bm, bs]
+    acc_ref,  # VMEM [bm, bs] f32
+    *,
+    num_tiles: int,
+):
+    t = pl.program_id(1)
+    first, last = _row_run_bounds(rows_ref, t, num_tiles)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lvl = lvl_ref[0]
+    sigma_k = sigma_k_ref[...]
+    safe_sigma = jnp.where(sigma_k > 0, sigma_k, 1.0)
+    g = jnp.where(
+        depth_k_ref[...] == lvl + 1,
+        (1.0 + delta_k_ref[...] + omega_k_ref[...]) / safe_sigma,
+        0.0,
+    )
+    acc_ref[...] += jnp.dot(
+        a_ref[0].astype(jnp.float32), g, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(last)
+    def _flush():
+        t_out_ref[...] = acc_ref[...]
+
+
+def dependency_sparse_acc_kernel(
+    rows_ref,
+    cols_ref,
+    lvl_ref,
+    a_ref,
+    sigma_k_ref,
+    depth_k_ref,
+    delta_k_ref,
+    omega_k_ref,
+    t_in_ref,  # [bm, bs] running ring accumulator
+    t_out_ref,
+    acc_ref,
+    *,
+    num_tiles: int,
+):
+    t = pl.program_id(1)
+    first, last = _row_run_bounds(rows_ref, t, num_tiles)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = t_in_ref[...]
+
+    lvl = lvl_ref[0]
+    sigma_k = sigma_k_ref[...]
+    safe_sigma = jnp.where(sigma_k > 0, sigma_k, 1.0)
+    g = jnp.where(
+        depth_k_ref[...] == lvl + 1,
+        (1.0 + delta_k_ref[...] + omega_k_ref[...]) / safe_sigma,
+        0.0,
+    )
+    acc_ref[...] += jnp.dot(
+        a_ref[0].astype(jnp.float32), g, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(last)
+    def _flush():
+        t_out_ref[...] = acc_ref[...]
+
+
+def _sparse_call(kernel_pair, m, s, bm, bk, bs, num_tiles, operand_specs, args, acc, interpret):
+    """Shared pallas_call shell of the two sparse SpMMs.
+
+    ``args`` = (rows, cols, lvl, tiles, *operands); operand tiles index
+    via cols_ref, the output (and ``acc`` input) via rows_ref.
+    """
+    plain_kernel, acc_kernel = kernel_pair
+    out_spec = pl.BlockSpec((bm, bs), lambda j, t, rows, cols, lvl: (rows[t], j))
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda j, t, rows, cols, lvl: (t, 0, 0)),  # tile
+        *operand_specs,
+    ]
+    if acc is None:
+        kernel = functools.partial(plain_kernel, num_tiles=num_tiles)
+    else:
+        kernel = functools.partial(acc_kernel, num_tiles=num_tiles)
+        in_specs.append(out_spec)  # t_in rides the output block index
+        args = args + (acc,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # rows, cols, lvl
+        grid=(s // bs, num_tiles),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        scratch_shapes=[pltpu.VMEM((bm, bs), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, s), jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+def frontier_sparse_pallas(
+    tiles: jnp.ndarray,  # [T, bm, bk] stored tiles (row-sorted, row-complete)
+    tile_rows: jnp.ndarray,  # i32 [T]
+    tile_cols: jnp.ndarray,  # i32 [T]
+    sigma: jnp.ndarray,  # [kdim, s] gathered (or ring-chunk) operand
+    depth: jnp.ndarray,  # [kdim, s]
+    lvl: jnp.ndarray,
+    *,
+    m: int,  # output rows (C·chunk)
+    acc: jnp.ndarray | None = None,  # [m, s] ring accumulator (chunked mode)
+    bs: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call; shapes must be tile-aligned (see ops.py)."""
+    num_tiles, bm, bk = tiles.shape
+    kdim, s = sigma.shape
+    assert m % bm == 0 and kdim % bk == 0 and s % bs == 0, (m, kdim, s, bm, bk, bs)
+    lvl_arr = jnp.asarray(lvl, jnp.int32).reshape(1)
+    operand_specs = [
+        pl.BlockSpec((bk, bs), lambda j, t, rows, cols, lvl: (cols[t], j)),  # σ
+        pl.BlockSpec((bk, bs), lambda j, t, rows, cols, lvl: (cols[t], j)),  # d
+    ]
+    args = (tile_rows, tile_cols, lvl_arr, tiles, sigma, depth)
+    return _sparse_call(
+        (frontier_sparse_kernel, frontier_sparse_acc_kernel),
+        m, s, bm, bk, bs, num_tiles, operand_specs, args, acc, interpret,
+    )
+
+
+def dependency_sparse_pallas(
+    tiles: jnp.ndarray,  # [T, bm, bk]
+    tile_rows: jnp.ndarray,  # i32 [T]
+    tile_cols: jnp.ndarray,  # i32 [T]
+    sigma: jnp.ndarray,  # [kdim, s]
+    depth: jnp.ndarray,  # [kdim, s]
+    delta: jnp.ndarray,  # [kdim, s]
+    omega: jnp.ndarray,  # [kdim]
+    lvl: jnp.ndarray,
+    *,
+    m: int,
+    acc: jnp.ndarray | None = None,
+    bs: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call; shapes must be tile-aligned (see ops.py)."""
+    num_tiles, bm, bk = tiles.shape
+    kdim, s = sigma.shape
+    assert m % bm == 0 and kdim % bk == 0 and s % bs == 0, (m, kdim, s, bm, bk, bs)
+    lvl_arr = jnp.asarray(lvl, jnp.int32).reshape(1)
+    omega_col = omega.astype(jnp.float32).reshape(kdim, 1)
+    operand_specs = [
+        pl.BlockSpec((bk, bs), lambda j, t, rows, cols, lvl: (cols[t], j)),  # σ
+        pl.BlockSpec((bk, bs), lambda j, t, rows, cols, lvl: (cols[t], j)),  # d
+        pl.BlockSpec((bk, bs), lambda j, t, rows, cols, lvl: (cols[t], j)),  # δ
+        pl.BlockSpec((bk, 1), lambda j, t, rows, cols, lvl: (cols[t], 0)),  # ω
+    ]
+    args = (tile_rows, tile_cols, lvl_arr, tiles, sigma, depth, delta, omega_col)
+    return _sparse_call(
+        (dependency_sparse_kernel, dependency_sparse_acc_kernel),
+        m, s, bm, bk, bs, num_tiles, operand_specs, args, acc, interpret,
+    )

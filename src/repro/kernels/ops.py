@@ -13,11 +13,17 @@ shapes; production shapes use the 128-aligned defaults.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.blocked_spmm import (
+    dependency_sparse_pallas,
+    frontier_sparse_pallas,
+    tiles_to_dense,
+)
 from repro.kernels.dependency_spmm import (
     dependency_partial_pallas,
     dependency_spmm_pallas,
@@ -30,6 +36,8 @@ __all__ = [
     "dependency_spmm",
     "frontier_spmm_partial",
     "dependency_spmm_partial",
+    "frontier_spmm_sparse",
+    "dependency_spmm_sparse",
     "segment_bag",
     "on_tpu",
 ]
@@ -55,6 +63,21 @@ def _pick_block(dim: int, preferred: int, lane: int) -> int:
     return max(lane, ((dim + lane - 1) // lane) * lane)
 
 
+def _square_geometry(n: int, s: int, bm: int, bk: int, bs: int):
+    """Block sizes + padded n for the square (fused-epilogue) kernels:
+    n must be a multiple of lcm(bm, bk) so the update and contraction
+    tilings agree."""
+    bm, bk, bs = _pick_block(n, bm, 8), _pick_block(n, bk, 8), _pick_block(s, bs, 128)
+    npad = n + (-n) % (bm * bk // math.gcd(bm, bk))
+    return bm, bk, bs, npad
+
+
+def _rect_geometry(m: int, kdim: int, s: int, bm: int, bk: int, bs: int):
+    """Block sizes for the rectangular partial kernels (the shared
+    _pick_block plumbing of the frontier/dependency partial wrappers)."""
+    return _pick_block(m, bm, 8), _pick_block(kdim, bk, 8), _pick_block(s, bs, 128)
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bm", "bk", "bs"))
 def frontier_spmm(
     adjacency,
@@ -74,11 +97,7 @@ def frontier_spmm(
     if interpret is None:
         interpret = not on_tpu()
     n, s = sigma.shape
-    bm = _pick_block(n, bm, 8)
-    bk = _pick_block(n, bk, 8)
-    bs = _pick_block(s, bs, 128)
-    lcm = bm * bk // _gcd(bm, bk)
-    npad = n + ((-n) % lcm)
+    bm, bk, bs, npad = _square_geometry(n, s, bm, bk, bs)
     a = jnp.pad(adjacency, ((0, npad - n), (0, npad - n))) if npad != n else adjacency
     sg = _pad_to(_pad_to(sigma, 0, npad), 1, bs)
     dp = _pad_to(_pad_to(depth, 0, npad, fill=-1), 1, bs, fill=-1)
@@ -109,11 +128,7 @@ def dependency_spmm(
     if interpret is None:
         interpret = not on_tpu()
     n, s = sigma.shape
-    bm = _pick_block(n, bm, 8)
-    bk = _pick_block(n, bk, 8)
-    bs = _pick_block(s, bs, 128)
-    lcm = bm * bk // _gcd(bm, bk)
-    npad = n + ((-n) % lcm)
+    bm, bk, bs, npad = _square_geometry(n, s, bm, bk, bs)
     a = jnp.pad(adjacency, ((0, npad - n), (0, npad - n))) if npad != n else adjacency
     sg = _pad_to(_pad_to(sigma, 0, npad), 1, bs)
     dp = _pad_to(_pad_to(depth, 0, npad, fill=-1), 1, bs, fill=-1)
@@ -123,12 +138,6 @@ def dependency_spmm(
         a, sg, dp, dl, om, lvl, bm=bm, bk=bk, bs=bs, interpret=interpret
     )
     return out[:n, :s]
-
-
-def _gcd(a: int, b: int) -> int:
-    while b:
-        a, b = b, a % b
-    return a
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bm", "bk", "bs"))
@@ -165,9 +174,7 @@ def frontier_spmm_partial(
         interpret = not on_tpu()
     m, kdim = adjacency.shape
     _, s = sigma.shape
-    bm = _pick_block(m, bm, 8)
-    bk = _pick_block(kdim, bk, 8)
-    bs = _pick_block(s, bs, 128)
+    bm, bk, bs = _rect_geometry(m, kdim, s, bm, bk, bs)
     a = _pad_to(_pad_to(adjacency, 0, bm), 1, bk)
     sg = _pad_to(_pad_to(sigma, 0, bk), 1, bs)
     dp = _pad_to(_pad_to(depth, 0, bk, fill=-1), 1, bs, fill=-1)
@@ -209,9 +216,7 @@ def dependency_spmm_partial(
         interpret = not on_tpu()
     m, kdim = adjacency.shape
     _, s = sigma.shape
-    bm = _pick_block(m, bm, 8)
-    bk = _pick_block(kdim, bk, 8)
-    bs = _pick_block(s, bs, 128)
+    bm, bk, bs = _rect_geometry(m, kdim, s, bm, bk, bs)
     a = _pad_to(_pad_to(adjacency, 0, bm), 1, bk)
     sg = _pad_to(_pad_to(sigma, 0, bk), 1, bs)
     dp = _pad_to(_pad_to(depth, 0, bk, fill=-1), 1, bs, fill=-1)
@@ -222,6 +227,98 @@ def dependency_spmm_partial(
         a, sg, dp, dl, om, lvl, acc=ac, bm=bm, bk=bk, bs=bs, interpret=interpret
     )
     return t[:m, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "use_pallas", "interpret", "bs"))
+def frontier_spmm_sparse(
+    tiles,
+    tile_rows,
+    tile_cols,
+    sigma,
+    depth,
+    lvl,
+    *,
+    m: int,
+    acc=None,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    bs: int = 128,
+):
+    """Blocked-sparse pre-fold forward partial (BCSR tile list).
+
+    ``tiles`` [T, bm, bk] / ``tile_rows`` / ``tile_cols`` are one
+    device's stored nonzero tiles (row-sorted, row-complete — build with
+    :meth:`repro.graphs.partition.TwoDPartition.blocked_sparse`);
+    ``sigma``/``depth`` are the gathered [kdim, s] operands.  Returns the
+    raw t = A_block @ (σ ⊙ [d = lvl-1]) f32 [m, s], touching only the
+    stored tiles — A-stream bytes O(T · bm · bk) instead of O(m · kdim).
+
+    Modes mirror :func:`frontier_spmm_partial`: full (barrier schedule,
+    operands = the whole gathered slice), per-ring-chunk partial
+    (operands = one [chunk, s] chunk, tiles = that ring slot's slice),
+    and chunked-``acc`` (the running ring combine seeds the kernel's
+    VMEM accumulator).  ``m`` is static: the fold-partial row count
+    (C·chunk), not derivable from the tile list.
+    """
+    if not use_pallas:
+        a = tiles_to_dense(tiles, tile_rows, tile_cols, m, sigma.shape[0])
+        t = ref.frontier_partial_ref(a, sigma, depth, lvl)
+        return t if acc is None else acc + t
+    if interpret is None:
+        interpret = not on_tpu()
+    s = sigma.shape[1]
+    bs = _pick_block(s, bs, 128)
+    sg = _pad_to(sigma, 1, bs)
+    dp = _pad_to(depth, 1, bs, fill=-1)
+    ac = None if acc is None else _pad_to(acc, 1, bs)
+    t = frontier_sparse_pallas(
+        tiles, tile_rows, tile_cols, sg, dp, lvl, m=m, acc=ac, bs=bs,
+        interpret=interpret,
+    )
+    return t[:, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "use_pallas", "interpret", "bs"))
+def dependency_spmm_sparse(
+    tiles,
+    tile_rows,
+    tile_cols,
+    sigma,
+    depth,
+    delta,
+    omega,
+    lvl,
+    *,
+    m: int,
+    acc=None,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    bs: int = 128,
+):
+    """Blocked-sparse pre-fold backward partial (BCSR tile list).
+
+    Operands are the gathered [kdim, s] (σ, d, δ) and [kdim] ω; the g
+    recompute is fused per stored tile.  Returns t = A_block @ g f32
+    [m, s].  Same full / ring-chunk / chunked-``acc`` modes as
+    :func:`frontier_spmm_sparse`.
+    """
+    if not use_pallas:
+        a = tiles_to_dense(tiles, tile_rows, tile_cols, m, sigma.shape[0])
+        t = ref.dependency_partial_ref(a, sigma, depth, delta, omega, lvl)
+        return t if acc is None else acc + t
+    if interpret is None:
+        interpret = not on_tpu()
+    s = sigma.shape[1]
+    bs = _pick_block(s, bs, 128)
+    sg = _pad_to(sigma, 1, bs)
+    dp = _pad_to(depth, 1, bs, fill=-1)
+    dl = _pad_to(delta, 1, bs)
+    ac = None if acc is None else _pad_to(acc, 1, bs)
+    t = dependency_sparse_pallas(
+        tiles, tile_rows, tile_cols, sg, dp, dl, omega, lvl, m=m, acc=ac, bs=bs,
+        interpret=interpret,
+    )
+    return t[:, :s]
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bd"))

@@ -8,18 +8,24 @@
 Supports single-device and distributed (``--mesh RxC``) execution; every
 engine of the unified traversal stack is selectable with ``--engine``
 (single-device: dense | sparse | pallas | pallas_bf16; distributed:
-sparse arc-list or the Pallas dense-block engines).  ``--overlap``
-selects the distributed collective schedule: ``none`` (barrier
-all_gather/psum_scatter), ``expand`` (ring-pipelined gather) or
+sparse arc-list, the Pallas dense-block engines, or the blocked-sparse
+``pallas_sparse`` engine for graphs whose dense blocks do not fit).
+``--overlap`` selects the distributed collective schedule: ``none``
+(barrier all_gather/psum_scatter), ``expand`` (ring-pipelined gather),
 ``expand+fold`` (both collectives decomposed into ppermute rings
-overlapped with block compute — paper Fig. 2).  ``--ckpt-dir``
-snapshots (partial BC, n_s, committed rounds) through a BCCheckpoint —
-a killed job resumes at the first uncommitted round — and TEPS is
-reported per paper Eq. 7.
+overlapped with block compute — paper Fig. 2) or ``auto`` (picked from
+the roofline's pipelining estimate and logged).  The per-device adjacency + state footprint is reported before
+compiling; ``--hbm-gb <GiB>`` additionally arms the fail-fast memory
+guard, turning an over-budget engine into an immediate error with a
+suggestion (``pallas_sparse`` / a larger mesh) instead of an OOM
+mid-round.  ``--ckpt-dir`` snapshots (partial BC, n_s, committed
+rounds) through a BCCheckpoint — a killed job resumes at the first
+uncommitted round — and TEPS is reported per paper Eq. 7.
 """
 from __future__ import annotations
 
 import argparse
+import logging
 import os
 import time
 
@@ -28,7 +34,10 @@ import numpy as np
 from repro.core import betweenness_centrality
 from repro.core.bc import ENGINE_KINDS
 from repro.core.operators import OVERLAP_POLICIES
-from repro.core.distributed import distributed_betweenness_centrality
+from repro.core.distributed import (
+    DIST_ENGINE_KINDS,
+    distributed_betweenness_centrality,
+)
 from repro.distributed.fault_tolerance import BCCheckpoint
 from repro.graphs import grid_graph, rmat_graph, road_like_graph
 
@@ -41,18 +50,32 @@ def main() -> None:
     ap.add_argument("--road", default=None, help="RxC road-like graph")
     ap.add_argument("--heuristics", default="h0", choices=["h0", "h1", "h2", "h3"])
     ap.add_argument("--batch-size", type=int, default=32)
-    ap.add_argument("--engine", default="dense", choices=list(ENGINE_KINDS))
+    ap.add_argument(
+        "--engine",
+        default="dense",
+        choices=sorted(set(ENGINE_KINDS) | set(DIST_ENGINE_KINDS)),
+    )
     ap.add_argument("--mesh", default=None, help="distributed RxC device mesh")
     ap.add_argument(
         "--overlap",
         default="none",
-        choices=list(OVERLAP_POLICIES),
-        help="distributed collective schedule (ring pipelining; needs --mesh)",
+        choices=list(OVERLAP_POLICIES) + ["auto"],
+        help="distributed collective schedule (ring pipelining; needs --mesh; "
+        "'auto' picks from the roofline estimate)",
+    )
+    ap.add_argument(
+        "--hbm-gb",
+        type=float,
+        default=0.0,
+        help="per-device HBM budget (GiB) arming the fail-fast memory "
+        "guard (e.g. 16 for v5e); the footprint is always reported, but "
+        "only an explicit budget turns it into a pre-compile error",
     )
     ap.add_argument("--ckpt-dir", default=None, help="round-ledger resume dir")
     ap.add_argument("--out", default=None)
     ap.add_argument("--top", type=int, default=10)
     args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
 
     if args.rmat_scale is not None:
         graph = rmat_graph(args.rmat_scale, args.edge_factor, seed=1)
@@ -78,6 +101,8 @@ def main() -> None:
 
     if args.overlap != "none" and not args.mesh:
         raise SystemExit("--overlap is a distributed schedule; pass --mesh RxC")
+    if args.engine == "pallas_sparse" and not args.mesh:
+        raise SystemExit("pallas_sparse is a distributed engine; pass --mesh RxC")
 
     print(
         f"{name}: n={graph.n} m={graph.num_edges} "
@@ -99,6 +124,7 @@ def main() -> None:
             heuristics=args.heuristics,
             engine_kind=engine_kind,
             overlap=args.overlap,
+            hbm_limit_bytes=args.hbm_gb * 2**30 if args.hbm_gb > 0 else None,
             checkpoint=checkpoint,
         )
         rounds = len(schedule.rounds)

@@ -41,6 +41,16 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, save_hlo: str | N
     t0 = time.time()
     cell = build_cell(bundle, shape_name, mesh=mesh)
 
+    # Fail-fast memory report (BC cells): per-engine adjacency + state
+    # footprint, printed *before* the compile so an over-budget dense
+    # engine is visible without waiting for (or OOMing in) compilation.
+    footprints = cell.static_meta.get("hbm_footprint_bytes")
+    if footprints:
+        per_engine = ", ".join(
+            f"{kind}={b/2**30:.2f} GiB" for kind, b in sorted(footprints.items())
+        )
+        print(f"[mem] {cell.name}: per-device footprint {per_engine}")
+
     with use_mesh(mesh):
         if hasattr(cell.fn, "lower"):  # pre-jitted (BC round fn)
             jitted = cell.fn
@@ -63,6 +73,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, save_hlo: str | N
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

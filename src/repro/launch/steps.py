@@ -482,6 +482,28 @@ def _build_bc_cell(cfg: BCArch, shape, mesh) -> CellProgram:
         replica_axis=replica_axis,
         num_levels=cfg.max_levels,
     )
+    # pre-compile per-device HBM footprint per engine (the dry-run's
+    # fail-fast memory report; nnz tiles bounded by one tile per arc)
+    from repro.graphs.partition import default_tile_dim
+    from repro.roofline.model import device_hbm_footprint
+
+    tile = default_tile_dim(chunk)
+    tiles_per_dev = (C * chunk // tile) * (R * chunk // tile)
+    footprints = {
+        kind: device_hbm_footprint(
+            kind,
+            R=R,
+            C=C,
+            chunk=chunk,
+            batch_size=cfg.batch_size,
+            nnz_tiles=min(max_arcs, tiles_per_dev),
+            bm=tile,
+            bk=tile,
+            max_arcs=max_arcs,
+        )["total_bytes"]
+        for kind in ("sparse", "pallas", "pallas_sparse")
+    }
+
     fr = mesh.shape["pod"] if replica_axis else 1
     s, k = cfg.batch_size, max(1, cfg.batch_size // 2)
     args_specs = (
@@ -503,6 +525,7 @@ def _build_bc_cell(cfg: BCArch, shape, mesh) -> CellProgram:
             "n_arcs": m2,
             "sources_per_round": s + k,
             "model_flops": model_flops,
+            "hbm_footprint_bytes": footprints,
         },
         needs_shardmap_mesh=True,
     )

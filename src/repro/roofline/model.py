@@ -34,6 +34,9 @@ __all__ = [
     "ring_steps",
     "ring_latency_s",
     "overlap_step_time",
+    "adjacency_stream_bytes",
+    "device_hbm_footprint",
+    "auto_overlap_policy",
 ]
 
 
@@ -144,6 +147,141 @@ def overlap_step_time(compute_s: float, collective_s: float, k: int) -> float:
         return compute_s + collective_s
     lo, hi = sorted((compute_s, collective_s))
     return hi + lo / k
+
+
+# ---------------------------------------------------------------------------
+# Per-engine adjacency model for the 2-D distributed path.  The roofline
+# historically priced the A-stream dense — O(n_pad²/p) per device per
+# level — which is wrong by orders of magnitude for the blocked-sparse
+# engine on RMAT-scale graphs; ``adjacency_stream_bytes`` is the
+# per-engine quantity (dense block, arc list, or nnz-tile list) used by
+# both the memory guard and the sparse benchmark record.
+# ---------------------------------------------------------------------------
+
+#: payload tensors per exchanged direction: the arc-list engine ships a
+#: single pre-masked tensor; the fused Pallas engines ship (σ, d) forward
+#: and (σ, d, δ, ω) backward (paper §3.2 exchange set).
+_EXCHANGE_OPERANDS = {
+    "sparse": (1, 1),
+    "pallas": (2, 4),
+    "pallas_bf16": (2, 4),
+    "pallas_sparse": (2, 4),
+}
+
+
+def adjacency_stream_bytes(
+    engine_kind: str,
+    *,
+    R: int,
+    C: int,
+    chunk: int,
+    nnz_tiles: int | None = None,
+    bm: int | None = None,
+    bk: int | None = None,
+    max_arcs: int | None = None,
+) -> float:
+    """Per-device A-stream bytes of one traversal level.
+
+    dense Pallas engines   (C·chunk)·(R·chunk)·elem   — the full block
+    blocked-sparse engine  nnz_tiles·bm·bk·elem + index maps
+    arc-list engine        2·max_arcs·4               — (src, dst) i32
+
+    ``nnz_tiles`` is whatever tile count the caller wants priced: the
+    true nonzero count for a best-case stream model, or the layout's
+    *stored* count (fillers + padding + ring slots,
+    ``TwoDPartition.blocked_sparse_counts``) for the bytes actually
+    allocated/streamed — the memory guard passes the latter.
+    """
+    if engine_kind in ("pallas", "pallas_bf16"):
+        elem = 2 if engine_kind == "pallas_bf16" else 4
+        return float(C * chunk) * (R * chunk) * elem
+    if engine_kind == "pallas_sparse":
+        if None in (nnz_tiles, bm, bk):
+            raise ValueError("pallas_sparse needs nnz_tiles, bm, bk")
+        return float(nnz_tiles) * (bm * bk * 4 + 8)  # tile data + row/col ids
+    if engine_kind == "sparse":
+        if max_arcs is None:
+            raise ValueError("sparse needs max_arcs")
+        return float(2 * max_arcs) * 4
+    raise ValueError(f"unknown distributed engine {engine_kind!r}")
+
+
+def device_hbm_footprint(
+    engine_kind: str,
+    *,
+    R: int,
+    C: int,
+    chunk: int,
+    batch_size: int,
+    nnz_tiles: int | None = None,
+    bm: int | None = None,
+    bk: int | None = None,
+    max_arcs: int | None = None,
+) -> dict:
+    """Per-device HBM footprint (bytes) of one distributed BC round.
+
+    ``adjacency``: the resident graph operand (engine-dependent — the
+    quantity that decides dense-vs-sparse feasibility).  ``state``: owned
+    (σ, δ f32 + d i32 + ω, bc f32) columns, the worst-case gathered
+    operand slice ([R·chunk, s] × exchanged tensors), and the [C·chunk, s]
+    fold partial.  An estimate for fail-fast guarding — XLA temp buffers
+    add a constant factor, but the dense-block OOM this guard exists to
+    catch is orders of magnitude, not percent.
+    """
+    s = batch_size
+    adjacency = adjacency_stream_bytes(
+        engine_kind,
+        R=R,
+        C=C,
+        chunk=chunk,
+        nnz_tiles=nnz_tiles,
+        bm=bm,
+        bk=bk,
+        max_arcs=max_arcs,
+    )
+    _, bwd_operands = _EXCHANGE_OPERANDS[engine_kind]
+    state = (
+        3 * chunk * s * 4  # owned σ, d, δ
+        + 2 * chunk * 4  # ω, bc accumulator
+        + bwd_operands * R * chunk * s * 4  # gathered operand slice (worst: bwd)
+        + C * chunk * s * 4  # pre-fold partial
+    )
+    return {
+        "engine_kind": engine_kind,
+        "adjacency_bytes": float(adjacency),
+        "state_bytes": float(state),
+        "total_bytes": float(adjacency + state),
+    }
+
+
+def auto_overlap_policy(
+    compute_s: float,
+    expand_s: float,
+    fold_s: float,
+    R: int,
+    C: int,
+    hw: HardwareSpec = V5E,
+) -> tuple[str, dict]:
+    """Pick the ring policy from the ``overlap_step_time`` estimate.
+
+    Prices one traversal level under the three schedules — barrier
+    (compute + both collectives in sequence), ``expand`` (gather
+    pipelined into R hops, fold still a barrier), ``expand+fold`` (both
+    collectives ring-decomposed) — each ring hop paying the α launch
+    latency on top of the pipelined β term.  Returns the winning policy
+    and the per-policy estimates (logged by the caller so the choice is
+    auditable and overridable).
+    """
+    alpha = hw.ici_step_latency_s
+    estimates = {
+        "none": compute_s + expand_s + fold_s,
+        "expand": overlap_step_time(compute_s, expand_s, R)
+        + fold_s
+        + (R - 1) * alpha,
+        "expand+fold": overlap_step_time(compute_s, expand_s + fold_s, R)
+        + (R - 1 + C - 1) * alpha,
+    }
+    return min(estimates, key=estimates.get), estimates
 
 
 def roofline_terms(
