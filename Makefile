@@ -10,13 +10,21 @@ test: verify
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
 
-# Overlap + sparse subsets (fig9 + table3 + fig4 analogues): write
-# BENCH_overlap.json and BENCH_sparse.json — the machine-readable perf
-# trajectory future PRs regress against.  CI runs this as its bench
-# smoke target.
+# Overlap + sub-cluster + sparse subsets (fig9 + table3 + fig4
+# analogues): write BENCH_overlap.json, BENCH_subcluster.json (per-
+# straggler-policy wall, rounds stolen/re-dealt, idle seconds recovered)
+# and BENCH_sparse.json — the machine-readable perf trajectory future
+# PRs regress against.  CI runs this as its bench smoke target.
 bench-smoke:
 	PYTHONPATH=src:. python benchmarks/run.py --only fig9
 	PYTHONPATH=src:. python benchmarks/run.py --only table3
 	PYTHONPATH=src:. python benchmarks/run.py --only fig4
 
-.PHONY: verify test bench bench-smoke
+# Documentation health: the quickstart must execute, and the engine /
+# overlap / heuristics / straggler choice lists in README.md +
+# ARCHITECTURE.md must match the source-of-truth constants.
+docs-check:
+	PYTHONPATH=src python examples/quickstart.py
+	python tools/check_docs.py
+
+.PHONY: verify test bench bench-smoke docs-check

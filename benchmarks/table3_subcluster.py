@@ -1,25 +1,65 @@
-"""Table 3 analogue: sub-clustering — replication (fr) vs distribution (fd).
+"""Table 3 analogue: sub-clustering — replication (fr) vs distribution (fd)
+— plus the straggler re-deal benchmark (``BENCH_subcluster.json``).
 
-Paper: Orkut BC total time vs fr at fixed p.  Here p = 8 host devices:
-fr=1 runs one 2x4 fine-grained grid; fr=2 runs two 2x2 sub-clusters;
-fr=4 runs four 1x2 sub-clusters (max replication possible with a 2-D
-grid per replica).  More replication ⇒ fewer devices per traversal but
-more concurrent rounds — the paper's observed trade-off.
+Part (a), the paper's table: Orkut BC total time vs fr at fixed p.  Here
+p = 8 host devices: fr=1 runs one 2x4 fine-grained grid; fr=2 runs two
+2x2 sub-clusters; fr=4 runs four 1x2 sub-clusters (max replication
+possible with a 2-D grid per replica).  More replication ⇒ fewer devices
+per traversal but more concurrent rounds — the paper's observed
+trade-off.
+
+Part (b), the scheduling benchmark: the paper notes that data-dependent
+traversal depth makes round wall times wildly uneven across replicas.
+``skewed_depth_graph`` makes the unevenness maximal — one replica draws
+every deep-diameter (path) root batch, the other every shallow
+(complete-graph) one — and, under a ring overlap policy, the replica
+axis joins the loop-bound reductions, so every dispatch block costs the
+*max* over its rounds' depths: the static deal burns the depth gap as
+masked no-op levels on the shallow replica.  The benchmark runs the same
+workload under every ``BCDriver`` straggler policy
+(none | steal | redeal), checks exact BC parity against the Brandes
+oracle, and writes per-policy wall, per-replica wall/levels, rounds
+stolen/re-dealt and the recovered idle seconds to
+``BENCH_subcluster.json`` — the machine-readable baseline future PRs
+regress against (CI uploads it next to ``BENCH_overlap.json``).
 """
 from __future__ import annotations
+
+import json
+import os
 
 from benchmarks.common import emit, ensure_devices, make_mesh, time_call
 
 ensure_devices(8)
 
-from repro.core.distributed import distributed_betweenness_centrality
-from repro.graphs import rmat_graph
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.brandes_ref import brandes_reference
+from repro.core.distributed import (
+    distributed_betweenness_centrality,
+    distributed_graph_arrays,
+    make_distributed_round_fn,
+    prior_round_seconds,
+)
+from repro.core.driver import BCDriver, STRAGGLER_POLICIES
+from repro.core.scheduler import build_schedule
+from repro.graphs import rmat_graph, skewed_depth_graph
+from repro.graphs.partition import partition_2d
+
+BENCH_JSON = os.environ.get("BENCH_SUBCLUSTER_JSON", "BENCH_subcluster.json")
+
+#: skewed workload: 8 deep (path) + 8 shallow (complete) root batches of
+#: 16 sources each — one component per round at batch_size=16.
+PAIRS = 8
+BLOCK = 16
+OVERLAP = "expand"  # ring policy ⇒ replicas in loop-bound lockstep
 
 
-def run() -> None:
-    if not ensure_devices(8):
-        emit("table3/skipped", 0.0, "needs 8 host devices")
-        return
+def _replication_sweep() -> None:
+    """(a) fr sweep at fixed p (the paper's Table 3 axis)."""
     g = rmat_graph(8, 8, seed=0)
     configs = {
         "fr1_fd8": ((2, 4), ("data", "model"), None),
@@ -37,6 +77,102 @@ def run() -> None:
         sec = time_call(job, warmup=1, iters=2)
         teps = g.num_edges * g.n / sec
         emit(f"table3/{name}", sec * 1e6, f"MTEPS={teps/1e6:.1f};n={g.n}")
+
+
+def _straggler_bench() -> dict:
+    """(b) skewed-depth workload under every straggler policy."""
+    g = skewed_depth_graph(PAIRS, BLOCK)
+    expected = brandes_reference(g)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    schedule, prep, residual, _ = build_schedule(g, batch_size=BLOCK, heuristics="h0")
+    part = partition_2d(residual, 2, 2)
+    fn = make_distributed_round_fn(
+        part, mesh, replica_axis="pod", engine_kind="sparse", overlap=OVERLAP
+    )
+    graph_args = distributed_graph_arrays(part, "sparse", OVERLAP)
+    omega = jnp.zeros(part.n_pad, jnp.float32)
+    prior = prior_round_seconds(part, "sparse", BLOCK, OVERLAP)
+
+    def block_fn(sources, derived):
+        return fn(*graph_args, omega, sources, derived)
+
+    # compile once up front with an all-padding block so the first
+    # policy's wall is not charged for tracing/compilation
+    jax.block_until_ready(
+        block_fn(
+            jnp.full((2, BLOCK), -1, jnp.int32),
+            jnp.full((2, schedule.derived_per_round, 3), -1, jnp.int32),
+        )
+    )
+
+    record: dict = {
+        "graph": {
+            "kind": f"skewed_depth_graph({PAIRS}, {BLOCK})",
+            "n": g.n,
+            "m": int(g.num_edges),
+            "rounds": len(schedule.rounds),
+        },
+        "mesh": "2x2x2 (fr=2 replicas of a 2x2 grid)",
+        "overlap": OVERLAP,
+        "policies": {},
+    }
+    walls: dict[str, float] = {}
+    for policy in STRAGGLER_POLICIES:
+        result = BCDriver(
+            block_fn,
+            schedule,
+            n=g.n,
+            prep=prep,
+            rounds_per_dispatch=2,
+            straggler=policy,
+            prior_round_s=prior if policy != "none" else None,
+            profile=True,
+        ).run()
+        err = float(np.abs(result.bc - expected).max())
+        assert err < 1e-6, f"straggler={policy} diverged from brandes_ref: {err}"
+        stats = result.straggler_stats or {}
+        walls[policy] = result.wall_s
+        record["policies"][policy] = {
+            "wall_s": result.wall_s,
+            "rounds": result.rounds_run,
+            "block_wall_s_median": float(np.median(result.block_times)),
+            "max_abs_err_vs_brandes": err,
+            "per_replica_wall_s": stats.get("per_replica_wall_s"),
+            "per_replica_levels": stats.get("per_replica_levels"),
+            "rounds_stolen": stats.get("rounds_stolen", 0),
+            "rounds_redealt": stats.get("rounds_redealt", 0),
+            "duplicates_dispatched": stats.get("duplicates_dispatched", 0),
+            "duplicates_discarded": stats.get("duplicates_discarded", 0),
+            "idle_levels": stats.get("idle_levels"),
+            "idle_s_est": stats.get("idle_s_est"),
+        }
+        emit(
+            f"table3/straggler_{policy}",
+            result.wall_s * 1e6,
+            f"rounds={result.rounds_run};"
+            f"stolen={stats.get('rounds_stolen', 0)};"
+            f"redealt={stats.get('rounds_redealt', 0)};"
+            f"idle_s={stats.get('idle_s_est', 0.0):.3f}",
+        )
+    record["idle_s_recovered_redeal_vs_none"] = walls["none"] - walls["redeal"]
+    emit(
+        "table3/straggler_recovered",
+        0.0,
+        f"redeal_vs_none_s={record['idle_s_recovered_redeal_vs_none']:.3f};"
+        f"speedup={walls['none'] / max(walls['redeal'], 1e-9):.2f}x",
+    )
+    return record
+
+
+def run() -> None:
+    if not ensure_devices(8):
+        emit("table3/skipped", 0.0, "needs 8 host devices")
+        return
+    _replication_sweep()
+    record = _straggler_bench()
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    emit("table3/bench_json", 0.0, f"wrote={BENCH_JSON}")
 
 
 if __name__ == "__main__":

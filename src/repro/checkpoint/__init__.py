@@ -1,5 +1,10 @@
 """Checkpointing substrate: sharded npz save/restore, async writer,
-retention, exact resume."""
-from repro.checkpoint.checkpointer import Checkpointer, CheckpointManager
+retention, exact resume, and the BC round snapshot (per-replica ledger
+namespacing for the straggler scheduler)."""
+from repro.checkpoint.checkpointer import (
+    BCCheckpoint,
+    Checkpointer,
+    CheckpointManager,
+)
 
-__all__ = ["Checkpointer", "CheckpointManager"]
+__all__ = ["Checkpointer", "CheckpointManager", "BCCheckpoint"]

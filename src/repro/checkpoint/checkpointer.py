@@ -1,18 +1,28 @@
-"""Sharded checkpointing with async writes, retention and exact resume.
+"""Durable state: sharded PyTree checkpoints and the BC round snapshot.
 
-Layout (one directory per step):
+Two checkpoint families live here:
 
-    <root>/step_000100/
-        manifest.json      — tree structure, shapes/dtypes, content hashes,
-                             user metadata (data cursor, rng, mesh shape)
-        shard_p0.npz       — this process's addressable leaf arrays
+* :class:`Checkpointer` / :class:`CheckpointManager` — PyTrees of arrays
+  (LM/GNN training state), one directory per step:
 
-On a real multi-host cluster every process writes its own ``shard_p{i}``
-with its addressable shards; in this single-process container p0 holds
-everything.  Restore validates hashes and tree structure, so a torn or
-partial checkpoint is detected (commit marker written last), which is
-the restart-safety property the fault-tolerance layer relies on: a
-failed write never becomes the resume point.
+      <root>/step_000100/
+          manifest.json      — tree structure, shapes/dtypes, content
+                               hashes, user metadata (data cursor, rng,
+                               mesh shape)
+          shard_p0.npz       — this process's addressable leaf arrays
+
+  On a real multi-host cluster every process writes its own
+  ``shard_p{i}`` with its addressable shards; in this single-process
+  container p0 holds everything.  Restore validates hashes and tree
+  structure, so a torn or partial checkpoint is detected (commit marker
+  written last), which is the restart-safety property the
+  fault-tolerance layer relies on: a failed write never becomes the
+  resume point.
+
+* :class:`BCCheckpoint` — the BC driver's (partial BC, n_s bookkeeping,
+  committed rounds) triple, one atomic npz per run, with the committed
+  set namespaced per replica ledger for the multi-ledger straggler
+  scheduler (``BCDriver(straggler=...)``, core/driver.py).
 """
 from __future__ import annotations
 
@@ -29,7 +39,7 @@ import numpy as np
 
 import jax
 
-__all__ = ["Checkpointer", "CheckpointManager"]
+__all__ = ["Checkpointer", "CheckpointManager", "BCCheckpoint"]
 
 PyTree = Any
 _COMMIT = "COMMITTED"
@@ -243,3 +253,121 @@ class CheckpointManager:
             return init_state, {}, 0
         state, meta = self.ckpt.restore(init_state, step)
         return state, meta, step + 1
+
+
+class BCCheckpoint:
+    """Durable (partial BC, n_s bookkeeping, committed rounds) triple.
+
+    A ledger alone is not enough to resume BC: the committed rounds'
+    *contributions* live in the (volatile) device accumulator.  The
+    shared round loop (:class:`repro.core.driver.BCDriver`) therefore
+    periodically snapshots a consistent prefix — the drained rounds'
+    summed BC, their per-root component sizes, and exactly that round
+    set — through this object; a restarted run seeds the driver from the
+    snapshot and re-deals only the uncommitted rounds.  Consistency
+    invariant: the stored bc/ns always correspond exactly to the stored
+    committed set (snapshots happen only after the in-flight queue is
+    fully drained), so a crash between snapshots merely redoes the tail.
+    The stored bc is correction-free (the 1-degree analytic credits are
+    pure post-processing and are re-applied on every finalize).
+
+    Round ids are only meaningful relative to one schedule, so every
+    snapshot carries a schedule fingerprint (see
+    :func:`repro.distributed.fault_tolerance.schedule_fingerprint`);
+    resuming against a different schedule — other graph, batch size or
+    heuristics — raises instead of silently mixing incompatible partial
+    sums.
+
+    **Ledger namespacing.**  Under the multi-ledger straggler scheduler
+    each replica commits into its own ledger; ``save`` accepts either a
+    flat committed list (one shared ledger) or a list of per-replica
+    lists, stored as ``committed_r{i}`` alongside the merged union under
+    the legacy ``committed`` key.  :meth:`load` returns the union — a
+    round committed by *any* replica (including one that stole or was
+    re-dealt the round before the kill) is never re-accumulated — while
+    :meth:`load_namespaced` returns the per-replica sets so a resumed
+    multi-ledger driver keeps its commit attribution.  The straggler
+    policy and replica count may differ across the resume: exactly-once
+    only needs the union.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path)
+
+    def _open(self, expected_fingerprint: str | None):
+        z = np.load(self.path)
+        stored = str(z["fingerprint"])
+        if expected_fingerprint is not None and stored != expected_fingerprint:
+            z.close()
+            raise ValueError(
+                f"checkpoint {self.path} was written for a different "
+                f"schedule (stored {stored}, expected "
+                f"{expected_fingerprint}) — same graph, batch size and "
+                f"heuristics are required to resume"
+            )
+        return z
+
+    def load(self, expected_fingerprint: str | None = None):
+        """Returns (bc f64 [n] | None, ns_by_root dict, committed list).
+
+        ``committed`` is the union over all replica ledgers.  Raises
+        ValueError when the snapshot was written for a different schedule
+        than ``expected_fingerprint``.
+        """
+        bc, ns_by_root, by_ledger = self.load_namespaced(expected_fingerprint)
+        return bc, ns_by_root, sorted({r for lane in by_ledger for r in lane})
+
+    def load_namespaced(self, expected_fingerprint: str | None = None):
+        """Returns (bc | None, ns_by_root, committed_by_ledger).
+
+        ``committed_by_ledger`` is a list of per-replica committed-round
+        lists; a snapshot written by the single-ledger loop loads as one
+        ledger.  Same fingerprint semantics as :meth:`load`.
+        """
+        if not self.exists():
+            return None, {}, []
+        with self._open(expected_fingerprint) as z:
+            bc = z["bc"].astype(np.float64)
+            ns_by_root = {
+                int(r): float(v) for r, v in zip(z["ns_roots"], z["ns_vals"])
+            }
+            if "ledger_count" in z.files:
+                by_ledger = [
+                    [int(r) for r in z[f"committed_r{i}"]]
+                    for i in range(int(z["ledger_count"]))
+                ]
+            else:  # legacy single-ledger snapshot
+                by_ledger = [[int(r) for r in z["committed"]]]
+        return bc, ns_by_root, by_ledger
+
+    def save(self, bc, ns_by_root: dict, committed, fingerprint: str) -> None:
+        """``committed``: flat list[int] (one ledger) or list of per-replica
+        lists (multi-ledger); atomically replaces the previous snapshot."""
+        roots = np.asarray(sorted(ns_by_root), np.int64)
+        vals = np.asarray([ns_by_root[int(r)] for r in roots], np.float64)
+        committed = list(committed)
+        nested = bool(committed) and isinstance(
+            committed[0], (list, tuple, np.ndarray)
+        )
+        by_ledger = (
+            [[int(r) for r in lane] for lane in committed]
+            if nested
+            else [[int(r) for r in committed]]
+        )
+        union = sorted({rid for lane in by_ledger for rid in lane})
+        arrays = {
+            "bc": np.asarray(bc, np.float64),
+            "ns_roots": roots,
+            "ns_vals": vals,
+            "committed": np.asarray(union, np.int64),
+            "fingerprint": np.asarray(fingerprint),
+            "ledger_count": np.asarray(len(by_ledger), np.int64),
+        }
+        for i, lane in enumerate(by_ledger):
+            arrays[f"committed_r{i}"] = np.asarray(sorted(lane), np.int64)
+        tmp = f"{self.path}.tmp.npz"
+        np.savez(tmp, **arrays)
+        os.replace(tmp, self.path)

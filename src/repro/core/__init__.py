@@ -9,7 +9,8 @@ Layers (paper §3; see ARCHITECTURE.md for the full picture):
                   pair, written against the protocol
   driver.py       driver layer — shared round body (traversal_round) and
                   host round loop (BCDriver: async dispatch, donated BC
-                  accumulator, checkpoint/ledger resume)
+                  accumulator, checkpoint/ledger resume, multi-ledger
+                  straggler steal/re-deal scheduling)
   bc.py           single-device entry point (semantic reference)
   distributed.py  2-D decomposition over a device mesh (expand/fold
                   collectives) + sub-cluster replication entry point

@@ -18,6 +18,7 @@ from repro.core.driver import (
     BCDriver,
     BCResult,
     apply_reduction_corrections,
+    normalize_straggler,
     traversal_round,
 )
 from repro.core.operators import PallasDenseOperator, normalize_overlap
@@ -55,7 +56,7 @@ def make_round_fn(
 
     The returned function maps
       (sources i32 [s], derived i32 [k, 3], omega f32 [n])
-        -> (bc_round f32 [n], ns f32 [s+k], roots i32 [s+k])
+        -> (bc_round f32 [n], ns f32 [s+k], roots i32 [s+k], levels i32 [])
     """
     del n  # the operator knows its own row count
 
@@ -97,6 +98,7 @@ def betweenness_centrality(
     ledger=None,
     checkpoint=None,
     overlap: str = "none",
+    straggler: str = "none",
 ) -> BCResult:
     """Exact BC of an undirected, unweighted graph (paper conventions:
     unnormalized, both traversal directions counted).
@@ -118,11 +120,19 @@ def betweenness_centrality(
                    uniformity with the distributed entry point; a single
                    device has no collectives to overlap, so only "none"
                    is valid here.
+      straggler:   sub-cluster scheduling policy, accepted for protocol
+                   uniformity; a single device has no replicas to steal
+                   from or re-deal to, so only "none" is valid here.
     """
     if normalize_overlap(overlap) != "none":
         raise ValueError(
             "overlap schedules are a distributed-engine feature; "
             "single-device engines have no collectives to pipeline"
+        )
+    if normalize_straggler(straggler) != "none":
+        raise ValueError(
+            "straggler scheduling is a sub-cluster feature; a single "
+            "device has no replicas to steal rounds from or re-deal to"
         )
     n = graph.n
     schedule, prep, residual, omega_i = build_schedule(
@@ -142,8 +152,8 @@ def betweenness_centrality(
     )
 
     def block_fn(sources, derived):  # [1, s], [1, k, 3] -> block-dim outputs
-        bc_r, ns, roots = round_fn(sources[0], derived[0], omega)
-        return bc_r, ns[None], roots[None]
+        bc_r, ns, roots, levels = round_fn(sources[0], derived[0], omega)
+        return bc_r, ns[None], roots[None], levels[None]
 
     if jit:
         block_fn = jax.jit(block_fn)

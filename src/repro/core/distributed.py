@@ -47,7 +47,9 @@ recompute into the MXU block matmul.
 Sub-clustering (paper §3.3): a leading mesh axis carries ``fr`` graph
 replicas, each processing different source rounds; BC is additive so the
 final merge sums the replica dim (host-side, in the shared driver, so a
-straggling/preempted replica's round can be re-issued — see
+straggling/preempted replica's round can be re-issued — and, with
+``straggler="steal"|"redeal"``, actively moved between replicas by the
+driver's multi-ledger scheduler; see core/driver.py and
 distributed/fault_tolerance.py).
 """
 from __future__ import annotations
@@ -84,6 +86,8 @@ __all__ = [
     "distributed_betweenness_centrality",
     "one_degree_reduce_distributed",
     "resolve_overlap",
+    "level_time_estimates",
+    "prior_round_seconds",
     "estimate_device_footprint",
     "check_device_memory",
 ]
@@ -240,6 +244,89 @@ def check_device_memory(
     return foot
 
 
+def level_time_estimates(
+    partition: TwoDPartition,
+    engine_kind: str,
+    batch_size: int,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    tile_counts: dict | None = None,
+    hw=V5E,
+) -> tuple[float, float, float]:
+    """Roofline prices of one traversal level: (compute, expand, fold) s.
+
+    The shared pricing behind ``overlap="auto"`` (:func:`resolve_overlap`)
+    and the straggler scheduler's EWMA prior
+    (:func:`prior_round_seconds`): block compute from the
+    engine-dependent FLOPs / A-stream bytes, expand/fold collective
+    bytes from the α-β link model.
+    """
+    R, C, chunk, s = partition.R, partition.C, partition.chunk, batch_size
+    from repro.roofline.model import adjacency_stream_bytes
+
+    if engine_kind in ("pallas", "pallas_bf16"):
+        flops = 2.0 * (C * chunk) * (R * chunk) * s
+        a_bytes = adjacency_stream_bytes(engine_kind, R=R, C=C, chunk=chunk)
+    elif engine_kind == "pallas_sparse":
+        counts = tile_counts or partition.blocked_sparse_counts(bm, bk)
+        bm, bk, nnz = counts["bm"], counts["bk"], counts["nnz_max"]
+        flops = 2.0 * nnz * bm * bk * s
+        a_bytes = adjacency_stream_bytes(
+            engine_kind, R=R, C=C, chunk=chunk, nnz_tiles=nnz, bm=bm, bk=bk
+        )
+    else:  # arc-list: one gather+add per arc per source column
+        max_arcs = int(partition.src_local.shape[-1])
+        flops = 2.0 * max_arcs * s
+        a_bytes = adjacency_stream_bytes(
+            engine_kind, R=R, C=C, chunk=chunk, max_arcs=max_arcs
+        )
+    compute_s = max(flops / hw.peak_bf16_flops, a_bytes / hw.hbm_bandwidth)
+    from repro.roofline.model import exchange_operands
+
+    n_operands = exchange_operands(engine_kind)[0]  # forward exchange set
+    expand_s = (R - 1) * chunk * s * 4 * n_operands / hw.ici_link_bandwidth
+    fold_s = (C - 1) / C * (C * chunk) * s * 4 / hw.ici_link_bandwidth
+    return compute_s, expand_s, fold_s
+
+
+#: Nominal level count pricing the straggler prior: forward + backward
+#: sweeps of a shallow (RMAT-like) traversal.  The prior only seeds every
+#: replica's EWMA symmetrically — it cannot flag a straggler by itself —
+#: so the constant's job is order-of-magnitude, not accuracy.
+PRIOR_LEVELS = 16
+
+
+def prior_round_seconds(
+    partition: TwoDPartition,
+    engine_kind: str,
+    batch_size: int,
+    overlap: str,
+    *,
+    bm: int | None = None,
+    bk: int | None = None,
+    tile_counts: dict | None = None,
+    hw=V5E,
+) -> float:
+    """Roofline per-round wall estimate — the straggler EWMA's prior.
+
+    One level priced under the resolved collective schedule
+    (:func:`repro.roofline.model.overlap_step_time` via
+    :func:`repro.roofline.model.auto_overlap_policy`'s estimate table) ×
+    :data:`PRIOR_LEVELS` nominal levels.  Gives the scheduler a
+    before-any-observation time scale (paper-motivated: round wall is
+    data-dependent and unknown until traversal).
+    """
+    compute_s, expand_s, fold_s = level_time_estimates(
+        partition, engine_kind, batch_size,
+        bm=bm, bk=bk, tile_counts=tile_counts, hw=hw,
+    )
+    _, estimates = auto_overlap_policy(
+        compute_s, expand_s, fold_s, partition.R, partition.C, hw=hw
+    )
+    return estimates[normalize_overlap(overlap)] * PRIOR_LEVELS
+
+
 def resolve_overlap(
     overlap: str | None,
     partition: TwoDPartition,
@@ -264,30 +351,13 @@ def resolve_overlap(
     """
     if overlap != "auto":
         return normalize_overlap(overlap)
-    R, C, chunk, s = partition.R, partition.C, partition.chunk, batch_size
-    from repro.roofline.model import adjacency_stream_bytes
-
-    if engine_kind in ("pallas", "pallas_bf16"):
-        flops = 2.0 * (C * chunk) * (R * chunk) * s
-        a_bytes = adjacency_stream_bytes(engine_kind, R=R, C=C, chunk=chunk)
-    elif engine_kind == "pallas_sparse":
-        counts = tile_counts or partition.blocked_sparse_counts(bm, bk)
-        bm, bk, nnz = counts["bm"], counts["bk"], counts["nnz_max"]
-        flops = 2.0 * nnz * bm * bk * s
-        a_bytes = adjacency_stream_bytes(
-            engine_kind, R=R, C=C, chunk=chunk, nnz_tiles=nnz, bm=bm, bk=bk
-        )
-    else:  # arc-list: one gather+add per arc per source column
-        max_arcs = int(partition.src_local.shape[-1])
-        flops = 2.0 * max_arcs * s
-        a_bytes = adjacency_stream_bytes(
-            engine_kind, R=R, C=C, chunk=chunk, max_arcs=max_arcs
-        )
-    compute_s = max(flops / hw.peak_bf16_flops, a_bytes / hw.hbm_bandwidth)
-    n_operands = 2 if engine_kind != "sparse" else 1  # forward exchange set
-    expand_s = (R - 1) * chunk * s * 4 * n_operands / hw.ici_link_bandwidth
-    fold_s = (C - 1) / C * (C * chunk) * s * 4 / hw.ici_link_bandwidth
-    policy, estimates = auto_overlap_policy(compute_s, expand_s, fold_s, R, C, hw=hw)
+    compute_s, expand_s, fold_s = level_time_estimates(
+        partition, engine_kind, batch_size,
+        bm=bm, bk=bk, tile_counts=tile_counts, hw=hw,
+    )
+    policy, estimates = auto_overlap_policy(
+        compute_s, expand_s, fold_s, partition.R, partition.C, hw=hw
+    )
     logger.info(
         "overlap='auto' -> %r for engine %s (per-level estimates: %s)",
         policy,
@@ -377,7 +447,10 @@ def make_distributed_round_fn(
        derived    i32 [fr, k, 3]         — sharded (replica))
       -> (bc  f32 [fr, n_pad]  — sharded (replica, (col, row)),
           ns  f32 [fr, s+k]    — sharded (replica),
-          roots i32 [fr, s+k]  — sharded (replica))
+          roots i32 [fr, s+k]  — sharded (replica),
+          levels i32 [fr]      — sharded (replica): each replica's own
+          traversal depth this round, the straggler scheduler's
+          per-round cost signal)
 
     With ``engine_kind="pallas"`` / ``"pallas_bf16"`` (dense-block MXU
     local compute) the two arc arrays are replaced by one argument:
@@ -444,10 +517,12 @@ def make_distributed_round_fn(
     )
 
     def round_body(op, omega, sources, derived):
-        bc_owned, ns, roots = traversal_round(
+        bc_owned, ns, roots, levels = traversal_round(
             op, sources[0], derived[0], omega, num_levels=num_levels
         )
-        return bc_owned[None], ns[None], roots[None]
+        # levels is grid-reduced but *per replica* (reduce_max_grid), the
+        # straggler scheduler's cost signal — sharded on the replica axis.
+        return bc_owned[None], ns[None], roots[None], levels[None]
 
     if engine_kind == "pallas_sparse":
         # (tiles, tile_rows, tile_cols): [R, C, T, bm, bk]-shaped full
@@ -551,6 +626,7 @@ def make_distributed_round_fn(
         P(*rep, (col_axis, row_axis)),
         P(*rep, None),
         P(*rep, None),
+        P(*rep),
     )
     shmapped = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
@@ -574,6 +650,8 @@ def distributed_betweenness_centrality(
     hbm_limit_bytes: float | None = None,
     ledger=None,
     checkpoint=None,
+    straggler: str = "none",
+    straggler_factor: float = 2.0,
 ) -> tuple[np.ndarray, Schedule]:
     """Run the full distributed BC computation on ``mesh``.
 
@@ -581,6 +659,14 @@ def distributed_betweenness_centrality(
     :class:`repro.core.driver.BCDriver`; the replica merge sums the
     replica dim after the loop so a straggling/preempted replica's round
     can be re-issued (fault tolerance path, distributed/fault_tolerance.py).
+    ``straggler`` selects the multi-ledger sub-cluster scheduling policy
+    (:data:`repro.core.driver.STRAGGLER_POLICIES`): under ``"steal"`` or
+    ``"redeal"`` the driver keeps one round ledger per replica, seeds its
+    per-replica EWMA from the roofline prior
+    (:func:`prior_round_seconds`) and moves uncommitted rounds between
+    replica queues when one replica's per-round wall exceeds
+    ``straggler_factor ×`` the fastest replica's; requires a
+    ``replica_axis``.
     ``engine_kind`` selects the block-local compute
     (:data:`DIST_ENGINE_KINDS`: arc-list "sparse", fused dense-block
     "pallas"/"pallas_bf16", or blocked-sparse "pallas_sparse");
@@ -635,6 +721,21 @@ def distributed_betweenness_centrality(
     def block_fn(sources, derived):
         return round_fn(*graph_args, omega_dev, sources, derived)
 
+    from repro.core.driver import normalize_straggler
+
+    straggler = normalize_straggler(straggler)
+    prior_round_s = None
+    if straggler != "none":
+        if replica_axis is None:
+            raise ValueError(
+                "straggler scheduling re-deals rounds between sub-cluster "
+                "replicas; pass replica_axis (a mesh with fr > 1)"
+            )
+        prior_round_s = prior_round_seconds(
+            part, engine_kind, batch_size, overlap,
+            bm=bm, bk=bk, tile_counts=tile_counts,
+        )
+
     driver = BCDriver(
         block_fn,
         schedule,
@@ -643,6 +744,9 @@ def distributed_betweenness_centrality(
         ledger=ledger,
         checkpoint=checkpoint,
         rounds_per_dispatch=fr,
+        straggler=straggler,
+        straggler_factor=straggler_factor,
+        prior_round_s=prior_round_s,
     )
     result = driver.run()
     return result.bc, schedule

@@ -3,7 +3,8 @@ engines (single-device dense/sparse/Pallas and 2-D distributed).
 
 :func:`traversal_round` is the per-round algebra — forward counting,
 2-degree column derivation, dependency accumulation, per-round BC and
-component-size (n_s) extraction — written once against the
+component-size (n_s) extraction, plus the round's own traversal depth
+(the straggler scheduler's cost signal) — written once against the
 :class:`repro.core.operators.TraversalOperator` protocol.  Entry points
 wrap it in whatever jit/shard_map shell their operator needs.
 
@@ -23,12 +24,24 @@ wrap it in whatever jit/shard_map shell their operator needs.
 * an optional :class:`repro.distributed.fault_tolerance.RoundLedger`
   makes the loop restartable: committed rounds are re-dealt as inert
   all-padding columns (BC accumulation is additive, padding contributes
-  exactly zero), which keeps every dispatch shape static.
+  exactly zero), which keeps every dispatch shape static;
+* ``straggler`` selects the multi-ledger sub-cluster scheduling policy
+  (:data:`STRAGGLER_POLICIES`): with ``"steal"`` or ``"redeal"`` the
+  driver keeps one :class:`RoundLedger` *per replica*, tracks a
+  per-replica EWMA of per-round wall time (seeded from the roofline's
+  ``overlap_step_time`` estimate before any round completes), and moves
+  uncommitted rounds between replica queues when one replica straggles.
+  Commits then move from dispatch time to drain time and the BC
+  accumulate is masked by the commit outcome, so a round dispatched on
+  two replicas (speculative tail duplication, or a re-deal racing a
+  kill-and-resume) is accumulated exactly once: first commit wins, the
+  loser's lane is multiplied by zero *before* the donated add.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 from typing import Callable
 
 import numpy as np
@@ -40,14 +53,47 @@ from repro.core import engine
 from repro.core.heuristics.one_degree import OneDegreeReduction, leaf_correction
 from repro.core.heuristics.two_degree import derive_two_degree_columns
 from repro.core.operators import TraversalOperator, as_operator
-from repro.core.scheduler import Schedule
+from repro.core.scheduler import Schedule, redeal_rounds, split_rounds
 
 __all__ = [
     "BCResult",
     "BCDriver",
     "traversal_round",
     "apply_reduction_corrections",
+    "STRAGGLER_POLICIES",
+    "normalize_straggler",
 ]
+
+logger = logging.getLogger(__name__)
+
+#: Sub-cluster straggler-mitigation policies of :class:`BCDriver` (the
+#: single source of truth for ``--straggler`` choices and the docs drift
+#: check).  ``"none"`` keeps the static deal (one shared ledger, commits
+#: at dispatch — the legacy loop).  ``"steal"`` is the conservative
+#: multi-ledger policy: work moves only when a replica's queue runs dry —
+#: the idle replica pulls the next round from the heaviest backlog, and
+#: at the very tail it speculatively *duplicates* the presumed
+#: straggler's in-flight round instead of dispatching padding (MapReduce
+#: backup tasks; first commit wins).  ``"redeal"`` is the aggressive
+#: policy: when a replica's EWMA per-round wall exceeds
+#: ``straggler_factor ×`` the fastest replica's, every pending round is
+#: re-dealt across the replica queues so similar-cost rounds are
+#: co-scheduled (the straggler's backlog drains into the fastest
+#: replica's queue).
+STRAGGLER_POLICIES = ("none", "steal", "redeal")
+
+_EWMA_ALPHA = 0.5  # weight of the newest per-round wall observation
+
+
+def normalize_straggler(policy: str | None) -> str:
+    """Validate a straggler policy string (None means "none")."""
+    policy = "none" if policy is None else policy
+    if policy not in STRAGGLER_POLICIES:
+        raise ValueError(
+            f"unknown straggler policy {policy!r}; expected one of "
+            f"{STRAGGLER_POLICIES}"
+        )
+    return policy
 
 
 def traversal_round(
@@ -57,7 +103,7 @@ def traversal_round(
     omega: jnp.ndarray,  # f32 [n_rows] 1-degree weights (operator's rows)
     *,
     num_levels: int | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One BC round against the operator protocol.
 
     Returns
@@ -65,7 +111,13 @@ def traversal_round(
                 operator's rows (global BC = sum over rounds/devices),
       ns        f32 [s+k]    — per-column component size n_s (§3.4.1),
                 already globally reduced,
-      roots     i32 [s+k]    — root vertex of every column (-1 padding).
+      roots     i32 [s+k]    — root vertex of every column (-1 padding),
+      levels    i32 []       — traversal depth of *this* round on its own
+                grid (``reduce_max_grid``: per-replica even when
+                ``sync_axes`` pins the loop bounds to the mesh-wide max).
+                0 for an all-padding round.  This is the data-dependent
+                cost signal the straggler scheduler attributes wall time
+                by.
     """
     op = as_operator(operator)
     omega_f = omega.astype(jnp.float32)
@@ -85,7 +137,11 @@ def traversal_round(
     depth_all = jnp.concatenate([fwd.depth, depth_c], axis=1)
 
     # ---------------------------------------------------------- backward
-    max_depth = op.reduce_max(jnp.max(depth_all))
+    # decomposed max: grid first (the per-replica depth = the straggler
+    # cost signal), then the sync-axes extension for the loop bound — one
+    # reduction total when sync_axes is empty (reduce_max_sync is a no-op)
+    grid_max = op.reduce_max_grid(jnp.max(depth_all))
+    max_depth = op.reduce_max_sync(grid_max)
     delta = engine.backward_accumulation(
         op, sigma_all, depth_all, omega_f, max_depth, num_levels=num_levels
     )
@@ -101,7 +157,8 @@ def traversal_round(
 
     # per-column component size  n_s = Σ_{d ≥ 0} (1 + ω)   (paper §3.4.1)
     ns = op.reduce_sum(((depth_all >= 0) * (1.0 + omega_f)[:, None]).sum(axis=0))
-    return bc_local, ns, roots
+    levels = (grid_max + 1).astype(jnp.int32)
+    return bc_local, ns, roots, levels
 
 
 def apply_reduction_corrections(
@@ -141,24 +198,48 @@ class BCResult:
     backward_columns: int  # dependency columns (explicit + derived)
     wall_s: float = 0.0  # host wall time of the round loop
     block_times: list[float] | None = None  # per-dispatch-block seconds
-    #   (profile mode only — the driver blocks per block to measure, so
-    #   async dispatch is disabled; use for benchmarking, not production)
+    #   (profile / straggler modes only — the driver blocks per block to
+    #   measure, so async dispatch is disabled; use for benchmarking and
+    #   scheduling, not peak-throughput production)
+    straggler_stats: dict | None = None  # multi-ledger scheduler telemetry
+    #   (straggler != "none" only): per-replica wall/rounds/levels,
+    #   rounds stolen / re-dealt, speculative duplicates, idle estimate.
+
+
+def _unpack_block(out):
+    """Accept 3-tuple (legacy) or 4-tuple round_fn outputs."""
+    if len(out) == 4:
+        return out
+    bc_blk, ns, roots = out
+    return bc_blk, ns, roots, None
 
 
 class BCDriver:
     """Shared host round loop (see module docstring).
 
     ``round_fn(sources i32 [fr, s], derived i32 [fr, k, 3])`` must return
-    device arrays ``(bc_block, ns [fr, s+k], roots [fr, s+k])`` where
-    ``bc_block`` has any stable shape whose leading dims sum away to the
-    per-vertex contribution ([n] on one device; [fr, n_pad] sharded on a
-    mesh).  All graph-constant operands (adjacency, ω, arc lists) are
-    expected to be partially applied into ``round_fn``.
+    device arrays ``(bc_block, ns [fr, s+k], roots [fr, s+k],
+    levels [fr])`` where ``bc_block`` has any stable shape whose leading
+    dims sum away to the per-vertex contribution ([n] on one device;
+    [fr, n_pad] sharded on a mesh).  All graph-constant operands
+    (adjacency, ω, arc lists) are expected to be partially applied into
+    ``round_fn``.  Legacy 3-tuple round functions (no ``levels``) are
+    accepted under ``straggler="none"``.
 
     ``profile=True`` blocks on every dispatch block and records its wall
     seconds in ``BCResult.block_times`` (plus total ``wall_s``) — the
     measurement mode the overlap benchmarks use; it defeats the async
     pipeline, so leave it off in production.
+
+    ``straggler`` (see :data:`STRAGGLER_POLICIES`) enables the
+    multi-ledger sub-cluster scheduler; it requires ``round_fn`` to carry
+    a leading replica dim of ``rounds_per_dispatch`` on ``bc_block`` and
+    to return ``levels``, and — like ``profile`` — blocks per dispatch
+    block (the per-round wall observations are its control signal).
+    ``straggler_factor`` is the EWMA ratio that flags a replica as a
+    straggler; ``prior_round_s`` seeds every replica's EWMA before any
+    round completes (callers pass the roofline ``overlap_step_time``
+    estimate; symmetric, so no re-deal can fire on the prior alone).
     """
 
     def __init__(
@@ -174,6 +255,9 @@ class BCDriver:
         rounds_per_dispatch: int = 1,
         max_inflight: int = 2,
         profile: bool = False,
+        straggler: str = "none",
+        straggler_factor: float = 2.0,
+        prior_round_s: float | None = None,
     ):
         self.round_fn = round_fn
         self.profile = profile
@@ -182,29 +266,67 @@ class BCDriver:
         self.prep = prep
         self.checkpoint = checkpoint
         self.checkpoint_every = max(1, checkpoint_every)
+        self.straggler = normalize_straggler(straggler)
+        self.straggler_factor = float(straggler_factor)
+        self.prior_round_s = prior_round_s
         self._bc0 = np.zeros(n, np.float64)
         self._ns0: dict[int, float] = {}
         self._fingerprint = None
+        self.fr = max(1, rounds_per_dispatch)
+        self.max_inflight = max(1, max_inflight)
+
+        from repro.distributed.fault_tolerance import (
+            RoundLedger,
+            schedule_fingerprint,
+        )
+
         if checkpoint is not None:
             if ledger is not None:
                 raise ValueError("pass either a ledger or a checkpoint, not both")
-            from repro.distributed.fault_tolerance import (
-                RoundLedger,
-                schedule_fingerprint,
-            )
-
             self._fingerprint = schedule_fingerprint(n, schedule)
-            bc0, ns0, committed = checkpoint.load(self._fingerprint)
-            if bc0 is not None:
-                self._bc0 = bc0[:n]
-                self._ns0 = ns0
-            ledger = RoundLedger.from_state(committed)
-        self.ledger = ledger
-        self.fr = max(1, rounds_per_dispatch)
-        self.max_inflight = max(1, max_inflight)
+
+        if self.straggler != "none":
+            if ledger is not None:
+                raise ValueError(
+                    "straggler scheduling keeps one ledger per replica; "
+                    "pass a checkpoint (or nothing), not an external ledger"
+                )
+            by_lane: list[list[int]] = [[] for _ in range(self.fr)]
+            if checkpoint is not None:
+                bc0, ns0, stored = checkpoint.load_namespaced(self._fingerprint)
+                if bc0 is not None:
+                    self._bc0 = bc0[: n]
+                    self._ns0 = ns0
+                if len(stored) == self.fr:
+                    by_lane = [list(lane) for lane in stored]
+                else:  # replica count changed across the resume: merge
+                    union = sorted({rid for lane in stored for rid in lane})
+                    by_lane[0] = union
+            self.ledgers = [RoundLedger.from_state(lane) for lane in by_lane]
+            self.ledger = None
+        else:
+            if checkpoint is not None:
+                bc0, ns0, committed = checkpoint.load(self._fingerprint)
+                if bc0 is not None:
+                    self._bc0 = bc0[: n]
+                    self._ns0 = ns0
+                ledger = RoundLedger.from_state(committed)
+            self.ledger = ledger
+            self.ledgers = None
         # donated device-side accumulate: bc never round-trips per round
         self._accumulate = jax.jit(lambda acc, x: acc + x, donate_argnums=(0,))
+        # drain-time masked accumulate (straggler modes): the commit
+        # outcome zeroes losing lanes *before* the donated add, so a
+        # double-dispatched round contributes exactly once.
+        def _bmask(blk, m):
+            return blk * m.reshape(m.shape + (1,) * (blk.ndim - 1))
 
+        self._masked_accumulate = jax.jit(
+            lambda acc, blk, m: acc + _bmask(blk, m), donate_argnums=(0,)
+        )
+        self._masked_scale = jax.jit(_bmask)
+
+    # ------------------------------------------------------- legacy deal
     def _blocks(self):
         """Deal rounds into [fr]-sized dispatch blocks of host arrays.
 
@@ -241,7 +363,19 @@ class BCDriver:
             bc = bc + dev[: self.n]
         return bc
 
+    def _finalize(self, bc_acc, ns_by_root) -> np.ndarray:
+        bc = self._collect_bc(bc_acc)
+        if self.prep is not None:
+            apply_reduction_corrections(bc, self.prep, self.schedule, ns_by_root)
+        return bc
+
     def run(self) -> BCResult:
+        if self.straggler != "none":
+            return self._run_straggler()
+        return self._run_static()
+
+    # --------------------------------------------- legacy (static) loop
+    def _run_static(self) -> BCResult:
         import time
 
         bc_acc = None
@@ -276,7 +410,9 @@ class BCDriver:
 
         for srcs, ders, live in self._blocks():
             t_blk = time.perf_counter()
-            bc_blk, ns, roots = self.round_fn(jnp.asarray(srcs), jnp.asarray(ders))
+            bc_blk, ns, roots, _levels = _unpack_block(
+                self.round_fn(jnp.asarray(srcs), jnp.asarray(ders))
+            )
             if block_times is not None:  # profile: sync to time this block
                 jax.block_until_ready(bc_blk)
                 block_times.append(time.perf_counter() - t_blk)
@@ -298,16 +434,273 @@ class BCDriver:
         if self.checkpoint is not None:
             snapshot()
 
-        bc = self._collect_bc(bc_acc)
-        if self.prep is not None:
-            apply_reduction_corrections(bc, self.prep, self.schedule, ns_by_root)
-
         return BCResult(
-            bc=bc,
+            bc=self._finalize(bc_acc, ns_by_root),
             schedule=self.schedule,
             rounds_run=rounds_run,
             forward_columns=fwd_cols,
             backward_columns=bwd_cols,
             wall_s=time.perf_counter() - t_start,
             block_times=block_times,
+        )
+
+    # ------------------------------------------- multi-ledger scheduler
+    def _committed_union(self) -> set[int]:
+        out: set[int] = set()
+        for led in self.ledgers:
+            out |= set(led.state())
+        return out
+
+    def _try_commit(self, lane: int, rid: int) -> bool:
+        """Exactly-once across *all* replica ledgers (first commit wins)."""
+        for led in self.ledgers:
+            if led.is_committed(rid):
+                return False
+        return self.ledgers[lane].try_commit(rid)
+
+    def _run_straggler(self) -> BCResult:
+        """The multi-ledger sub-cluster round loop (steal / redeal).
+
+        Differences from the static loop:
+
+        * one round-id queue and one :class:`RoundLedger` per replica,
+          seeded by :func:`repro.core.scheduler.split_rounds` minus
+          whatever any ledger already committed (merged resume);
+        * each dispatch block is *timed* (block_until_ready, as in
+          profile mode) and its wall is attributed to the replicas in
+          proportion to their observed traversal ``levels`` — under a
+          lockstep (ring-overlap) schedule the block wall is shared, so
+          depth share is the per-replica signal — feeding a per-replica
+          EWMA of per-round seconds;
+        * commits happen at *drain* time and the accumulate is masked by
+          the commit outcome (donation-safe double-dispatch);
+        * between blocks the policy moves pending rounds: ``steal`` pulls
+          into idle lanes and duplicates the straggler's round at the
+          tail, ``redeal`` re-packs every pending round when the EWMA
+          ratio crosses ``straggler_factor``.
+        """
+        import time
+
+        fr = self.fr
+        s = self.schedule.batch_size
+        k = self.schedule.derived_per_round
+        rounds = self.schedule.rounds
+        queues = split_rounds(len(rounds), fr, self._committed_union())
+
+        prior = self.prior_round_s
+        ewma: list[float | None] = [None] * fr
+        observed = [False] * fr
+
+        def est(r: int) -> float:
+            if ewma[r] is not None:
+                return ewma[r]
+            return prior if prior is not None else 1.0
+
+        bc_acc = None
+        ns_by_root: dict[int, float] = dict(self._ns0)
+        rounds_run = 0
+        fwd_cols = 0
+        bwd_cols = 0
+        blocks_since_snapshot = 0
+        block_times: list[float] = []
+        stats = {
+            "policy": self.straggler,
+            "factor": self.straggler_factor,
+            "replicas": fr,
+            "rounds_stolen": 0,
+            "rounds_redealt": 0,
+            "redeal_events": 0,
+            "duplicates_dispatched": 0,
+            "duplicates_discarded": 0,
+            "per_replica_wall_s": [0.0] * fr,
+            "per_replica_rounds": [0] * fr,
+            "per_replica_levels": [0] * fr,
+            "idle_levels": 0,
+            "idle_s_est": 0.0,
+        }
+        was_flagged = False
+        t_start = time.perf_counter()
+
+        def flagged() -> bool:
+            vals = [ewma[r] for r in range(fr) if observed[r]]
+            if len(vals) < 2:
+                return False
+            lo, hi = min(vals), max(vals)
+            return lo > 0.0 and hi > self.straggler_factor * lo
+
+        def snapshot():
+            self.checkpoint.save(
+                self._collect_bc(bc_acc),
+                ns_by_root,
+                [led.state() for led in self.ledgers],
+                self._fingerprint,
+            )
+
+        while any(queues):
+            # ---------------------------------------- policy: move work
+            if self.straggler == "redeal":
+                lengths = [len(q) for q in queues]
+                fire = flagged()
+                tail_gap = min(lengths) == 0 and max(lengths) >= 2
+                if (fire and not was_flagged) or tail_gap:
+                    queues, moved = redeal_rounds(queues, [est(r) for r in range(fr)])
+                    if moved:
+                        stats["rounds_redealt"] += moved
+                        stats["redeal_events"] += 1
+                        logger.info(
+                            "straggler redeal: moved %d pending rounds "
+                            "(EWMA s/round: %s)",
+                            moved,
+                            [None if ewma[r] is None else round(ewma[r], 6)
+                             for r in range(fr)],
+                        )
+                was_flagged = fire
+
+            # ----------------------------------------------- form block
+            lane_rids: list[int | None] = [
+                queues[r].pop(0) if queues[r] else None for r in range(fr)
+            ]
+            duplicate = [False] * fr
+            if self.straggler == "steal":
+                # idle lanes pull from the heaviest remaining backlog
+                for r in sorted(range(fr), key=est):
+                    if lane_rids[r] is not None:
+                        continue
+                    donors = [d for d in range(fr) if queues[d]]
+                    if not donors:
+                        continue
+                    donor = max(donors, key=lambda d: len(queues[d]) * est(d))
+                    lane_rids[r] = queues[donor].pop(0)
+                    stats["rounds_stolen"] += 1
+                # tail: still-idle lanes back up the presumed straggler's
+                # round instead of dispatching padding (first commit wins)
+                live = [r for r in range(fr) if lane_rids[r] is not None]
+                idle = [r for r in range(fr) if lane_rids[r] is None]
+                if live and idle:
+                    slowest = max(live, key=est)
+                    for r in idle:
+                        lane_rids[r] = lane_rids[slowest]
+                        duplicate[r] = True
+                        stats["duplicates_dispatched"] += 1
+            if all(rid is None for rid in lane_rids):
+                continue
+
+            srcs = np.full((fr, s), -1, np.int32)
+            ders = np.full((fr, k, 3), -1, np.int32)
+            for r, rid in enumerate(lane_rids):
+                if rid is not None:
+                    srcs[r] = rounds[rid].sources
+                    ders[r] = rounds[rid].derived
+
+            # ------------------------------------- dispatch + observe
+            t_blk = time.perf_counter()
+            out = self.round_fn(jnp.asarray(srcs), jnp.asarray(ders))
+            if len(out) != 4:
+                raise ValueError(
+                    "straggler scheduling needs a round_fn returning "
+                    "(bc, ns, roots, levels); got a legacy 3-tuple"
+                )
+            bc_blk, ns_dev, roots_dev, levels_dev = out
+            jax.block_until_ready(bc_blk)
+            wall = time.perf_counter() - t_blk
+            block_times.append(wall)
+            if bc_blk.shape[0] != fr:
+                raise ValueError(
+                    f"straggler scheduling needs a per-replica bc block "
+                    f"(leading dim {fr}); got shape {tuple(bc_blk.shape)}"
+                )
+            levels_np = np.asarray(levels_dev).reshape(-1).astype(np.int64)
+            # duplicate lanes ran work they will discard: they get no wall
+            # attribution and no EWMA update (their "cost" belongs to the
+            # round's owner lane, which is also in this block)
+            own = [
+                r for r in range(fr)
+                if lane_rids[r] is not None and not duplicate[r]
+            ]
+            lv_total = int(levels_np[own].sum())
+            lv_max = int(levels_np[own].max()) if own else 0
+            for r in own:
+                share = (
+                    levels_np[r] / lv_total if lv_total > 0 else 1.0 / len(own)
+                )
+                obs = wall * float(share)
+                ewma[r] = (
+                    obs
+                    if ewma[r] is None and prior is None
+                    else _EWMA_ALPHA * obs
+                    + (1.0 - _EWMA_ALPHA) * (ewma[r] if ewma[r] is not None else prior)
+                )
+                observed[r] = True
+                stats["per_replica_wall_s"][r] += obs
+                stats["per_replica_levels"][r] += int(levels_np[r])
+                stats["idle_levels"] += lv_max - int(levels_np[r])
+            if lv_max > 0 and own:
+                idle_frac = sum(lv_max - int(levels_np[r]) for r in own) / (
+                    len(own) * lv_max
+                )
+                stats["idle_s_est"] += wall * idle_frac
+
+            # -------------------------- drain: commit-or-discard + add
+            # originals commit before their speculative duplicates, so a
+            # backup copy never out-commits the lane that owns the round
+            # (keeps duplicates_discarded and per-replica attribution
+            # honest; exactly-once holds in either order)
+            mask = np.zeros(fr, np.float32)
+            roots_np = np.asarray(roots_dev)
+            ns_np = np.asarray(ns_dev, np.float64)
+            for r in sorted(range(fr), key=lambda r: duplicate[r]):
+                rid = lane_rids[r]
+                if rid is None:
+                    continue
+                if self._try_commit(r, rid):
+                    mask[r] = 1.0
+                    rounds_run += 1
+                    stats["per_replica_rounds"][r] += 1
+                    fwd_cols += int((srcs[r] >= 0).sum())
+                    bwd_cols += int(
+                        (srcs[r] >= 0).sum() + (ders[r, :, 0] >= 0).sum()
+                    )
+                    for root, nv in zip(roots_np[r], ns_np[r]):
+                        if root >= 0:
+                            ns_by_root[int(root)] = float(nv)
+                elif duplicate[r]:
+                    stats["duplicates_discarded"] += 1
+            mask_dev = jnp.asarray(mask)
+            bc_acc = (
+                self._masked_scale(bc_blk, mask_dev)
+                if bc_acc is None
+                else self._masked_accumulate(bc_acc, bc_blk, mask_dev)
+            )
+
+            blocks_since_snapshot += 1
+            if self.checkpoint is not None and (
+                blocks_since_snapshot >= self.checkpoint_every
+            ):
+                snapshot()
+                blocks_since_snapshot = 0
+
+        if self.checkpoint is not None:
+            snapshot()
+        logger.info(
+            "straggler=%s: %d rounds, %d stolen, %d re-dealt (%d events), "
+            "%d/%d duplicates discarded, idle ≈ %.3fs of %.3fs wall",
+            self.straggler,
+            rounds_run,
+            stats["rounds_stolen"],
+            stats["rounds_redealt"],
+            stats["redeal_events"],
+            stats["duplicates_discarded"],
+            stats["duplicates_dispatched"],
+            stats["idle_s_est"],
+            time.perf_counter() - t_start,
+        )
+        return BCResult(
+            bc=self._finalize(bc_acc, ns_by_root),
+            schedule=self.schedule,
+            rounds_run=rounds_run,
+            forward_columns=fwd_cols,
+            backward_columns=bwd_cols,
+            wall_s=time.perf_counter() - t_start,
+            block_times=block_times,
+            straggler_stats=stats,
         )

@@ -1,4 +1,25 @@
-"""Topology heuristics (paper §3.4): 1-degree reduction, 2-degree DMF."""
+"""Topology heuristics (paper §3.4): 1-degree reduction, 2-degree DMF.
+
+The ``heuristics=`` selector threading through ``build_schedule``, both
+BC entry points and ``launch/bc.py --heuristics`` maps to these modules
+as follows (:data:`repro.core.scheduler.HEURISTICS_MODES`, paper Fig. 12
+naming; see README.md § Heuristics):
+
+  h0    no preprocessing — every eligible vertex runs a forward BFS.
+  h1    1-degree reduction (one_degree.py): degree-1 vertices are never
+        traversed; their exact BC credit is recovered by the ω-weighted
+        recursion + the post-round leaf correction.
+  h2    2-degree Dynamic Merging of Frontiers (two_degree.py): a
+        2-degree vertex's forward column is *derived* (Alg. 7) from its
+        two neighbors' columns in the same round — only its backward
+        sweep runs.
+  h3    h1 + h2 (the heuristics compose: h2 claims 2-degree vertices of
+        the h1 residual graph).
+  h1t / h3t   beyond-paper: the 1-degree pass repeats to a fixed point,
+        contracting whole pendant trees (one_degree.py
+        ``exhaustive=True``); removed interior vertices get the
+        generalized 2·S·(n−1−S) + 2·P credit.
+"""
 from repro.core.heuristics.one_degree import OneDegreeReduction, one_degree_reduce
 from repro.core.heuristics.two_degree import claim_two_degree, derive_two_degree_columns
 

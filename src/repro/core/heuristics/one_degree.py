@@ -25,7 +25,11 @@ oracle in tests/test_heuristics.py):
    leaf) need no traversal: ``n_v = 1 + ω_v`` analytically.
 
 The paper performs a *single* pass (tree vertices are not removed
-repeatedly — their footnote 1); we match that default.
+repeatedly — their footnote 1); we match that default.  Selected as
+``heuristics="h1"`` (or "h3" combined with the 2-degree DMF); the
+``exhaustive=True`` fixed-point variant is the beyond-paper
+"h1t"/"h3t" mode (:data:`repro.core.scheduler.HEURISTICS_MODES`,
+README.md § Heuristics).
 """
 from __future__ import annotations
 

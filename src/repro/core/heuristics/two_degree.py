@@ -24,6 +24,11 @@ requirement is that both neighbors are explicit sources of the same
 round.  The claim below therefore recovers ⌊n/2⌋ vertices on a cycle
 (the paper's upper bound) and strictly more than the paper's
 implementation on shared-neighbor topologies.
+
+Selected as ``heuristics="h2"`` (or "h3"/"h3t" combined with the
+1-degree reduction, which runs first: degrees here are *residual*
+degrees — :data:`repro.core.scheduler.HEURISTICS_MODES`, README.md
+§ Heuristics).
 """
 from __future__ import annotations
 

@@ -165,6 +165,31 @@ class TraversalOperator:
         """Global max (depth agreement before the backward sweep)."""
         return value
 
+    def reduce_max_grid(self, value: jnp.ndarray) -> jnp.ndarray:
+        """Max over *this traversal's own* devices only.
+
+        Identical to :meth:`reduce_max` except that it never spans
+        ``sync_axes``: under a ring overlap policy the loop-bound
+        reductions include the sub-cluster replica axis (all replicas run
+        max-over-replicas levels so the ppermute rendezvous stays in
+        lockstep), but the straggler scheduler
+        (:class:`repro.core.driver.BCDriver`) needs each replica's *own*
+        data-dependent depth as its per-round cost signal — the quantity
+        the synced bound deliberately hides.
+        """
+        return self.reduce_max(value)
+
+    def reduce_max_sync(self, value: jnp.ndarray) -> jnp.ndarray:
+        """Extend an already grid-reduced max over ``sync_axes`` only.
+
+        ``reduce_max == reduce_max_sync ∘ reduce_max_grid``; the driver's
+        round body uses the decomposed form so the per-replica depth
+        (grid max) and the synced loop bound share one reduction — no
+        extra collective when ``sync_axes`` is empty (the common case).
+        Identity on single-device operators.
+        """
+        return value
+
     def reduce_sum(self, value: jnp.ndarray) -> jnp.ndarray:
         """Global sum of an additive per-column quantity (e.g. n_s)."""
         return value
@@ -345,6 +370,7 @@ class DistributedOperator(TraversalOperator):
         self.row_axis = row_axis
         self.col_axis = col_axis
         self.grid_axes = (row_axis, col_axis)
+        self.sync_axes = tuple(sync_axes)
         self.loop_axes = (row_axis, col_axis) + tuple(sync_axes)
         self.split_backward = split_backward
         self.overlap = normalize_overlap(overlap)
@@ -451,6 +477,16 @@ class DistributedOperator(TraversalOperator):
 
     def reduce_max(self, value):
         return jax.lax.pmax(value, self.loop_axes)
+
+    def reduce_max_grid(self, value):
+        # grid-local (never spans sync_axes): the replica's own depth
+        return jax.lax.pmax(value, self.grid_axes)
+
+    def reduce_max_sync(self, value):
+        # replica-axis extension of a grid max (no-op without sync_axes)
+        if not self.sync_axes:
+            return value
+        return jax.lax.pmax(value, self.sync_axes)
 
     def reduce_sum(self, value):
         return jax.lax.psum(value, self.grid_axes)

@@ -16,6 +16,12 @@ sub-cluster distribution):
   (distributed/fault_tolerance.py), and a straggling round can be
   re-issued wholesale because BC accumulation is additive and
   order-independent.
+
+:func:`split_rounds` and :func:`redeal_rounds` are the sub-cluster side
+of that elasticity: the static per-replica deal and the straggler
+re-deal re-pack consumed by :class:`repro.core.driver.BCDriver`.  Both
+are pure functions over round ids so the scheduling policy is
+unit-testable without a mesh.
 """
 from __future__ import annotations
 
@@ -27,7 +33,22 @@ from repro.core.heuristics.one_degree import OneDegreeReduction, one_degree_redu
 from repro.core.heuristics.two_degree import claim_two_degree
 from repro.graphs.graph import Graph
 
-__all__ = ["Round", "Schedule", "build_schedule"]
+__all__ = [
+    "Round",
+    "Schedule",
+    "build_schedule",
+    "HEURISTICS_MODES",
+    "split_rounds",
+    "redeal_rounds",
+]
+
+#: The heuristics selector (paper Fig. 12 naming), the single source of
+#: truth for ``--heuristics`` choices and the documentation drift check
+#: (tools/check_docs.py): "h0" no heuristics | "h1" 1-degree reduction |
+#: "h2" 2-degree DMF | "h3" both; the "t" suffix ("h1t" / "h3t") runs the
+#: 1-degree pass to a fixed point (beyond-paper pendant-tree contraction,
+#: heuristics/one_degree.py).
+HEURISTICS_MODES = ("h0", "h1", "h2", "h3", "h1t", "h3t")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,14 +90,20 @@ def build_schedule(
       graph:      input undirected graph.
       batch_size: explicit sources per round (the multi-source width; the
                   paper's sub-cluster work unit).
-      heuristics: "h0" none | "h1" 1-degree | "h2" 2-degree | "h3" both.
+      heuristics: one of :data:`HEURISTICS_MODES` — "h0" none |
+                  "h1" 1-degree | "h2" 2-degree | "h3" both; "h1t"/"h3t"
+                  contract whole pendant trees (beyond-paper exhaustive
+                  1-degree pass).
       derived_per_round: cap on derived columns per round (default:
                   batch_size // 2 — a triple contributes ≥2 sources).
 
     Returns (schedule, one_degree_result_or_None, residual_graph, omega).
     """
-    if heuristics not in ("h0", "h1", "h2", "h3", "h1t", "h3t"):
-        raise ValueError(f"unknown heuristics mode {heuristics!r}")
+    if heuristics not in HEURISTICS_MODES:
+        raise ValueError(
+            f"unknown heuristics mode {heuristics!r}; expected one of "
+            f"{HEURISTICS_MODES}"
+        )
     use_h1 = heuristics in ("h1", "h3", "h1t", "h3t")
     use_h2 = heuristics in ("h2", "h3", "h3t")
     exhaustive = heuristics.endswith("t")  # beyond-paper tree contraction
@@ -166,3 +193,62 @@ def build_schedule(
         analytic_corrections=analytic,
     )
     return schedule, prep, residual, omega
+
+
+def split_rounds(
+    num_rounds: int, fr: int, committed=()
+) -> list[list[int]]:
+    """Static per-replica deal of a schedule's round ids.
+
+    Replica ``r`` receives rounds ``r, r+fr, r+2fr, …`` — the interleaved
+    deal, chosen because it reproduces exactly the lane assignment of the
+    legacy single-ledger block loop (block ``i`` = rounds
+    ``[i·fr, (i+1)·fr)``), so ``straggler="none"`` and the multi-ledger
+    policies start from the *same* static assignment and any wall-time
+    difference is attributable to the re-deal alone.  Rounds in
+    ``committed`` (e.g. from a resumed checkpoint) are excluded.
+    """
+    if fr < 1:
+        raise ValueError(f"need at least one replica, got fr={fr}")
+    done = set(committed)
+    return [
+        [rid for rid in range(r, num_rounds, fr) if rid not in done]
+        for r in range(fr)
+    ]
+
+
+def redeal_rounds(
+    queues: list[list[int]], lane_cost: list[float]
+) -> tuple[list[list[int]], int]:
+    """Re-deal pending rounds across replica queues (straggler recovery).
+
+    A sub-cluster dispatch block co-schedules one round per replica and —
+    under a ring overlap policy, where the replica axis joins the
+    loop-bound reductions — costs the *max* over its rounds' traversal
+    depths: a deep round paired with a shallow one makes the shallow
+    replica burn the depth difference as masked no-op levels.  The
+    re-deal therefore packs *similar-cost* rounds into the same block:
+    every pending round is estimated at its current owner's per-round
+    cost (the driver's EWMA — rounds were dealt to that lane, so the
+    lane's observed history is the best available prior for them), the
+    pool is sorted costliest-first, and consecutive ``fr``-tuples are
+    dealt one per lane.  The straggler's backlog thus drains into the
+    fastest replica's queue head while cheap rounds pair with cheap.
+
+    Returns ``(new_queues, moved)`` where ``moved`` counts rounds that
+    changed lanes.  Pure function — order inside a lane is deterministic
+    (cost desc, round id asc) so a re-deal is reproducible across a
+    kill-and-resume.
+    """
+    fr = len(queues)
+    if fr != len(lane_cost):
+        raise ValueError(f"{fr} queues but {len(lane_cost)} lane costs")
+    owner = {rid: r for r, q in enumerate(queues) for rid in q}
+    pool = sorted(owner, key=lambda rid: (-lane_cost[owner[rid]], rid))
+    new_queues: list[list[int]] = [[] for _ in range(fr)]
+    for i, rid in enumerate(pool):
+        new_queues[i % fr].append(rid)
+    moved = sum(
+        1 for r, q in enumerate(new_queues) for rid in q if owner[rid] != r
+    )
+    return new_queues, moved

@@ -14,7 +14,10 @@ operator intervention.  The moving parts:
   times and flags rounds for speculative re-execution (backup tasks)
   when a worker exceeds ``factor``× the running median.  Because BC
   accumulation is additive per-round, duplicate completions are resolved
-  by a "first result wins" commit in the round ledger.
+  by a "first result wins" commit in the round ledger.  The *integrated*
+  version of this idea — per-replica ledgers, EWMA-threshold detection,
+  steal/re-deal of pending rounds — is the shared round loop's
+  ``straggler=`` policy (:data:`repro.core.driver.STRAGGLER_POLICIES`).
 * **Round ledger.**  ``RoundLedger`` records committed rounds so a
   restart (or a duplicated speculative execution) never double-counts —
   this is what makes BC exact across failures.
@@ -22,7 +25,6 @@ operator intervention.  The moving parts:
 from __future__ import annotations
 
 import dataclasses
-import os
 import statistics
 
 __all__ = [
@@ -98,7 +100,11 @@ def plan_elastic_remesh(
 
 
 class StragglerPolicy:
-    """Median-based speculative re-execution (MapReduce backup tasks)."""
+    """Median-based speculative re-execution (MapReduce backup tasks).
+
+    Standalone detector for external orchestration; the BC round loop
+    itself uses the integrated multi-ledger scheduler
+    (``BCDriver(straggler="steal"|"redeal")``, core/driver.py)."""
 
     def __init__(self, factor: float = 2.0, min_samples: int = 5):
         self.factor = factor
@@ -137,6 +143,11 @@ class RoundLedger:
         self._committed.add(round_id)
         return True
 
+    def is_committed(self, round_id: int) -> bool:
+        """Read-only commit check (the multi-ledger driver consults every
+        replica's ledger before committing into one — first commit wins)."""
+        return round_id in self._committed
+
     def pending(self, total_rounds: int) -> list[int]:
         return [r for r in range(total_rounds) if r not in self._committed]
 
@@ -150,78 +161,12 @@ class RoundLedger:
         return led
 
 
-class BCCheckpoint:
-    """Durable (partial BC, n_s bookkeeping, committed rounds) triple.
-
-    A ledger alone is not enough to resume BC: the committed rounds'
-    *contributions* live in the (volatile) device accumulator.  The
-    shared round loop (:class:`repro.core.driver.BCDriver`) therefore
-    periodically snapshots a consistent prefix — the drained rounds'
-    summed BC, their per-root component sizes, and exactly that round
-    set — through this object; a restarted run seeds the driver from the
-    snapshot and re-deals only the uncommitted rounds.  Consistency
-    invariant: the stored bc/ns always correspond exactly to the stored
-    committed set (snapshots happen only after the in-flight queue is
-    fully drained), so a crash between snapshots merely redoes the tail.
-    The stored bc is correction-free (the 1-degree analytic credits are
-    pure post-processing and are re-applied on every finalize).
-
-    Round ids are only meaningful relative to one schedule, so every
-    snapshot carries a schedule fingerprint (see
-    :func:`schedule_fingerprint`); resuming against a different schedule
-    — other graph, batch size or heuristics — raises instead of silently
-    mixing incompatible partial sums.
-    """
-
-    def __init__(self, path: str):
-        self.path = path
-
-    def exists(self) -> bool:
-        return os.path.exists(self.path)
-
-    def load(self, expected_fingerprint: str | None = None):
-        """Returns (bc f64 [n] | None, ns_by_root dict, committed list).
-
-        Raises ValueError when the snapshot was written for a different
-        schedule than ``expected_fingerprint``.
-        """
-        if not self.exists():
-            return None, {}, []
-        import numpy as np
-
-        with np.load(self.path) as z:
-            stored = str(z["fingerprint"])
-            if expected_fingerprint is not None and stored != expected_fingerprint:
-                raise ValueError(
-                    f"checkpoint {self.path} was written for a different "
-                    f"schedule (stored {stored}, expected "
-                    f"{expected_fingerprint}) — same graph, batch size and "
-                    f"heuristics are required to resume"
-                )
-            bc = z["bc"].astype(np.float64)
-            ns_by_root = {
-                int(r): float(v) for r, v in zip(z["ns_roots"], z["ns_vals"])
-            }
-            committed = [int(r) for r in z["committed"]]
-        return bc, ns_by_root, committed
-
-    def save(
-        self, bc, ns_by_root: dict, committed: list[int], fingerprint: str
-    ) -> None:
-        import numpy as np
-
-        roots = np.asarray(sorted(ns_by_root), np.int64)
-        vals = np.asarray([ns_by_root[int(r)] for r in roots], np.float64)
-        tmp = f"{self.path}.tmp.npz"
-        np.savez(
-            tmp,
-            bc=np.asarray(bc, np.float64),
-            ns_roots=roots,
-            ns_vals=vals,
-            committed=np.asarray(sorted(committed), np.int64),
-            fingerprint=np.asarray(fingerprint),
-        )
-        os.replace(tmp, self.path)
+# BCCheckpoint — the durable (partial BC, n_s, committed rounds) triple —
+# lives with the rest of the durable-state code in
+# repro/checkpoint/checkpointer.py since it grew per-replica ledger
+# namespacing; re-exported here because this is where the ledger protocol
+# it completes is defined (and where existing callers import it from).
+from repro.checkpoint.checkpointer import BCCheckpoint  # noqa: E402,F401
 
 
 def schedule_fingerprint(n: int, schedule) -> str:

@@ -16,6 +16,7 @@ from repro.graphs.generators import (
     disjoint_union,
     road_like_graph,
     suburb_graph,
+    skewed_depth_graph,
 )
 from repro.graphs.partition import TwoDPartition, partition_2d
 
@@ -31,6 +32,7 @@ __all__ = [
     "disjoint_union",
     "road_like_graph",
     "suburb_graph",
+    "skewed_depth_graph",
     "TwoDPartition",
     "partition_2d",
 ]

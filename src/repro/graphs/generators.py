@@ -24,6 +24,7 @@ __all__ = [
     "disjoint_union",
     "road_like_graph",
     "suburb_graph",
+    "skewed_depth_graph",
 ]
 
 
@@ -103,6 +104,25 @@ def disjoint_union(*graphs: Graph) -> Graph:
         offset += g.n
     edges = np.concatenate(parts) if parts else np.zeros((0, 2), np.int64)
     return Graph.from_edges(offset, edges)
+
+
+def skewed_depth_graph(pairs: int, block: int) -> Graph:
+    """Alternating deep/shallow components aligned to the round deal.
+
+    ``2 · pairs`` components of ``block`` vertices each, in alternating
+    vertex-id order: even blocks are *paths* (traversal depth ≈ block),
+    odd blocks are *complete graphs* (depth 1).  With
+    ``batch_size=block`` the source scheduler packs each component into
+    exactly one round, so under a two-replica interleaved deal one
+    replica draws every deep-diameter root batch and the other every
+    shallow one — the maximally skewed workload the straggler scheduler
+    (``BCDriver(straggler=...)``) exists to re-balance, used by
+    ``benchmarks/table3_subcluster.py`` and the forced-straggler tests.
+    """
+    parts = []
+    for i in range(2 * pairs):
+        parts.append(path_graph(block) if i % 2 == 0 else complete_graph(block))
+    return disjoint_union(*parts)
 
 
 def road_like_graph(rows: int, cols: int, spur_fraction: float = 0.3, seed: int = 0) -> Graph:

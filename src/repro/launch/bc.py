@@ -4,17 +4,39 @@
         --heuristics h3 --batch-size 32
     PYTHONPATH=src python -m repro.launch.bc --grid 40x40 --heuristics h1 \
         --mesh 2x4 --engine pallas --ckpt-dir /tmp/bc_ckpt
+    PYTHONPATH=src python -m repro.launch.bc --rmat-scale 8 --mesh 2x2x2 \
+        --overlap expand --straggler redeal
 
-Supports single-device and distributed (``--mesh RxC``) execution; every
-engine of the unified traversal stack is selectable with ``--engine``
-(single-device: dense | sparse | pallas | pallas_bf16; distributed:
-sparse arc-list, the Pallas dense-block engines, or the blocked-sparse
+Supports single-device and distributed execution; every engine of the
+unified traversal stack is selectable with ``--engine`` (single-device:
+``dense | sparse | pallas | pallas_bf16``; distributed: the ``sparse``
+arc-list engine, the Pallas dense-block engines, or the blocked-sparse
 ``pallas_sparse`` engine for graphs whose dense blocks do not fit).
+
+``--mesh RxC`` runs one 2-D-decomposed traversal grid; ``--mesh FRxRxC``
+(three dims) replicates that grid into ``FR`` sub-clusters (paper §3.3),
+each processing different source rounds concurrently.
+
+``--heuristics`` selects the preprocessing (paper §3.4 / Fig. 12 naming;
+see core/heuristics/): ``h0`` none | ``h1`` 1-degree reduction |
+``h2`` 2-degree DMF | ``h3`` both | ``h1t``/``h3t`` exhaustive
+pendant-tree contraction (beyond-paper).
+
 ``--overlap`` selects the distributed collective schedule: ``none``
 (barrier all_gather/psum_scatter), ``expand`` (ring-pipelined gather),
 ``expand+fold`` (both collectives decomposed into ppermute rings
 overlapped with block compute — paper Fig. 2) or ``auto`` (picked from
-the roofline's pipelining estimate and logged).  The per-device adjacency + state footprint is reported before
+the roofline's pipelining estimate and logged).
+
+``--straggler`` selects the sub-cluster scheduling policy (needs a
+three-dim ``--mesh``): ``none`` static deal | ``steal`` idle replicas
+pull rounds from the heaviest backlog (+ speculative tail backups) |
+``redeal`` pending rounds are re-packed across replicas when one
+replica's EWMA per-round wall exceeds ``--straggler-factor ×`` the
+fastest's.  Commits stay exactly-once across steals, re-deals and
+kill-and-resume (per-replica round ledgers, first commit wins).
+
+The per-device adjacency + state footprint is reported before
 compiling; ``--hbm-gb <GiB>`` additionally arms the fail-fast memory
 guard, turning an over-budget engine into an immediate error with a
 suggestion (``pallas_sparse`` / a larger mesh) instead of an OOM
@@ -33,7 +55,9 @@ import numpy as np
 
 from repro.core import betweenness_centrality
 from repro.core.bc import ENGINE_KINDS
+from repro.core.driver import STRAGGLER_POLICIES
 from repro.core.operators import OVERLAP_POLICIES
+from repro.core.scheduler import HEURISTICS_MODES
 from repro.core.distributed import (
     DIST_ENGINE_KINDS,
     distributed_betweenness_centrality,
@@ -48,14 +72,19 @@ def main() -> None:
     ap.add_argument("--edge-factor", type=int, default=8)
     ap.add_argument("--grid", default=None, help="RxC grid graph")
     ap.add_argument("--road", default=None, help="RxC road-like graph")
-    ap.add_argument("--heuristics", default="h0", choices=["h0", "h1", "h2", "h3"])
+    ap.add_argument("--heuristics", default="h0", choices=list(HEURISTICS_MODES))
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument(
         "--engine",
         default="dense",
         choices=sorted(set(ENGINE_KINDS) | set(DIST_ENGINE_KINDS)),
     )
-    ap.add_argument("--mesh", default=None, help="distributed RxC device mesh")
+    ap.add_argument(
+        "--mesh",
+        default=None,
+        help="distributed device mesh: RxC (one 2-D grid) or FRxRxC "
+        "(FR sub-cluster replicas of an RxC grid, paper §3.3)",
+    )
     ap.add_argument(
         "--overlap",
         default="none",
@@ -70,6 +99,23 @@ def main() -> None:
         help="per-device HBM budget (GiB) arming the fail-fast memory "
         "guard (e.g. 16 for v5e); the footprint is always reported, but "
         "only an explicit budget turns it into a pre-compile error",
+    )
+    ap.add_argument(
+        "--straggler",
+        default="none",
+        choices=list(STRAGGLER_POLICIES),
+        help="sub-cluster straggler policy (needs a FRxRxC --mesh): "
+        "'steal' pulls rounds into replicas whose queue ran dry; "
+        "'redeal' re-packs all pending rounds when one replica's EWMA "
+        "per-round wall exceeds --straggler-factor x the fastest's",
+    )
+    ap.add_argument(
+        "--straggler-factor",
+        type=float,
+        default=2.0,
+        help="EWMA per-round-wall ratio over the fastest replica that "
+        "triggers a re-deal (straggler=redeal only; steal is "
+        "queue-driven and ignores it)",
     )
     ap.add_argument("--ckpt-dir", default=None, help="round-ledger resume dir")
     ap.add_argument("--out", default=None)
@@ -103,29 +149,41 @@ def main() -> None:
         raise SystemExit("--overlap is a distributed schedule; pass --mesh RxC")
     if args.engine == "pallas_sparse" and not args.mesh:
         raise SystemExit("pallas_sparse is a distributed engine; pass --mesh RxC")
+    mesh_shape = tuple(map(int, args.mesh.split("x"))) if args.mesh else None
+    if mesh_shape is not None and len(mesh_shape) not in (2, 3):
+        raise SystemExit("--mesh takes RxC or FRxRxC")
+    if args.straggler != "none" and (mesh_shape is None or len(mesh_shape) != 3):
+        raise SystemExit(
+            "--straggler re-deals rounds between sub-cluster replicas; "
+            "pass a replicated --mesh FRxRxC"
+        )
 
     print(
         f"{name}: n={graph.n} m={graph.num_edges} "
-        f"heuristics={args.heuristics} engine={args.engine} overlap={args.overlap}"
+        f"heuristics={args.heuristics} engine={args.engine} "
+        f"overlap={args.overlap} straggler={args.straggler}"
     )
     t0 = time.time()
-    if args.mesh:
-        r, c = map(int, args.mesh.split("x"))
+    if mesh_shape is not None:
         from repro.launch.mesh import make_mesh
 
-        mesh = make_mesh((r, c), ("data", "model"))
+        axes = ("pod", "data", "model")[-len(mesh_shape):]
+        mesh = make_mesh(mesh_shape, axes)
         # the distributed engine's arc-list local compute is the sparse
         # path; dense-block MXU compute is the pallas pair.
         engine_kind = "sparse" if args.engine in ("dense", "sparse") else args.engine
         bc, schedule = distributed_betweenness_centrality(
             graph,
             mesh,
+            replica_axis="pod" if len(mesh_shape) == 3 else None,
             batch_size=args.batch_size,
             heuristics=args.heuristics,
             engine_kind=engine_kind,
             overlap=args.overlap,
             hbm_limit_bytes=args.hbm_gb * 2**30 if args.hbm_gb > 0 else None,
             checkpoint=checkpoint,
+            straggler=args.straggler,
+            straggler_factor=args.straggler_factor,
         )
         rounds = len(schedule.rounds)
     else:

@@ -37,6 +37,7 @@ __all__ = [
     "adjacency_stream_bytes",
     "device_hbm_footprint",
     "auto_overlap_policy",
+    "exchange_operands",
 ]
 
 
@@ -167,6 +168,18 @@ _EXCHANGE_OPERANDS = {
     "pallas_bf16": (2, 4),
     "pallas_sparse": (2, 4),
 }
+
+
+def exchange_operands(engine_kind: str) -> tuple[int, int]:
+    """(forward, backward) per-level exchange-operand counts of an engine.
+
+    The single source of the §3.2 exchange-set table above: the arc-list
+    engine gathers one pre-masked tensor per direction; the fused-kernel
+    engines exchange (σ, d) forward and (σ, d, δ, ω) backward.  Consumed
+    by the state-footprint model here and the per-level collective
+    pricing in :func:`repro.core.distributed.level_time_estimates`.
+    """
+    return _EXCHANGE_OPERANDS[engine_kind]
 
 
 def adjacency_stream_bytes(

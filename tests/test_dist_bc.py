@@ -125,7 +125,7 @@ def test_unfused_backward_matches():
     for fuse in (True, False):
         fn = make_distributed_round_fn(part, mesh, fuse_backward_payload=fuse)
         rnd = schedule.rounds[0]
-        bc_r, _, _ = fn(
+        bc_r, _, _, _ = fn(
             jnp.asarray(part.src_local),
             jnp.asarray(part.dst_local),
             jnp.asarray(omega_pad),

@@ -40,7 +40,7 @@ def test_bc_resumes_from_partial_rounds():
             if not ledger.try_commit(rid):
                 continue  # duplicate completion (speculative re-execution)
             rnd = schedule.rounds[rid]
-            bc_r, ns, roots = round_fn(
+            bc_r, ns, roots, _levels = round_fn(
                 jnp.asarray(rnd.sources), jnp.asarray(rnd.derived), omega
             )
             bc += np.asarray(bc_r, np.float64)
@@ -103,8 +103,8 @@ def test_bc_driver_checkpoint_kill_and_resume(tmp_path):
             calls["n"] += 1
             if calls["n"] > limit:
                 raise Crash
-            bc_r, ns, roots = base_fn(sources[0], derived[0], omega)
-            return bc_r, ns[None], roots[None]
+            bc_r, ns, roots, levels = base_fn(sources[0], derived[0], omega)
+            return bc_r, ns[None], roots[None], levels[None]
 
         return fn
 

@@ -1,0 +1,77 @@
+"""Docs drift check: choice lists in the docs vs the source constants.
+
+README.md and ARCHITECTURE.md document the engine × overlap × heuristics
+× straggler configuration matrix.  Those lists have single sources of
+truth in code (`ENGINE_KINDS`, `DIST_ENGINE_KINDS`, `OVERLAP_POLICIES`,
+`HEURISTICS_MODES`, `STRAGGLER_POLICIES`); this check fails CI when a
+constant gains a value the docs never mention — the failure mode where a
+new engine/policy ships undocumented.  (The reverse — docs mentioning a
+*removed* value — is not mechanically detectable here; on a rename,
+update the docs in the same change and this check will at least demand
+the new name appear.)
+
+Run as ``make docs-check`` or ``python tools/check_docs.py``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def _tokens(text: str) -> set[str]:
+    # one token per word; keeps '+' so "expand+fold" survives intact
+    return set(re.findall(r"[A-Za-z0-9_+]+", text))
+
+
+def main() -> int:
+    from repro.core.bc import ENGINE_KINDS
+    from repro.core.distributed import DIST_ENGINE_KINDS
+    from repro.core.driver import STRAGGLER_POLICIES
+    from repro.core.operators import OVERLAP_POLICIES
+    from repro.core.scheduler import HEURISTICS_MODES
+
+    overlap_choices = tuple(OVERLAP_POLICIES) + ("auto",)  # CLI surface
+    required = {
+        "README.md": {
+            "engine_kind (single-device ENGINE_KINDS)": ENGINE_KINDS,
+            "engine_kind (distributed DIST_ENGINE_KINDS)": DIST_ENGINE_KINDS,
+            "overlap (OVERLAP_POLICIES + auto)": overlap_choices,
+            "heuristics (HEURISTICS_MODES)": HEURISTICS_MODES,
+            "straggler (STRAGGLER_POLICIES)": STRAGGLER_POLICIES,
+        },
+        "ARCHITECTURE.md": {
+            "engine_kind (distributed DIST_ENGINE_KINDS)": DIST_ENGINE_KINDS,
+            "overlap (OVERLAP_POLICIES + auto)": overlap_choices,
+            "straggler (STRAGGLER_POLICIES)": STRAGGLER_POLICIES,
+        },
+    }
+    failures: list[str] = []
+    for doc, lists in required.items():
+        path = ROOT / doc
+        if not path.exists():
+            failures.append(f"{doc}: missing")
+            continue
+        words = _tokens(path.read_text())
+        for label, choices in lists.items():
+            for choice in choices:
+                if choice not in words:
+                    failures.append(
+                        f"{doc}: does not mention {label} choice {choice!r}"
+                    )
+
+    if failures:
+        print("docs drift detected:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    n_lists = sum(len(v) for v in required.values())
+    print(f"docs in sync: {n_lists} choice lists checked against constants")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
