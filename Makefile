@@ -1,11 +1,18 @@
-# Tier-1 verification: the full test suite on CPU.  Pallas kernels run
-# in interpret mode (the container validates kernel semantics; TPU
-# executes them compiled), distributed tests use 8 host devices via the
-# XLA flag set in tests/conftest.py.
+# Tier-1 verification: the full test suite on CPU, plus lint when ruff
+# is available.  Pallas kernels run in interpret mode (the container
+# validates kernel semantics; TPU executes them compiled), distributed
+# tests use 8 host devices via the XLA flag set in tests/conftest.py.
 verify:
 	PYTHONPATH=src python -m pytest -x -q
+	@if command -v ruff >/dev/null 2>&1; then $(MAKE) lint; \
+	else echo "ruff not installed; skipping lint (the CI lint job runs it)"; fi
 
 test: verify
+
+# Style gate (config in pyproject.toml; the CI lint job runs this).
+lint:
+	ruff check .
+	ruff format --check .
 
 bench:
 	PYTHONPATH=src:. python benchmarks/run.py
@@ -20,6 +27,15 @@ bench-smoke:
 	PYTHONPATH=src:. python benchmarks/run.py --only table3
 	PYTHONPATH=src:. python benchmarks/run.py --only fig4
 
+# Perf-regression gate: regenerate the BENCH_*.json records, then
+# compare them against the committed baselines — structural metrics
+# (link bytes, ring steps, collective counts by class, tile counts,
+# A-stream bytes, the hybrid cell decision) must match exactly,
+# wall-clock within a loose factor.  A deliberate change commits the
+# regenerated baseline in the same PR (tools/check_bench.py).
+bench-check: bench-smoke
+	python tools/check_bench.py
+
 # Documentation health: the quickstart must execute, and the engine /
 # overlap / heuristics / straggler choice lists in README.md +
 # ARCHITECTURE.md must match the source-of-truth constants.
@@ -27,4 +43,4 @@ docs-check:
 	PYTHONPATH=src python examples/quickstart.py
 	python tools/check_docs.py
 
-.PHONY: verify test bench bench-smoke docs-check
+.PHONY: verify test lint bench bench-smoke bench-check docs-check

@@ -7,11 +7,14 @@ Three views:
       computation breakdown of Fig. 5): per-level link bytes fall as
       1/√p per the 2-D decomposition while per-device compute falls as
       1/p — reproducing the paper's crossover;
-  (c) dense-block vs blocked-sparse adjacency: nonzero-tile counts,
-      per-level A-stream bytes, and per-round wall time of the
-      ``pallas_sparse`` engine vs the dense engines on an RMAT graph —
-      written to ``BENCH_sparse.json`` as the machine-readable
-      regression baseline for the O(nnz-tiles) memory claim.
+  (c) dense-block vs blocked-sparse vs hybrid adjacency: nonzero-tile
+      counts, per-level A-stream bytes, the hybrid engine's per-cell
+      dense/BCSR decision with both layouts' host bytes, and per-round
+      wall time of each engine on an RMAT graph — written to
+      ``BENCH_sparse.json`` as the machine-readable regression baseline
+      for the O(nnz-tiles) memory claim and the per-cell kernel choice
+      (``make bench-check`` gates all structural fields against the
+      committed baseline).
 """
 from __future__ import annotations
 
@@ -30,6 +33,7 @@ import jax.numpy as jnp
 from repro.core.distributed import (
     distributed_betweenness_centrality,
     distributed_graph_arrays,
+    hybrid_cell_choice,
     make_distributed_round_fn,
 )
 from repro.core.scheduler import build_schedule
@@ -41,6 +45,7 @@ BENCH_JSON = os.environ.get("BENCH_SPARSE_JSON", "BENCH_sparse.json")
 
 SPARSE_MESH = (2, 4)
 SPARSE_TILE = 16  # resolves RMAT sparsity at benchmark scale (128 = prod)
+HYBRID_TILE = 32  # coarse enough that the densest RMAT cell flips dense
 NUM_LEVELS = 10
 
 
@@ -70,6 +75,17 @@ def _sparse_bench() -> dict:
         bm=tile[0],
         bk=tile[1],
     )
+    # hybrid: the roofline's per-cell dense/BCSR decision + what each
+    # candidate layout costs on the host — the structural record the
+    # bench gate (tools/check_bench.py) pins, so a silent change to the
+    # choice model or the layout build fails the PR.  The hybrid section
+    # uses its own coarser tile: at HYBRID_TILE the densest
+    # community-structured cell crosses the bytes-streamed break-even
+    # and resolves dense while the rest stay BCSR — the skewed-RMAT mix
+    # the engine exists for.
+    htile = (HYBRID_TILE, HYBRID_TILE)
+    dense_cells, counts = hybrid_cell_choice(part, *htile)
+    hybrid = part.blocked_hybrid(*htile, dense_cells=dense_cells)
     record: dict = {
         "graph": {"name": "rmat_s10_ef4", "n": g.n, "m": int(g.num_edges)},
         "mesh": f"{R}x{C}",
@@ -82,6 +98,21 @@ def _sparse_bench() -> dict:
             "pallas_sparse": bytes_sparse,
         },
         "adjacency_stored_bytes_per_device": layout.adjacency_bytes(),
+        "hybrid": {
+            "tile": list(htile),
+            "threshold": 1.0,
+            "dense_cells": dense_cells.astype(int).tolist(),
+            "cells_dense": int(dense_cells.sum()),
+            "cells_sparse": int(dense_cells.size - dense_cells.sum()),
+            "stored_tiles_per_cell": counts["stored_full_cell"].tolist(),
+            "host_bytes": {
+                "all_dense": int(R * C * (C * part.chunk) * (R * part.chunk) * 4),
+                # counts["bytes_full"] == blocked_sparse().adjacency_bytes()
+                # per device, without materializing a second tile layout
+                "all_sparse": int(R * C * counts["bytes_full"]),
+                "hybrid_materialized": int(hybrid.host_bytes()),
+            },
+        },
         "round_wall_s": {},
     }
     # per-round wall time through one compiled round call (Pallas engines
@@ -90,12 +121,15 @@ def _sparse_bench() -> dict:
     omega = jnp.zeros(part.n_pad, jnp.float32)
     sources = jnp.asarray(np.arange(s, dtype=np.int32))[None]
     derived = jnp.full((1, k, 3), -1, jnp.int32)
-    for engine_kind in ("sparse", "pallas", "pallas_sparse"):
+    for engine_kind in ("sparse", "pallas", "pallas_sparse", "pallas_hybrid"):
         fn = make_distributed_round_fn(
             part, mesh, num_levels=NUM_LEVELS, engine_kind=engine_kind
         )
         gargs = distributed_graph_arrays(
-            part, engine_kind, tile=tile if engine_kind == "pallas_sparse" else None
+            part,
+            engine_kind,
+            tile={"pallas_sparse": tile, "pallas_hybrid": htile}.get(engine_kind),
+            dense_cells=dense_cells if engine_kind == "pallas_hybrid" else None,
         )
         sec = time_call(lambda: fn(*gargs, omega, sources, derived), warmup=1, iters=2)
         record["round_wall_s"][engine_kind] = sec

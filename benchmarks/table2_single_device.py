@@ -8,8 +8,6 @@ per-round cost profile across the same topology classes.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, time_call
 from repro.core import betweenness_centrality
 from repro.core.bc import ENGINE_KINDS

@@ -14,8 +14,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
 
-import jax
-
 from repro.core import brandes_reference
 from repro.core.distributed import distributed_betweenness_centrality
 from repro.graphs import rmat_graph

@@ -66,6 +66,7 @@ from repro.compat import shard_map
 from repro.core.driver import BCDriver, traversal_round
 from repro.core.operators import (
     DistributedOperator,
+    DistributedPallasHybridOperator,
     DistributedPallasOperator,
     DistributedPallasSparseOperator,
     normalize_overlap,
@@ -76,7 +77,9 @@ from repro.graphs.partition import TwoDPartition, partition_2d
 from repro.roofline.model import (
     V5E,
     auto_overlap_policy,
+    cell_kernel_choice,
     device_hbm_footprint,
+    sparse_tile_bytes,
 )
 
 __all__ = [
@@ -86,6 +89,7 @@ __all__ = [
     "distributed_betweenness_centrality",
     "one_degree_reduce_distributed",
     "resolve_overlap",
+    "hybrid_cell_choice",
     "level_time_estimates",
     "prior_round_seconds",
     "estimate_device_footprint",
@@ -96,8 +100,50 @@ logger = logging.getLogger(__name__)
 
 #: block-local compute engines of the distributed path: arc-list
 #: gather/segment-sum, fused dense-block Pallas (f32 / bf16 A-stream),
-#: or the blocked-sparse (BCSR tile list) Pallas engine.
-DIST_ENGINE_KINDS = ("sparse", "pallas", "pallas_bf16", "pallas_sparse")
+#: the blocked-sparse (BCSR tile list) Pallas engine, or the per-cell
+#: dense/BCSR hybrid for skewed meshes.
+DIST_ENGINE_KINDS = ("sparse", "pallas", "pallas_bf16", "pallas_sparse", "pallas_hybrid")
+
+
+def hybrid_cell_choice(
+    partition: TwoDPartition,
+    bm: int | None = None,
+    bk: int | None = None,
+    *,
+    threshold: float = 1.0,
+    tile_counts: dict | None = None,
+) -> tuple[np.ndarray, dict]:
+    """Resolve the hybrid engine's per-cell dense-vs-BCSR choice.
+
+    Thin wrapper over :func:`repro.roofline.model.cell_kernel_choice`
+    feeding it the per-cell stored-tile counts from the partition's
+    shared counting pass (pass ``tile_counts`` to reuse a dict already
+    computed this resolve; the underlying arc→tile pass is cached either
+    way).  The choice is logged — like ``overlap="auto"`` — so runs are
+    auditable, and overridable via ``threshold``
+    (``--hybrid-threshold``).  Returns ``(dense_cells, tile_counts)``.
+    """
+    counts = tile_counts or partition.blocked_sparse_counts(bm, bk)
+    dense_cells = cell_kernel_choice(
+        counts["stored_full_cell"],
+        R=partition.R,
+        C=partition.C,
+        chunk=partition.chunk,
+        bm=counts["bm"],
+        bk=counts["bk"],
+        threshold=threshold,
+    )
+    logger.info(
+        "hybrid cell choice (threshold %.3g, tile %dx%d): %d dense / %d sparse "
+        "cells %s",
+        threshold,
+        counts["bm"],
+        counts["bk"],
+        int(dense_cells.sum()),
+        int(dense_cells.size - dense_cells.sum()),
+        dense_cells.astype(int).tolist(),
+    )
+    return dense_cells, counts
 
 
 def distributed_graph_arrays(
@@ -105,6 +151,8 @@ def distributed_graph_arrays(
     engine_kind: str,
     overlap: str = "none",
     tile: tuple[int, int] | None = None,
+    dense_cells: np.ndarray | None = None,
+    hybrid_threshold: float = 1.0,
 ) -> tuple[jnp.ndarray, ...]:
     """Device arrays for the graph operands of a distributed round fn.
 
@@ -114,30 +162,52 @@ def distributed_graph_arrays(
     under a ring overlap policy; the dense Pallas engines use dense
     blocks (bf16 for ``"pallas_bf16"``); ``"pallas_sparse"`` uses the
     blocked tile layout (full tile list, or per-ring-chunk slices under
-    a ring policy) — always (tiles, tile_rows, tile_cols).  ``tile``
+    a ring policy) — always (tiles, tile_rows, tile_cols);
+    ``"pallas_hybrid"`` prepends the dense blocks and appends the i32
+    per-cell choice mask — (blocks, tiles, tile_rows, tile_cols,
+    dense_cells), each cell's data materialized only in its chosen
+    representation (:meth:`TwoDPartition.blocked_hybrid`).  ``tile``
     overrides the blocked-sparse (bm, bk) tile shape (default: the
-    largest lane-friendly divisor of ``chunk`` ≤ 128).
+    largest lane-friendly divisor of ``chunk`` ≤ 128); ``dense_cells``
+    overrides the hybrid per-cell choice (default: resolved from the
+    roofline threshold via :func:`hybrid_cell_choice`).
     """
     if engine_kind == "sparse":
         if normalize_overlap(overlap) != "none":
             ring_src, ring_dst = partition.ring_arcs()
             return (jnp.asarray(ring_src), jnp.asarray(ring_dst))
         return (jnp.asarray(partition.src_local), jnp.asarray(partition.dst_local))
-    if engine_kind == "pallas_sparse":
+    if engine_kind in ("pallas_sparse", "pallas_hybrid"):
         ring = normalize_overlap(overlap) != "none"
         bm, bk = tile if tile is not None else (None, None)
-        layout = partition.blocked_sparse(bm, bk, ring=ring)
+        if engine_kind == "pallas_sparse":
+            layout = partition.blocked_sparse(bm, bk, ring=ring)
+            lead: tuple = ()
+        else:
+            if dense_cells is None:
+                dense_cells, _ = hybrid_cell_choice(
+                    partition, bm, bk, threshold=hybrid_threshold
+                )
+            hybrid = partition.blocked_hybrid(
+                bm, bk, dense_cells=dense_cells, ring=ring
+            )
+            layout = hybrid.sparse
+            lead = (jnp.asarray(hybrid.blocks),)
         if ring:
-            return (
+            tiles = (
                 jnp.asarray(layout.ring_tiles),
                 jnp.asarray(layout.ring_tile_rows),
                 jnp.asarray(layout.ring_tile_cols),
             )
-        return (
-            jnp.asarray(layout.tiles),
-            jnp.asarray(layout.tile_rows),
-            jnp.asarray(layout.tile_cols),
-        )
+        else:
+            tiles = (
+                jnp.asarray(layout.tiles),
+                jnp.asarray(layout.tile_rows),
+                jnp.asarray(layout.tile_cols),
+            )
+        if engine_kind == "pallas_hybrid":
+            return lead + tiles + (jnp.asarray(dense_cells.astype(np.int32)),)
+        return tiles
     dt = jnp.bfloat16 if engine_kind == "pallas_bf16" else jnp.float32
     return (jnp.asarray(partition.dense_blocks(np.float32), dt),)
 
@@ -151,6 +221,8 @@ def estimate_device_footprint(
     bk: int | None = None,
     overlap: str = "none",
     tile_counts: dict | None = None,
+    dense_cells: np.ndarray | None = None,
+    hybrid_threshold: float = 1.0,
 ) -> dict:
     """Per-device adjacency + state HBM bytes for one engine (pre-compile).
 
@@ -162,7 +234,14 @@ def estimate_device_footprint(
     and (under a ring policy) the R per-slot slices
     (:meth:`TwoDPartition.blocked_sparse_counts`, no tile data
     materialized; pass a precomputed ``tile_counts`` to reuse one
-    counting pass across resolve/guard).  For the arc-list engine under
+    counting-pass dict across resolve/guard — the underlying arc→tile
+    pass is cached on the partition either way).  For the hybrid engine
+    it is the actually-shipped mixed layout: the dense-block operand
+    every device allocates PLUS the sparse tile list masked to the
+    sparse-chosen cells (``dense_cells``, default: the roofline choice
+    at ``hybrid_threshold``) — shard_map uniformity makes the resident
+    adjacency the union of the two representations even though each
+    cell only *streams* its chosen one.  For the arc-list engine under
     a ring policy it is the 2·R·max_ring_arcs ring layout
     (:meth:`TwoDPartition.ring_arcs_max`), not the flat arc arrays.
     ``bm``/``bk`` override the default tile shape; pass the same
@@ -172,6 +251,20 @@ def estimate_device_footprint(
     kw: dict = {}
     if engine_kind == "pallas_sparse":
         counts = tile_counts or partition.blocked_sparse_counts(bm, bk)
+        kw = dict(
+            nnz_tiles=counts["stored_tiles_ring" if ring else "stored_tiles_full"],
+            bm=counts["bm"],
+            bk=counts["bk"],
+        )
+    elif engine_kind == "pallas_hybrid":
+        if dense_cells is None:
+            dense_cells, _ = hybrid_cell_choice(
+                partition, bm, bk, threshold=hybrid_threshold,
+                tile_counts=tile_counts,
+            )
+        # accept the i32 form the mask ships in (graph args / JSON records)
+        dense_cells = np.asarray(dense_cells, bool)
+        counts = partition.blocked_sparse_counts(bm, bk, cells=~dense_cells)
         kw = dict(
             nnz_tiles=counts["stored_tiles_ring" if ring else "stored_tiles_full"],
             bm=counts["bm"],
@@ -202,13 +295,17 @@ def check_device_memory(
     bk: int | None = None,
     overlap: str = "none",
     tile_counts: dict | None = None,
+    dense_cells: np.ndarray | None = None,
 ) -> dict:
     """Fail-fast memory guard: error *before* compiling instead of
     OOMing mid-round, with an actionable suggestion.  Returns the
-    footprint record (always computed, so callers can report it)."""
+    footprint record (always computed, so callers can report it).
+    ``dense_cells`` is the hybrid engine's resolved per-cell choice, so
+    the guard prices the actually-shipped mixed layout."""
     foot = estimate_device_footprint(
         partition, engine_kind, batch_size,
         bm=bm, bk=bk, overlap=overlap, tile_counts=tile_counts,
+        dense_cells=dense_cells,
     )
     logger.info(
         "per-device HBM footprint (%s): adjacency %.3f GiB + state %.3f GiB "
@@ -223,7 +320,9 @@ def check_device_memory(
     )
     if hbm_limit_bytes is not None and foot["total_bytes"] > hbm_limit_bytes:
         suggestions = []
-        if engine_kind in ("pallas", "pallas_bf16"):
+        if engine_kind in ("pallas", "pallas_bf16", "pallas_hybrid"):
+            # hybrid ships the dense operand on every device (shard_map
+            # uniformity); pure blocked-sparse is the strictly smaller layout
             sparse_foot = estimate_device_footprint(
                 partition, "pallas_sparse", batch_size,
                 bm=bm, bk=bk, overlap=overlap, tile_counts=tile_counts,
@@ -252,6 +351,7 @@ def level_time_estimates(
     bm: int | None = None,
     bk: int | None = None,
     tile_counts: dict | None = None,
+    dense_cells: np.ndarray | None = None,
     hw=V5E,
 ) -> tuple[float, float, float]:
     """Roofline prices of one traversal level: (compute, expand, fold) s.
@@ -260,7 +360,10 @@ def level_time_estimates(
     and the straggler scheduler's EWMA prior
     (:func:`prior_round_seconds`): block compute from the
     engine-dependent FLOPs / A-stream bytes, expand/fold collective
-    bytes from the α-β link model.
+    bytes from the α-β link model.  The hybrid engine is priced per
+    cell — each cell streams its *chosen* representation
+    (``dense_cells``, default: the roofline choice), and the level waits
+    for the slowest cell, so the compute term is the per-cell maximum.
     """
     R, C, chunk, s = partition.R, partition.C, partition.chunk, batch_size
     from repro.roofline.model import adjacency_stream_bytes
@@ -275,13 +378,33 @@ def level_time_estimates(
         a_bytes = adjacency_stream_bytes(
             engine_kind, R=R, C=C, chunk=chunk, nnz_tiles=nnz, bm=bm, bk=bk
         )
+    elif engine_kind == "pallas_hybrid":
+        counts = tile_counts or partition.blocked_sparse_counts(bm, bk)
+        if dense_cells is None:
+            dense_cells, _ = hybrid_cell_choice(
+                partition, bm, bk, tile_counts=counts
+            )
+        bm, bk = counts["bm"], counts["bk"]
+        dense_flops = 2.0 * (C * chunk) * (R * chunk) * s
+        dense_bytes = adjacency_stream_bytes("pallas", R=R, C=C, chunk=chunk)
+        stored = np.asarray(counts["stored_full_cell"], np.float64)
+        cell_flops = np.where(dense_cells, dense_flops, 2.0 * stored * bm * bk * s)
+        cell_bytes = np.where(
+            dense_cells, dense_bytes, stored * sparse_tile_bytes(bm, bk)
+        )
+        cell_s = np.maximum(
+            cell_flops / hw.peak_bf16_flops, cell_bytes / hw.hbm_bandwidth
+        )
+        flops, a_bytes = float(cell_flops.max()), float(cell_bytes.max())
+        compute_s = float(cell_s.max())  # the level waits for the slowest cell
     else:  # arc-list: one gather+add per arc per source column
         max_arcs = int(partition.src_local.shape[-1])
         flops = 2.0 * max_arcs * s
         a_bytes = adjacency_stream_bytes(
             engine_kind, R=R, C=C, chunk=chunk, max_arcs=max_arcs
         )
-    compute_s = max(flops / hw.peak_bf16_flops, a_bytes / hw.hbm_bandwidth)
+    if engine_kind != "pallas_hybrid":
+        compute_s = max(flops / hw.peak_bf16_flops, a_bytes / hw.hbm_bandwidth)
     from repro.roofline.model import exchange_operands
 
     n_operands = exchange_operands(engine_kind)[0]  # forward exchange set
@@ -306,6 +429,7 @@ def prior_round_seconds(
     bm: int | None = None,
     bk: int | None = None,
     tile_counts: dict | None = None,
+    dense_cells: np.ndarray | None = None,
     hw=V5E,
 ) -> float:
     """Roofline per-round wall estimate — the straggler EWMA's prior.
@@ -319,7 +443,7 @@ def prior_round_seconds(
     """
     compute_s, expand_s, fold_s = level_time_estimates(
         partition, engine_kind, batch_size,
-        bm=bm, bk=bk, tile_counts=tile_counts, hw=hw,
+        bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells, hw=hw,
     )
     _, estimates = auto_overlap_policy(
         compute_s, expand_s, fold_s, partition.R, partition.C, hw=hw
@@ -336,6 +460,7 @@ def resolve_overlap(
     bm: int | None = None,
     bk: int | None = None,
     tile_counts: dict | None = None,
+    dense_cells: np.ndarray | None = None,
     hw=V5E,
 ) -> str:
     """Resolve ``overlap="auto"`` from the roofline's per-level estimate.
@@ -347,13 +472,14 @@ def resolve_overlap(
     passing an explicit policy bypasses this entirely.  ``bm``/``bk``:
     the blocked-sparse tile shape the engine will actually be built with
     (defaults to the partition default), so the estimate prices the real
-    layout.
+    layout; ``dense_cells``: the hybrid engine's resolved per-cell
+    choice, for the same reason.
     """
     if overlap != "auto":
         return normalize_overlap(overlap)
     compute_s, expand_s, fold_s = level_time_estimates(
         partition, engine_kind, batch_size,
-        bm=bm, bk=bk, tile_counts=tile_counts, hw=hw,
+        bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells, hw=hw,
     )
     policy, estimates = auto_overlap_policy(
         compute_s, expand_s, fold_s, partition.R, partition.C, hw=hw
@@ -470,6 +596,16 @@ def make_distributed_round_fn(
     arity, one extra slot dim.  Per-device adjacency memory is
     O(nnz_tiles·bm·bk) instead of the dense engines' O(n_pad²/p).
 
+    With ``engine_kind="pallas_hybrid"`` (per-cell dense/BCSR mix) the
+    graph operands prepend the dense blocks and append the choice mask:
+      (blocks     f32 [R, C, C·chunk, R·chunk] — sharded (row, col),
+       tiles/tile_rows/tile_cols — as for ``pallas_sparse``,
+       dense_cells i32 [R, C]    — sharded (row, col),
+       omega, sources, derived)  ->  same outputs;
+    each cell holds data only in its chosen representation
+    (:meth:`TwoDPartition.blocked_hybrid`) and dispatches its fused
+    kernels through a local ``lax.cond`` on its choice scalar.
+
     ``fuse_backward_payload`` keeps σ-frontier and g exchanges as a single
     gathered tensor each (the paper's overlap/fusion idea, §3.2 Fig. 2);
     setting it False splits the backward gather into two half-width
@@ -556,6 +692,43 @@ def make_distributed_round_fn(
             P(row_axis, col_axis, *([None] * (nd - 2))),
             P(row_axis, col_axis, *([None] * (nd - 4))),
             P(row_axis, col_axis, *([None] * (nd - 4))),
+        )
+    elif engine_kind == "pallas_hybrid":
+        # (blocks, tiles, tile_rows, tile_cols, dense_cells): the dense
+        # operand and the (possibly ring-sliced) tile layout travel
+        # together; the i32 [R, C] choice mask tells each cell which one
+        # it streams (lax.cond inside the operator's _partial_* hooks).
+        ring = overlap != "none"
+
+        def body(blocks, tiles, trows, tcols, dcell, omega, sources, derived):
+            local = (tiles[0, 0], trows[0, 0], tcols[0, 0])
+            kw = (
+                dict(ring_tiles=local[0], ring_tile_rows=local[1], ring_tile_cols=local[2])
+                if ring
+                else dict(tiles=local[0], tile_rows=local[1], tile_cols=local[2])
+            )
+            op = DistributedPallasHybridOperator(
+                blocks[0, 0],  # [C*chunk, R*chunk] local dense data (or zeros)
+                dcell[0, 0] != 0,  # this cell's kernel choice
+                chunk=chunk,
+                R=R,
+                C=C,
+                row_axis=row_axis,
+                col_axis=col_axis,
+                interpret=interpret,
+                overlap=overlap,
+                sync_axes=sync_axes,
+                **kw,
+            )
+            return round_body(op, omega, sources, derived)
+
+        nd = 6 if ring else 5  # tiles rank; index arrays are nd - 2
+        graph_specs = (
+            P(row_axis, col_axis, None, None),
+            P(row_axis, col_axis, *([None] * (nd - 2))),
+            P(row_axis, col_axis, *([None] * (nd - 4))),
+            P(row_axis, col_axis, *([None] * (nd - 4))),
+            P(row_axis, col_axis),
         )
     elif use_pallas:
 
@@ -647,6 +820,7 @@ def distributed_betweenness_centrality(
     engine_kind: str = "sparse",
     overlap: str = "none",
     tile: tuple[int, int] | None = None,
+    hybrid_threshold: float = 1.0,
     hbm_limit_bytes: float | None = None,
     ledger=None,
     checkpoint=None,
@@ -674,7 +848,13 @@ def distributed_betweenness_centrality(
     ring-pipelined — see :func:`make_distributed_round_fn`), with
     ``"auto"`` resolved from the roofline estimate
     (:func:`resolve_overlap`); ``tile`` overrides the blocked-sparse
-    (bm, bk) tile shape.  ``hbm_limit_bytes`` arms the fail-fast
+    (bm, bk) tile shape.  With ``engine_kind="pallas_hybrid"`` the
+    per-cell dense-vs-BCSR choice is resolved once from the roofline's
+    bytes-streamed threshold (:func:`hybrid_cell_choice`, logged) and
+    shared by the overlap resolve, the memory guard and the layout
+    build; ``hybrid_threshold`` overrides the break-even point
+    (0 forces all-dense, a large value all-sparse).
+    ``hbm_limit_bytes`` arms the fail-fast
     memory guard (:func:`check_device_memory`): the per-device
     adjacency + state footprint is checked *before* compilation and an
     over-budget engine errors with a suggestion instead of OOMing
@@ -686,17 +866,27 @@ def distributed_betweenness_centrality(
     R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
     part = partition_2d(residual, R, C)
     bm, bk = tile if tile is not None else (None, None)
-    # one host counting pass serves the auto-overlap estimate, the memory
-    # guard, and (conceptually) the layout build that follows
+    # ONE host arc→tile counting pass (cached on the partition) serves
+    # the hybrid cell choice, the auto-overlap estimate, the memory
+    # guard, and the layout build that follows
     tile_counts = (
-        part.blocked_sparse_counts(bm, bk) if engine_kind == "pallas_sparse" else None
+        part.blocked_sparse_counts(bm, bk)
+        if engine_kind in ("pallas_sparse", "pallas_hybrid")
+        else None
     )
+    dense_cells = None
+    if engine_kind == "pallas_hybrid":
+        dense_cells, _ = hybrid_cell_choice(
+            part, bm, bk, threshold=hybrid_threshold, tile_counts=tile_counts
+        )
     overlap = resolve_overlap(
-        overlap, part, engine_kind, batch_size, bm=bm, bk=bk, tile_counts=tile_counts
+        overlap, part, engine_kind, batch_size,
+        bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells,
     )
     check_device_memory(
         part, engine_kind, batch_size, hbm_limit_bytes,
         bm=bm, bk=bk, overlap=overlap, tile_counts=tile_counts,
+        dense_cells=dense_cells,
     )
 
     round_fn = make_distributed_round_fn(
@@ -716,7 +906,9 @@ def distributed_betweenness_centrality(
     # chunk ids are contiguous in vertex order, so identity layout works.
     omega_dev = jnp.asarray(omega_pad)
 
-    graph_args = distributed_graph_arrays(part, engine_kind, overlap, tile=tile)
+    graph_args = distributed_graph_arrays(
+        part, engine_kind, overlap, tile=tile, dense_cells=dense_cells
+    )
 
     def block_fn(sources, derived):
         return round_fn(*graph_args, omega_dev, sources, derived)
@@ -733,7 +925,7 @@ def distributed_betweenness_centrality(
             )
         prior_round_s = prior_round_seconds(
             part, engine_kind, batch_size, overlap,
-            bm=bm, bk=bk, tile_counts=tile_counts,
+            bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells,
         )
 
     driver = BCDriver(

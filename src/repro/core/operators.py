@@ -51,6 +51,15 @@ Implementations:
                                device block are stored and streamed, so
                                adjacency memory is O(nnz_tiles) — the
                                RMAT-scale engine (kernels/blocked_spmm.py).
+* :class:`DistributedPallasHybridOperator` — per-cell mix of the two:
+                               each device cell streams whichever
+                               representation the roofline's
+                               bytes-streamed threshold picked for it
+                               (roofline/model.cell_kernel_choice), so
+                               near-dense community cells run the dense
+                               kernels while hyper-sparse off-diagonal
+                               cells run the BCSR kernels — under every
+                               overlap policy.
 
 ``_forward_level`` / ``_backward_level`` below are the *only*
 implementations of the level recurrences in the repository; every
@@ -71,6 +80,7 @@ __all__ = [
     "DistributedOperator",
     "DistributedPallasOperator",
     "DistributedPallasSparseOperator",
+    "DistributedPallasHybridOperator",
     "as_operator",
     "OVERLAP_POLICIES",
     "normalize_overlap",
@@ -779,4 +789,93 @@ class DistributedPallasSparseOperator(DistributedPallasOperator):
         return self._ring_steps(
             (x_owned,),
             lambda blk, hand, acc: acc + self._dense_of(blk, self.chunk) @ hand[0],
+        )
+
+
+class DistributedPallasHybridOperator(DistributedPallasSparseOperator):
+    """2-D decomposition with a per-cell dense/BCSR kernel choice.
+
+    Each device cell carries BOTH operand sets (shard_map needs uniform
+    shapes across the mesh) but only its chosen one holds data: the host
+    layout (:meth:`repro.graphs.partition.TwoDPartition.blocked_hybrid`)
+    materializes dense block data for the dense-chosen cells and tile
+    data for the sparse-chosen cells (the other slot is untouched
+    zeros / the minimal filler list).  ``dense_cell`` is this device's
+    choice — a *traced* scalar, so one SPMD program serves the whole
+    mesh and each cell branches locally with ``lax.cond``; the branch
+    contains only block-local kernel work (never a collective), so the
+    mixed mesh stays in lockstep through every overlap policy's
+    collective schedule, which this class inherits unchanged through the
+    ``_full_block`` / ``_ring_block`` / ``_partial_*`` seams.
+    """
+
+    def __init__(
+        self,
+        adjacency_block: jnp.ndarray,  # [C*chunk, R*chunk] dense data (or zeros)
+        dense_cell: jnp.ndarray,  # scalar bool: this cell's kernel choice
+        **kwargs,
+    ):
+        super().__init__(**kwargs)
+        self.adjacency_block = adjacency_block
+        self.dense_cell = dense_cell
+
+    # ------------------------------------------------------ block hooks
+    def _full_block(self):
+        return (self.adjacency_block,) + super()._full_block()
+
+    def _ring_block(self, r):
+        dense_r = jax.lax.dynamic_slice_in_dim(
+            self.adjacency_block, r * self.chunk, self.chunk, axis=1
+        )
+        return (dense_r,) + super()._ring_block(r)
+
+    def _partial_forward(self, block, sigma, depth, lvl, acc=None):
+        from repro.kernels import ops as kops
+
+        a_dense, tiles, rows, cols = block
+        return jax.lax.cond(
+            self.dense_cell,
+            lambda: kops.frontier_spmm_partial(
+                a_dense, sigma, depth, lvl, acc=acc, interpret=self.interpret
+            ),
+            lambda: kops.frontier_spmm_sparse(
+                tiles, rows, cols, sigma, depth, lvl,
+                m=self.C * self.chunk, acc=acc, interpret=self.interpret,
+            ),
+        )
+
+    def _partial_backward(self, block, sigma, depth, delta, omega, lvl, acc=None):
+        from repro.kernels import ops as kops
+
+        a_dense, tiles, rows, cols = block
+        return jax.lax.cond(
+            self.dense_cell,
+            lambda: kops.dependency_spmm_partial(
+                a_dense, sigma, depth, delta, omega, lvl,
+                acc=acc, interpret=self.interpret,
+            ),
+            lambda: kops.dependency_spmm_sparse(
+                tiles, rows, cols, sigma, depth, delta, omega, lvl,
+                m=self.C * self.chunk, acc=acc, interpret=self.interpret,
+            ),
+        )
+
+    # --------------------------------------- reference apply() semantics
+    def _mixed_dense(self, block, kdim):
+        """Dense view of whichever representation this cell holds data in."""
+        a_dense, *tile_block = block
+        return jnp.where(
+            self.dense_cell,
+            a_dense.astype(jnp.float32),
+            self._dense_of(tuple(tile_block), kdim),
+        )
+
+    def _local(self, x_col):
+        # parity/debug path only — the engine runs the fused level hooks
+        return self._mixed_dense(self._full_block(), x_col.shape[0]) @ x_col
+
+    def _ring_partial(self, x_owned):
+        return self._ring_steps(
+            (x_owned,),
+            lambda blk, hand, acc: acc + self._mixed_dense(blk, self.chunk) @ hand[0],
         )

@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.configs.base import GNNArch, GNNShape
-from repro.data.sampler import NeighborSampler, block_budget
+from repro.configs.base import GNNArch
+from repro.data.sampler import NeighborSampler
 from repro.graphs.graph import Graph
 
 __all__ = ["full_graph_batch", "molecule_batch", "minibatch_batch", "synth_features"]

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator
+from typing import Callable
 
 __all__ = ["Prefetcher"]
 

@@ -31,10 +31,28 @@ from repro.graphs.graph import Graph
 __all__ = [
     "TwoDPartition",
     "BlockedSparseLayout",
+    "HybridLayout",
     "partition_2d",
     "partition_arcs_2d",
     "default_tile_dim",
 ]
+
+
+def _arc_tile_unique(d: np.ndarray, s: np.ndarray, bm: int, bk: int, num_tc: int):
+    """The arc→tile unique pass of one grid cell.
+
+    Maps a cell's (dst_local, src_local) arc pairs onto the (bm × bk)
+    tile grid and deduplicates: returns ``(r_u, c_u, inv)`` — the unique
+    tile row/col ids (row-major-key sorted, i64) and the arc→unique-tile
+    inverse map.  This is the single expensive sort of the host-side
+    tile build; :meth:`TwoDPartition._tile_pass` caches its result per
+    (bm, bk) so the counting path (memory guard / roofline), the kernel
+    choice, and the layout build all share ONE pass.  Tests spy on this
+    seam to pin the no-duplicate-pass property.
+    """
+    key = (d // bm) * num_tc + (s // bk)
+    uniq, inv = np.unique(key, return_inverse=True)
+    return uniq // num_tc, uniq % num_tc, inv
 
 
 def default_tile_dim(chunk: int, preferred: int = 128) -> int:
@@ -74,6 +92,12 @@ class BlockedSparseLayout:
                   chunk, ``ring_tile_cols`` re-based to [0, chunk/bk).
                   Same row-sorted / row-complete / padded invariants per
                   slot.  None when built with ``ring=False``.
+
+    Exactly one of the two forms is materialized: ``ring=False`` fills
+    ``tiles``/``tile_rows``/``tile_cols`` and leaves the ring arrays
+    None; ``ring=True`` fills only the ring arrays (the full tile array
+    used to be built alongside and thrown away — double host memory at
+    RMAT scale).
     """
 
     bm: int
@@ -81,10 +105,10 @@ class BlockedSparseLayout:
     R: int
     C: int
     chunk: int
-    tiles: np.ndarray
-    tile_rows: np.ndarray
-    tile_cols: np.ndarray
     nnz_tiles: np.ndarray
+    tiles: np.ndarray | None = None
+    tile_rows: np.ndarray | None = None
+    tile_cols: np.ndarray | None = None
     ring_tiles: np.ndarray | None = None
     ring_tile_rows: np.ndarray | None = None
     ring_tile_cols: np.ndarray | None = None
@@ -108,6 +132,44 @@ class BlockedSparseLayout:
         per_dev = arrs[0].size // (self.R * self.C) * dtype_bytes
         per_dev += sum(a.size // (self.R * self.C) * 4 for a in arrs[1:])
         return per_dev
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridLayout:
+    """Mixed dense/sparse per-cell layout (``engine_kind="pallas_hybrid"``).
+
+    The roofline's per-cell kernel choice
+    (:func:`repro.roofline.model.cell_kernel_choice`) marks each device
+    cell dense or BCSR; the layout ships both operand sets with
+    shard_map-uniform shapes but materializes each cell's data only in
+    its chosen representation:
+
+      dense_cells: bool [R, C] — True where the cell streams its dense
+                   block through the dense partial kernels.
+      blocks:      f32 [R, C, C·chunk, R·chunk] — dense adjacency data
+                   for the dense-chosen cells; sparse-chosen slots are
+                   never written (np.zeros calloc pages stay untouched),
+                   so *materialized* host memory scales with the
+                   dense-chosen area, not the mesh.
+      sparse:      :class:`BlockedSparseLayout` holding tile data only
+                   for the sparse-chosen cells — dense-chosen cells
+                   carry the minimal row-complete filler list, so the
+                   tile-count padding is set by the sparse cells alone.
+    """
+
+    dense_cells: np.ndarray
+    blocks: np.ndarray
+    sparse: BlockedSparseLayout
+
+    def host_bytes(self) -> int:
+        """Materialized host bytes of the mixed layout: dense block data
+        for the dense-chosen cells only (untouched zero pages of the
+        sparse-chosen slots excluded), all cells' tile arrays (padded —
+        the shipped quantity), and the choice mask."""
+        m, k = self.blocks.shape[2:]
+        dense = int(self.dense_cells.sum()) * m * k * self.blocks.itemsize
+        n_cells = self.dense_cells.size
+        return dense + n_cells * self.sparse.adjacency_bytes() + n_cells
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,20 +286,49 @@ class TwoDPartition:
         valid = self.dst_local[i, j] != self.C * self.chunk
         return self.dst_local[i, j][valid], self.src_local[i, j][valid]
 
+    def _tile_dims(self, bm: int | None, bk: int | None) -> tuple[int, int]:
+        bm = default_tile_dim(self.chunk) if bm is None else bm
+        bk = default_tile_dim(self.chunk) if bk is None else bk
+        if self.chunk % bm or self.chunk % bk:
+            raise ValueError(
+                f"tile dims ({bm}, {bk}) must divide chunk={self.chunk} "
+                "(ring-chunk slicing needs tile-aligned chunk boundaries)"
+            )
+        return bm, bk
+
+    def _tile_pass(self, bm: int, bk: int) -> list[list[tuple]]:
+        """The ONE arc→tile counting pass per (bm, bk), cached.
+
+        ``result[i][j] = (r_u, c_u, inv)`` from :func:`_arc_tile_unique`.
+        Every consumer of the tile grid — :meth:`nnz_tile_counts`,
+        :meth:`blocked_sparse_counts` (memory guard / roofline / kernel
+        choice) and the :meth:`blocked_sparse` layout build — reads this
+        cache, so resolve → guard → build runs the per-cell unique pass
+        exactly once per tile shape, not once per consumer.
+        """
+        cache = self.__dict__.setdefault("_tile_pass_cache", {})
+        if (bm, bk) not in cache:
+            num_tc = self.R * self.chunk // bk
+            cache[(bm, bk)] = [
+                [
+                    _arc_tile_unique(*self._cell_arcs(i, j), bm, bk, num_tc)
+                    for j in range(self.C)
+                ]
+                for i in range(self.R)
+            ]
+        return cache[(bm, bk)]
+
     def nnz_tile_counts(self, bm: int | None = None, bk: int | None = None) -> np.ndarray:
         """int64 [R, C] nonzero (bm × bk)-tile count per device block —
         the O(nnz-tiles) quantity of the blocked-sparse memory model,
         computable without materializing any tile data (memory guard /
         roofline path)."""
-        bm = default_tile_dim(self.chunk) if bm is None else bm
-        bk = default_tile_dim(self.chunk) if bk is None else bk
-        num_tc = self.R * self.chunk // bk
-        counts = np.zeros((self.R, self.C), np.int64)
-        for i in range(self.R):
-            for j in range(self.C):
-                d, s = self._cell_arcs(i, j)
-                counts[i, j] = np.unique((d // bm) * num_tc + (s // bk)).size
-        return counts
+        bm, bk = self._tile_dims(bm, bk)
+        cells = self._tile_pass(bm, bk)
+        return np.array(
+            [[cells[i][j][0].size for j in range(self.C)] for i in range(self.R)],
+            np.int64,
+        )
 
     def ring_arcs_max(self, arc_pad_multiple: int = 8) -> int:
         """``max_ring_arcs`` of :meth:`ring_arcs` without materializing
@@ -255,11 +346,16 @@ class TwoDPartition:
         return max_ring + (-max_ring) % arc_pad_multiple
 
     def blocked_sparse_counts(
-        self, bm: int | None = None, bk: int | None = None
+        self,
+        bm: int | None = None,
+        bk: int | None = None,
+        cells: np.ndarray | None = None,
     ) -> dict:
         """Exact stored-tile accounting of :meth:`blocked_sparse` (both
-        the full and ring forms, one pass) without materializing tile
-        data (memory guard / roofline path).
+        the full and ring forms) without materializing tile data (memory
+        guard / roofline / kernel-choice path) — served from the shared
+        :meth:`_tile_pass` cache, so calling this before the layout
+        build adds zero extra arc→tile passes.
 
         The shipped layout stores more than the true nonzero tiles: one
         zero filler per empty tile-row (row-complete invariant), padding
@@ -267,40 +363,61 @@ class TwoDPartition:
         ring form — R per-slot slices each carrying its own fillers and
         global padding.  ``bytes_full``/``bytes_ring`` match
         :meth:`BlockedSparseLayout.adjacency_bytes` exactly.
+
+        ``cells`` (bool [R, C], default all-True) restricts which cells'
+        tiles count as stored — the hybrid engine prices its sparse side
+        with ``cells=~dense_cells``; deselected cells are accounted as
+        the filler-only lists the masked layout actually materializes.
+
+        The per-cell arrays (``nnz_cell``/``stored_full_cell``/
+        ``stored_ring_slot_cell``, masked like the aggregates) feed the
+        roofline's per-cell dense-vs-BCSR choice
+        (:func:`repro.roofline.model.cell_kernel_choice`).
         """
-        bm = default_tile_dim(self.chunk) if bm is None else bm
-        bk = default_tile_dim(self.chunk) if bk is None else bk
+        bm, bk = self._tile_dims(bm, bk)
         R, C, chunk = self.R, self.C, self.chunk
         num_tr = C * chunk // bm
-        num_tc = R * chunk // bk
         cpk = chunk // bk
-        nnz_max = nnz_total = full_max = ring_max = 0
+        sel = (
+            np.ones((R, C), bool) if cells is None else np.asarray(cells, bool)
+        )
+        pass_cells = self._tile_pass(bm, bk)
+        nnz_cell = np.zeros((R, C), np.int64)
+        full_cell = np.zeros((R, C), np.int64)
+        ring_slot_cell = np.zeros((R, C), np.int64)
         for i in range(R):
             for j in range(C):
-                d, s = self._cell_arcs(i, j)
-                key = (d // bm) * num_tc + (s // bk)
-                uniq = np.unique(key)
-                r_u, c_u = uniq // num_tc, uniq % num_tc
-                nnz_max = max(nnz_max, uniq.size)
-                nnz_total += uniq.size
-                full_max = max(full_max, uniq.size + num_tr - np.unique(r_u).size)
+                # a deselected cell materializes like an empty one: num_tr
+                # row-complete fillers, no data tiles
+                r_u, c_u, _ = (
+                    pass_cells[i][j]
+                    if sel[i, j]
+                    else (np.zeros(0, np.int64), np.zeros(0, np.int64), None)
+                )
+                nnz_cell[i, j] = r_u.size
+                full_cell[i, j] = r_u.size + num_tr - np.unique(r_u).size
+                slot_max = 0
                 for r in range(R):
                     rows_r = r_u[(c_u // cpk) == r]
-                    ring_max = max(
-                        ring_max, rows_r.size + num_tr - np.unique(rows_r).size
+                    slot_max = max(
+                        slot_max, rows_r.size + num_tr - np.unique(rows_r).size
                     )
-        stored_full = max(full_max, 1)
-        stored_ring = R * max(ring_max, 1)
+                ring_slot_cell[i, j] = slot_max
+        stored_full = max(int(full_cell.max()), 1)
+        stored_ring = R * max(int(ring_slot_cell.max()), 1)
         per_tile = bm * bk * 4 + 8
         return {
             "bm": bm,
             "bk": bk,
-            "nnz_max": nnz_max,
-            "nnz_total": nnz_total,
+            "nnz_max": int(nnz_cell.max()),
+            "nnz_total": int(nnz_cell.sum()),
             "stored_tiles_full": stored_full,
             "stored_tiles_ring": stored_ring,
             "bytes_full": stored_full * per_tile,
             "bytes_ring": stored_ring * per_tile,
+            "nnz_cell": nnz_cell,
+            "stored_full_cell": full_cell,
+            "stored_ring_slot_cell": ring_slot_cell,
         }
 
     def blocked_sparse(
@@ -310,6 +427,7 @@ class TwoDPartition:
         *,
         ring: bool = False,
         dtype=np.float32,
+        cells: np.ndarray | None = None,
     ) -> BlockedSparseLayout:
         """Build the tiled block-compressed layout (see BlockedSparseLayout).
 
@@ -317,32 +435,26 @@ class TwoDPartition:
         lane-friendly divisor ≤ 128) so the tile grid is aligned with
         both the fold-partial rows ([C·chunk]) and — for ``ring=True`` —
         the per-ring-chunk source slicing of the pipelined expand.
+
+        Only the requested form is materialized: ``ring=True`` builds
+        the per-ring-chunk slices and leaves ``tiles`` None.  The tile
+        ids come from the shared :meth:`_tile_pass` cache, so a
+        preceding :meth:`blocked_sparse_counts` (guard / roofline) costs
+        no second arc→tile pass.
+
+        ``cells`` (bool [R, C]) stores tile data only for the selected
+        cells; deselected cells materialize like empty ones (the minimal
+        row-complete filler list) — the hybrid engine's sparse side,
+        where dense-chosen cells must not inflate the tile padding.
         """
-        bm = default_tile_dim(self.chunk) if bm is None else bm
-        bk = default_tile_dim(self.chunk) if bk is None else bk
-        if self.chunk % bm or self.chunk % bk:
-            raise ValueError(
-                f"tile dims ({bm}, {bk}) must divide chunk={self.chunk} "
-                "(ring-chunk slicing needs tile-aligned chunk boundaries)"
-            )
+        bm, bk = self._tile_dims(bm, bk)
         R, C, chunk = self.R, self.C, self.chunk
         num_tr = C * chunk // bm
-        num_tc = R * chunk // bk
         cpk = chunk // bk  # tile-cols per ring chunk
-
-        def materialize(entries, t_max):
-            """entries[i][j] = (rows, cols, data) sorted by row, row-complete.
-            Pad each cell to t_max with zero tiles on the last tile-row."""
-            rows = np.full((R, C, t_max), num_tr - 1, np.int32)
-            cols = np.zeros((R, C, t_max), np.int32)
-            data = np.zeros((R, C, t_max, bm, bk), dtype)
-            for i in range(R):
-                for j in range(C):
-                    r_u, c_u, d_u = entries[i][j]
-                    rows[i, j, : r_u.size] = r_u
-                    cols[i, j, : c_u.size] = c_u
-                    data[i, j, : d_u.shape[0]] = d_u
-            return rows, cols, data
+        sel = (
+            np.ones((R, C), bool) if cells is None else np.asarray(cells, bool)
+        )
+        pass_cells = self._tile_pass(bm, bk)
 
         def row_complete(r_u, c_u, d_u):
             """Insert one zero filler tile into every absent tile-row so
@@ -360,60 +472,91 @@ class TwoDPartition:
             return r_u, c_u, d_u
 
         nnz = np.zeros((R, C), np.int64)
-        full_entries: list[list[tuple]] = []
-        ring_entries: list[list[list[tuple]]] = []
-        full_max, ring_max = 1, 1
+        entries: list = []  # [i][j] = cell tuple, or [i][j][r] = slot tuple
+        t_max = 1
         for i in range(R):
-            full_row, ring_row = [], []
+            row = []
             for j in range(C):
-                d, s = self._cell_arcs(i, j)
-                key = (d // bm) * num_tc + (s // bk)
-                uniq, inv = np.unique(key, return_inverse=True)
-                data = np.zeros((uniq.size, bm, bk), dtype)
-                data[inv, d % bm, s % bk] = 1
-                r_u, c_u = uniq // num_tc, uniq % num_tc
-                nnz[i, j] = uniq.size
-                cell = row_complete(r_u, c_u, data)
-                full_max = max(full_max, cell[0].size)
-                full_row.append(cell)
+                if sel[i, j]:
+                    r_u, c_u, inv = pass_cells[i][j]
+                    d, s = self._cell_arcs(i, j)
+                    data = np.zeros((r_u.size, bm, bk), dtype)
+                    data[inv, d % bm, s % bk] = 1
+                    nnz[i, j] = r_u.size
+                else:
+                    r_u = c_u = np.zeros(0, np.int64)
+                    data = np.zeros((0, bm, bk), dtype)
                 if ring:
                     slots = []
                     for r in range(R):
-                        sel = (c_u // cpk) == r
-                        slot = row_complete(r_u[sel], c_u[sel] - r * cpk, data[sel])
-                        ring_max = max(ring_max, slot[0].size)
+                        pick = (c_u // cpk) == r
+                        slot = row_complete(r_u[pick], c_u[pick] - r * cpk, data[pick])
+                        t_max = max(t_max, slot[0].size)
                         slots.append(slot)
-                    ring_row.append(slots)
-            full_entries.append(full_row)
-            ring_entries.append(ring_row)
+                    row.append(slots)
+                else:
+                    cell = row_complete(r_u, c_u, data)
+                    t_max = max(t_max, cell[0].size)
+                    row.append(cell)
+            entries.append(row)
 
-        rows_a, cols_a, tiles_a = materialize(full_entries, full_max)
-        ring_rows = ring_cols = ring_tiles = None
-        if ring:
-            ring_rows = np.full((R, C, R, ring_max), num_tr - 1, np.int32)
-            ring_cols = np.zeros((R, C, R, ring_max), np.int32)
-            ring_tiles = np.zeros((R, C, R, ring_max, bm, bk), dtype)
-            for i in range(R):
-                for j in range(C):
-                    for r in range(R):
-                        r_u, c_u, d_u = ring_entries[i][j][r]
-                        ring_rows[i, j, r, : r_u.size] = r_u
-                        ring_cols[i, j, r, : c_u.size] = c_u
-                        ring_tiles[i, j, r, : d_u.shape[0]] = d_u
-        return BlockedSparseLayout(
-            bm=bm,
-            bk=bk,
-            R=R,
-            C=C,
-            chunk=chunk,
-            tiles=tiles_a,
-            tile_rows=rows_a,
-            tile_cols=cols_a,
-            nnz_tiles=nnz,
-            ring_tiles=ring_tiles,
-            ring_tile_rows=ring_rows,
-            ring_tile_cols=ring_cols,
+        # materialize (pad each cell/slot to t_max with zero tiles on the
+        # last tile-row); only the requested form is allocated
+        lead = (R, C, R) if ring else (R, C)
+        rows_a = np.full(lead + (t_max,), num_tr - 1, np.int32)
+        cols_a = np.zeros(lead + (t_max,), np.int32)
+        tiles_a = np.zeros(lead + (t_max, bm, bk), dtype)
+        for i in range(R):
+            for j in range(C):
+                slots = entries[i][j] if ring else [entries[i][j]]
+                for r, (r_u, c_u, d_u) in enumerate(slots):
+                    at = (i, j, r) if ring else (i, j)
+                    rows_a[at][: r_u.size] = r_u
+                    cols_a[at][: c_u.size] = c_u
+                    tiles_a[at][: d_u.shape[0]] = d_u
+        kw = (
+            dict(ring_tiles=tiles_a, ring_tile_rows=rows_a, ring_tile_cols=cols_a)
+            if ring
+            else dict(tiles=tiles_a, tile_rows=rows_a, tile_cols=cols_a)
         )
+        return BlockedSparseLayout(
+            bm=bm, bk=bk, R=R, C=C, chunk=chunk, nnz_tiles=nnz, **kw
+        )
+
+    def blocked_hybrid(
+        self,
+        bm: int | None = None,
+        bk: int | None = None,
+        *,
+        dense_cells: np.ndarray,
+        ring: bool = False,
+        dtype=np.float32,
+    ) -> HybridLayout:
+        """Build the mixed dense/sparse per-cell layout (see HybridLayout).
+
+        ``dense_cells`` (bool [R, C]) is the roofline's per-cell kernel
+        choice (:func:`repro.roofline.model.cell_kernel_choice`).  Dense
+        data is written only into the dense-chosen cells' block slots;
+        the sparse side is :meth:`blocked_sparse` restricted to the
+        complementary cells, so each representation is materialized
+        exactly where it is streamed.
+        """
+        dense_cells = np.asarray(dense_cells, bool)
+        if dense_cells.shape != (self.R, self.C):
+            raise ValueError(
+                f"dense_cells shape {dense_cells.shape} != grid {(self.R, self.C)}"
+            )
+        sparse = self.blocked_sparse(
+            bm, bk, ring=ring, dtype=dtype, cells=~dense_cells
+        )
+        m, k = self.C * self.chunk, self.R * self.chunk
+        blocks = np.zeros((self.R, self.C, m, k), np.float32)
+        for i in range(self.R):
+            for j in range(self.C):
+                if dense_cells[i, j]:
+                    d, s = self._cell_arcs(i, j)
+                    blocks[i, j, d, s] = 1
+        return HybridLayout(dense_cells=dense_cells, blocks=blocks, sparse=sparse)
 
 
 def partition_2d(

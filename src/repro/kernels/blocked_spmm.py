@@ -22,6 +22,11 @@ flushes to the output block at the run's last tile.  The layout
 guarantees every tile-row holds at least one (possibly all-zero filler)
 tile, so every output block is written exactly once per (row, s-block).
 
+All four kernel variants — frontier/dependency × zero-init/carried-acc
+— are products of one :func:`make_sparse_kernel` factory: the tile-row
+run accumulate is written once, parameterized by the fused operand math
+and the accumulator init.
+
 Both kernels are *partial* (pre-fold) forms mirroring the dense
 ``frontier_partial_pallas`` / ``dependency_partial_pallas``: the operand
 fusion (frontier mask / g recompute in VMEM) is identical, the state
@@ -41,6 +46,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
+    "make_sparse_kernel",
     "frontier_sparse_kernel",
     "frontier_sparse_acc_kernel",
     "frontier_sparse_pallas",
@@ -71,160 +77,90 @@ def _row_run_bounds(rows_ref, t, num_tiles: int):
     return first, last
 
 
-def frontier_sparse_kernel(
-    rows_ref,  # SMEM i32 [T] (scalar prefetch)
-    cols_ref,  # SMEM i32 [T] (scalar prefetch)
-    lvl_ref,  # SMEM i32 [1] (scalar prefetch)
-    a_ref,  # [1, bm, bk] stored tile
-    sigma_k_ref,  # [bk, bs] operand σ tile at tile_cols[t]
-    depth_k_ref,  # [bk, bs] operand d tile at tile_cols[t]
-    t_out_ref,  # [bm, bs] partial product at tile_rows[t]
-    acc_ref,  # VMEM scratch [bm, bs] f32
-    *,
-    num_tiles: int,
-):
-    t = pl.program_id(1)
-    first, last = _row_run_bounds(rows_ref, t, num_tiles)
-
-    @pl.when(first)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    lvl = lvl_ref[0]
-    frontier = sigma_k_ref[...] * (depth_k_ref[...] == lvl - 1).astype(jnp.float32)
-    acc_ref[...] += jnp.dot(
-        a_ref[0].astype(jnp.float32), frontier, preferred_element_type=jnp.float32
-    )
-
-    @pl.when(last)
-    def _flush():
-        t_out_ref[...] = acc_ref[...]
+def _frontier_operand(lvl, sigma_k_ref, depth_k_ref):
+    """Fused forward operand: the masked frontier σ ⊙ [d = lvl-1]."""
+    return sigma_k_ref[...] * (depth_k_ref[...] == lvl - 1).astype(jnp.float32)
 
 
-def frontier_sparse_acc_kernel(
-    rows_ref,
-    cols_ref,
-    lvl_ref,
-    a_ref,
-    sigma_k_ref,
-    depth_k_ref,
-    t_in_ref,  # [bm, bs] running ring accumulator at tile_rows[t]
-    t_out_ref,
-    acc_ref,
-    *,
-    num_tiles: int,
-):
-    t = pl.program_id(1)
-    first, last = _row_run_bounds(rows_ref, t, num_tiles)
-
-    @pl.when(first)
-    def _init():
-        acc_ref[...] = t_in_ref[...]
-
-    lvl = lvl_ref[0]
-    frontier = sigma_k_ref[...] * (depth_k_ref[...] == lvl - 1).astype(jnp.float32)
-    acc_ref[...] += jnp.dot(
-        a_ref[0].astype(jnp.float32), frontier, preferred_element_type=jnp.float32
-    )
-
-    @pl.when(last)
-    def _flush():
-        t_out_ref[...] = acc_ref[...]
-
-
-def dependency_sparse_kernel(
-    rows_ref,
-    cols_ref,
-    lvl_ref,
-    a_ref,  # [1, bm, bk]
-    sigma_k_ref,  # [bk, bs]
-    depth_k_ref,  # [bk, bs]
-    delta_k_ref,  # [bk, bs]
-    omega_k_ref,  # [bk, 1]
-    t_out_ref,  # [bm, bs]
-    acc_ref,  # VMEM [bm, bs] f32
-    *,
-    num_tiles: int,
-):
-    t = pl.program_id(1)
-    first, last = _row_run_bounds(rows_ref, t, num_tiles)
-
-    @pl.when(first)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    lvl = lvl_ref[0]
+def _dependency_operand(lvl, sigma_k_ref, depth_k_ref, delta_k_ref, omega_k_ref):
+    """Fused backward operand: g = (1 + δ + ω) / σ on d = lvl+1."""
     sigma_k = sigma_k_ref[...]
     safe_sigma = jnp.where(sigma_k > 0, sigma_k, 1.0)
-    g = jnp.where(
+    return jnp.where(
         depth_k_ref[...] == lvl + 1,
         (1.0 + delta_k_ref[...] + omega_k_ref[...]) / safe_sigma,
         0.0,
     )
-    acc_ref[...] += jnp.dot(
-        a_ref[0].astype(jnp.float32), g, preferred_element_type=jnp.float32
-    )
-
-    @pl.when(last)
-    def _flush():
-        t_out_ref[...] = acc_ref[...]
 
 
-def dependency_sparse_acc_kernel(
-    rows_ref,
-    cols_ref,
-    lvl_ref,
-    a_ref,
-    sigma_k_ref,
-    depth_k_ref,
-    delta_k_ref,
-    omega_k_ref,
-    t_in_ref,  # [bm, bs] running ring accumulator
-    t_out_ref,
-    acc_ref,
-    *,
-    num_tiles: int,
-):
-    t = pl.program_id(1)
-    first, last = _row_run_bounds(rows_ref, t, num_tiles)
+def make_sparse_kernel(operand_fn, *, carried: bool):
+    """Kernel factory: ONE copy of the tile-row-run accumulate.
 
-    @pl.when(first)
-    def _init():
-        acc_ref[...] = t_in_ref[...]
+    All four sparse traversal kernels are the same program — initialize
+    the VMEM accumulator at a tile-row run's first tile, fold one
+    ``A_tile @ operand_tile`` product per grid step, flush at the run's
+    last tile — differing only in the fused operand math (``operand_fn``
+    builds the [bk, bs] RHS tile from the prefetched level and the
+    operand refs) and the accumulator init (``carried=True`` seeds from
+    the ring schedule's ``t_in`` partial instead of zeros).  The factory
+    keeps that program in one place; the module-level kernel names below
+    are its four products.
 
-    lvl = lvl_ref[0]
-    sigma_k = sigma_k_ref[...]
-    safe_sigma = jnp.where(sigma_k > 0, sigma_k, 1.0)
-    g = jnp.where(
-        depth_k_ref[...] == lvl + 1,
-        (1.0 + delta_k_ref[...] + omega_k_ref[...]) / safe_sigma,
-        0.0,
-    )
-    acc_ref[...] += jnp.dot(
-        a_ref[0].astype(jnp.float32), g, preferred_element_type=jnp.float32
-    )
+    Emitted signature (positional refs, matching ``_sparse_call``):
+        rows_ref, cols_ref, lvl_ref   SMEM i32 (scalar prefetch)
+        a_ref                         [1, bm, bk] stored tile
+        *operand_refs                 [bk, bs]-tiled operands at tile_cols[t]
+        [t_in_ref]                    [bm, bs] ring accumulator (carried)
+        t_out_ref                     [bm, bs] partial at tile_rows[t]
+        acc_ref                       VMEM scratch [bm, bs] f32
+    """
 
-    @pl.when(last)
-    def _flush():
-        t_out_ref[...] = acc_ref[...]
+    def kernel(rows_ref, cols_ref, lvl_ref, a_ref, *refs, num_tiles: int):
+        acc_ref, t_out_ref = refs[-1], refs[-2]
+        t_in_ref = refs[-3] if carried else None
+        operand_refs = refs[: -3 if carried else -2]
+        t = pl.program_id(1)
+        first, last = _row_run_bounds(rows_ref, t, num_tiles)
+
+        @pl.when(first)
+        def _init():
+            acc_ref[...] = (
+                jnp.zeros_like(acc_ref) if t_in_ref is None else t_in_ref[...]
+            )
+
+        rhs = operand_fn(lvl_ref[0], *operand_refs)
+        acc_ref[...] += jnp.dot(
+            a_ref[0].astype(jnp.float32), rhs, preferred_element_type=jnp.float32
+        )
+
+        @pl.when(last)
+        def _flush():
+            t_out_ref[...] = acc_ref[...]
+
+    return kernel
+
+
+frontier_sparse_kernel = make_sparse_kernel(_frontier_operand, carried=False)
+frontier_sparse_acc_kernel = make_sparse_kernel(_frontier_operand, carried=True)
+dependency_sparse_kernel = make_sparse_kernel(_dependency_operand, carried=False)
+dependency_sparse_acc_kernel = make_sparse_kernel(_dependency_operand, carried=True)
 
 
 def _sparse_call(kernel_pair, m, s, bm, bk, bs, num_tiles, operand_specs, args, acc, interpret):
     """Shared pallas_call shell of the two sparse SpMMs.
 
+    ``kernel_pair`` = (zero-init, carried-acc) factory products — the
+    module-level names above, so the public kernels ARE what runs.
     ``args`` = (rows, cols, lvl, tiles, *operands); operand tiles index
     via cols_ref, the output (and ``acc`` input) via rows_ref.
     """
-    plain_kernel, acc_kernel = kernel_pair
     out_spec = pl.BlockSpec((bm, bs), lambda j, t, rows, cols, lvl: (rows[t], j))
     in_specs = [
         pl.BlockSpec((1, bm, bk), lambda j, t, rows, cols, lvl: (t, 0, 0)),  # tile
         *operand_specs,
     ]
-    if acc is None:
-        kernel = functools.partial(plain_kernel, num_tiles=num_tiles)
-    else:
-        kernel = functools.partial(acc_kernel, num_tiles=num_tiles)
+    kernel = functools.partial(kernel_pair[acc is not None], num_tiles=num_tiles)
+    if acc is not None:
         in_specs.append(out_spec)  # t_in rides the output block index
         args = args + (acc,)
     grid_spec = pltpu.PrefetchScalarGridSpec(

@@ -78,6 +78,15 @@ def _rect_geometry(m: int, kdim: int, s: int, bm: int, bk: int, bs: int):
     return _pick_block(m, bm, 8), _pick_block(kdim, bk, 8), _pick_block(s, bs, 128)
 
 
+def _pad_cols(bs: int, *pairs):
+    """Pad each (array, fill) pair along axis 1 to a multiple of ``bs``
+    (the shared operand plumbing of the two blocked-sparse wrappers);
+    ``None`` arrays pass through (the optional ring ``acc``)."""
+    return tuple(
+        None if a is None else _pad_to(a, 1, bs, fill=f) for a, f in pairs
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bm", "bk", "bs"))
 def frontier_spmm(
     adjacency,
@@ -268,9 +277,7 @@ def frontier_spmm_sparse(
         interpret = not on_tpu()
     s = sigma.shape[1]
     bs = _pick_block(s, bs, 128)
-    sg = _pad_to(sigma, 1, bs)
-    dp = _pad_to(depth, 1, bs, fill=-1)
-    ac = None if acc is None else _pad_to(acc, 1, bs)
+    sg, dp, ac = _pad_cols(bs, (sigma, 0), (depth, -1), (acc, 0))
     t = frontier_sparse_pallas(
         tiles, tile_rows, tile_cols, sg, dp, lvl, m=m, acc=ac, bs=bs,
         interpret=interpret,
@@ -310,10 +317,7 @@ def dependency_spmm_sparse(
         interpret = not on_tpu()
     s = sigma.shape[1]
     bs = _pick_block(s, bs, 128)
-    sg = _pad_to(sigma, 1, bs)
-    dp = _pad_to(depth, 1, bs, fill=-1)
-    dl = _pad_to(delta, 1, bs)
-    ac = None if acc is None else _pad_to(acc, 1, bs)
+    sg, dp, dl, ac = _pad_cols(bs, (sigma, 0), (depth, -1), (delta, 0), (acc, 0))
     t = dependency_sparse_pallas(
         tiles, tile_rows, tile_cols, sg, dp, dl, omega, lvl, m=m, acc=ac, bs=bs,
         interpret=interpret,

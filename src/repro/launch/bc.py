@@ -10,8 +10,11 @@
 Supports single-device and distributed execution; every engine of the
 unified traversal stack is selectable with ``--engine`` (single-device:
 ``dense | sparse | pallas | pallas_bf16``; distributed: the ``sparse``
-arc-list engine, the Pallas dense-block engines, or the blocked-sparse
-``pallas_sparse`` engine for graphs whose dense blocks do not fit).
+arc-list engine, the Pallas dense-block engines, the blocked-sparse
+``pallas_sparse`` engine for graphs whose dense blocks do not fit, or
+``pallas_hybrid``, which picks dense vs BCSR *per device cell* from the
+roofline's bytes-streamed threshold — ``--hybrid-threshold`` overrides
+the break-even, the per-cell choice is logged).
 
 ``--mesh RxC`` runs one 2-D-decomposed traversal grid; ``--mesh FRxRxC``
 (three dims) replicates that grid into ``FR`` sub-clusters (paper §3.3),
@@ -93,6 +96,23 @@ def main() -> None:
         "'auto' picks from the roofline estimate)",
     )
     ap.add_argument(
+        "--tile",
+        default=None,
+        help="blocked-sparse tile shape BM or BMxBK (pallas_sparse / "
+        "pallas_hybrid; both must divide the partition chunk; default: "
+        "largest lane-friendly divisor <= 128).  Coarser tiles push "
+        "more hybrid cells over the dense break-even",
+    )
+    ap.add_argument(
+        "--hybrid-threshold",
+        type=float,
+        default=1.0,
+        help="pallas_hybrid break-even: a cell streams BCSR tiles when "
+        "their bytes are under this fraction of its dense-block bytes "
+        "(0 forces all cells dense, a large value all sparse; the "
+        "per-cell choice is logged)",
+    )
+    ap.add_argument(
         "--hbm-gb",
         type=float,
         default=0.0,
@@ -147,8 +167,23 @@ def main() -> None:
 
     if args.overlap != "none" and not args.mesh:
         raise SystemExit("--overlap is a distributed schedule; pass --mesh RxC")
-    if args.engine == "pallas_sparse" and not args.mesh:
-        raise SystemExit("pallas_sparse is a distributed engine; pass --mesh RxC")
+    if args.engine in ("pallas_sparse", "pallas_hybrid") and not args.mesh:
+        raise SystemExit(
+            f"{args.engine} is a distributed engine; pass --mesh RxC"
+        )
+    tile = None
+    if args.tile:
+        if not args.mesh:
+            raise SystemExit(
+                "--tile shapes the blocked-sparse/hybrid layouts; pass --mesh RxC"
+            )
+        try:
+            dims = tuple(int(d) for d in args.tile.split("x"))
+        except ValueError:
+            dims = ()
+        if len(dims) not in (1, 2) or any(d <= 0 for d in dims):
+            raise SystemExit("--tile takes BM or BMxBK (positive integers)")
+        tile = (dims[0], dims[-1])
     mesh_shape = tuple(map(int, args.mesh.split("x"))) if args.mesh else None
     if mesh_shape is not None and len(mesh_shape) not in (2, 3):
         raise SystemExit("--mesh takes RxC or FRxRxC")
@@ -180,6 +215,8 @@ def main() -> None:
             heuristics=args.heuristics,
             engine_kind=engine_kind,
             overlap=args.overlap,
+            tile=tile,
+            hybrid_threshold=args.hybrid_threshold,
             hbm_limit_bytes=args.hbm_gb * 2**30 if args.hbm_gb > 0 else None,
             checkpoint=checkpoint,
             straggler=args.straggler,

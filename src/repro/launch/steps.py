@@ -13,7 +13,6 @@ for the BC configs.  ``build_cell`` returns everything the dry-run needs:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable
 
 import numpy as np

@@ -8,8 +8,6 @@ window turns it into genuinely sub-quadratic local attention.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

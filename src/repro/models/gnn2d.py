@@ -24,10 +24,7 @@ graphs/partition.partition_arcs_2d.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp

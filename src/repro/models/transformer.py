@@ -14,8 +14,6 @@ Design points for the 256–512-chip cells:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any
 
 import jax

@@ -26,6 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 __all__ = [
     "V5E",
     "RooflineTerms",
@@ -35,9 +37,12 @@ __all__ = [
     "ring_latency_s",
     "overlap_step_time",
     "adjacency_stream_bytes",
+    "sparse_tile_bytes",
+    "cell_kernel_choice",
     "device_hbm_footprint",
     "auto_overlap_policy",
     "exchange_operands",
+    "TILE_OVERHEAD_BYTES",
 ]
 
 
@@ -160,14 +165,71 @@ def overlap_step_time(compute_s: float, collective_s: float, k: int) -> float:
 # ---------------------------------------------------------------------------
 
 #: payload tensors per exchanged direction: the arc-list engine ships a
-#: single pre-masked tensor; the fused Pallas engines ship (σ, d) forward
-#: and (σ, d, δ, ω) backward (paper §3.2 exchange set).
+#: single pre-masked tensor; the fused Pallas engines (dense-block,
+#: blocked-sparse, and the per-cell hybrid of the two) ship (σ, d)
+#: forward and (σ, d, δ, ω) backward (paper §3.2 exchange set).
 _EXCHANGE_OPERANDS = {
     "sparse": (1, 1),
     "pallas": (2, 4),
     "pallas_bf16": (2, 4),
     "pallas_sparse": (2, 4),
+    "pallas_hybrid": (2, 4),
 }
+
+#: per-stored-tile scalar-prefetch/grid-step overhead allowance of the
+#: blocked-sparse kernels, in equivalent HBM bytes: the 8 B row/col
+#: index maps each tile DMAs plus a flat allowance for the per-grid-step
+#: control cost (index-map evaluation, accumulator init/flush bookkeeping)
+#: that the dense kernels amortize over whole 128-blocks.  Used only by
+#: the per-cell dense-vs-BCSR choice (:func:`cell_kernel_choice`) — the
+#: memory guard prices the stored bytes (:func:`sparse_tile_bytes`)
+#: without the allowance.
+TILE_OVERHEAD_BYTES = 32.0
+
+
+def sparse_tile_bytes(bm: int, bk: int, elem: int = 4) -> int:
+    """Stored bytes of one blocked-sparse tile: data + 8 B index maps."""
+    return bm * bk * elem + 8
+
+
+def cell_kernel_choice(
+    stored_tiles_cell: np.ndarray,
+    *,
+    R: int,
+    C: int,
+    chunk: int,
+    bm: int,
+    bk: int,
+    threshold: float = 1.0,
+    elem: int = 4,
+) -> np.ndarray:
+    """Per-device-cell dense-vs-BCSR kernel pick (bool [R, C], True = dense).
+
+    On skewed (RMAT-like) graphs the 2-D decomposition hands each device
+    a block whose density varies wildly across the mesh — the
+    community-structured cells are near-dense while the off-diagonal
+    cells are hyper-sparse — so a single global engine choice always
+    wastes either HBM bandwidth (dense streaming of near-empty blocks)
+    or tile-index overhead (BCSR streaming of near-full blocks).  This
+    prices what each cell actually streams per traversal level:
+
+        dense:  (C·chunk)·(R·chunk)·elem          — the cell's n_pad²/p share
+        BCSR:   stored · (bm·bk·elem + 8 + TILE_OVERHEAD_BYTES)
+
+    and picks dense where ``bcsr >= threshold · dense``.
+    ``stored_tiles_cell`` is the per-cell *stored* tile count (true
+    nonzero tiles + row-complete fillers —
+    ``TwoDPartition.blocked_sparse_counts()["stored_full_cell"]``), the
+    count the kernel's grid actually iterates.  ``threshold`` is the
+    ``--hybrid-threshold`` knob: 0 forces every cell dense, a huge value
+    forces every cell sparse, 1.0 is the break-even default.
+    """
+    stored = np.asarray(stored_tiles_cell, np.float64)
+    if stored.shape != (R, C):
+        raise ValueError(f"stored_tiles_cell shape {stored.shape} != {(R, C)}")
+    dense_bytes = float(C * chunk) * (R * chunk) * elem
+    bcsr_bytes = stored * (sparse_tile_bytes(bm, bk, elem) + TILE_OVERHEAD_BYTES)
+    return bcsr_bytes >= threshold * dense_bytes
 
 
 def exchange_operands(engine_kind: str) -> tuple[int, int]:
@@ -198,20 +260,33 @@ def adjacency_stream_bytes(
     dense Pallas engines   (C·chunk)·(R·chunk)·elem   — the full block
     blocked-sparse engine  nnz_tiles·bm·bk·elem + index maps
     arc-list engine        2·max_arcs·4               — (src, dst) i32
+    hybrid engine          dense block + the sparse tile list — the
+                           *resident* union the mixed layout ships with
+                           shard_map-uniform shapes (the guard's
+                           quantity); what one cell actually streams per
+                           level is its chosen representation
+                           (:func:`cell_kernel_choice`), priced per cell
+                           in ``repro.core.distributed.level_time_estimates``.
 
     ``nnz_tiles`` is whatever tile count the caller wants priced: the
     true nonzero count for a best-case stream model, or the layout's
     *stored* count (fillers + padding + ring slots,
     ``TwoDPartition.blocked_sparse_counts``) for the bytes actually
-    allocated/streamed — the memory guard passes the latter.
+    allocated/streamed — the memory guard passes the latter (for the
+    hybrid engine: the sparse-chosen cells' masked counts, so the guard
+    prices the actually-shipped mixed layout).
     """
     if engine_kind in ("pallas", "pallas_bf16"):
         elem = 2 if engine_kind == "pallas_bf16" else 4
         return float(C * chunk) * (R * chunk) * elem
-    if engine_kind == "pallas_sparse":
+    if engine_kind in ("pallas_sparse", "pallas_hybrid"):
         if None in (nnz_tiles, bm, bk):
-            raise ValueError("pallas_sparse needs nnz_tiles, bm, bk")
-        return float(nnz_tiles) * (bm * bk * 4 + 8)  # tile data + row/col ids
+            raise ValueError(f"{engine_kind} needs nnz_tiles, bm, bk")
+        tiles = float(nnz_tiles) * sparse_tile_bytes(bm, bk)
+        if engine_kind == "pallas_sparse":
+            return tiles
+        # dense-block operand + sparse tile list + the i32 cell choice
+        return float(C * chunk) * (R * chunk) * 4 + tiles + 4
     if engine_kind == "sparse":
         if max_arcs is None:
             raise ValueError("sparse needs max_arcs")

@@ -7,7 +7,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.roofline.model import V5E, roofline_terms
+from repro.roofline.model import roofline_terms
 
 HBM_PER_CHIP = 16 * 2**30  # v5e
 

@@ -12,7 +12,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import DLRMArch, GNNArch, LMArch
+from repro.configs.base import GNNArch, LMArch
 from repro.configs.registry import get_arch, list_archs
 from repro.launch.steps import _make_optimizer
 from repro.models import dlrm as dlrm_mod

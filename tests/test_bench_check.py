@@ -1,0 +1,146 @@
+"""Unit tests for the bench perf-regression gate (tools/check_bench.py).
+
+The gate's comparison semantics are the contract CI relies on: any
+structural metric drift fails, wall-clock drifts only outside a loose
+machine-speed factor, and timing-dependent scheduler artifacts never
+fail — but a key appearing or disappearing always does.
+"""
+import importlib.util
+import pathlib
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    pathlib.Path(__file__).resolve().parent.parent / "tools" / "check_bench.py",
+)
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+BASE = {
+    "graph": {"name": "rmat_s8_ef8", "n": 256},
+    "engines": {
+        "sparse": {
+            "expand": {
+                "link_bytes_per_round": 12345.0,
+                "collectives_per_round_by_class": {"collective-permute": 23},
+                "ring_steps_per_round": 100,
+                "round_wall_s": 0.05,
+                "rounds": 16,
+            }
+        }
+    },
+    "policies": {
+        "redeal": {
+            "rounds_redealt": 6,
+            "per_replica_wall_s": [0.14, 0.10],
+            "idle_s_est": 0.02,
+            "max_abs_err_vs_brandes": 0.0,
+        }
+    },
+}
+
+
+def _mutated(path_keys, value):
+    import copy
+
+    rec = copy.deepcopy(BASE)
+    node = rec
+    for k in path_keys[:-1]:
+        node = node[k]
+    node[path_keys[-1]] = value
+    return rec
+
+
+def test_identical_records_pass():
+    assert check_bench.compare(BASE, BASE, "b.json", 25.0) == []
+
+
+@pytest.mark.parametrize(
+    "path_keys,value",
+    [
+        (("engines", "sparse", "expand", "link_bytes_per_round"), 99.0),
+        (("engines", "sparse", "expand", "ring_steps_per_round"), 101),
+        (
+            ("engines", "sparse", "expand", "collectives_per_round_by_class"),
+            {"collective-permute": 24},
+        ),
+        (("engines", "sparse", "expand", "rounds"), 17),
+        (("graph", "n"), 512),
+        (("policies", "redeal", "max_abs_err_vs_brandes"), 0.5),
+    ],
+)
+def test_structural_drift_fails(path_keys, value):
+    failures = check_bench.compare(BASE, _mutated(path_keys, value), "b.json", 25.0)
+    assert failures, path_keys
+
+
+def test_wall_within_factor_passes_outside_fails():
+    ok = _mutated(("engines", "sparse", "expand", "round_wall_s"), 0.05 * 10)
+    assert check_bench.compare(BASE, ok, "b.json", 25.0) == []
+    slow = _mutated(("engines", "sparse", "expand", "round_wall_s"), 0.05 * 100)
+    assert check_bench.compare(BASE, slow, "b.json", 25.0)
+    fast = _mutated(("engines", "sparse", "expand", "round_wall_s"), 0.05 / 100)
+    assert check_bench.compare(BASE, fast, "b.json", 25.0)
+
+
+def test_parity_error_has_float_tolerance():
+    jitter = _mutated(("policies", "redeal", "max_abs_err_vs_brandes"), 5.9e-8)
+    assert check_bench.compare(BASE, jitter, "b.json", 25.0) == []
+    broken = _mutated(("policies", "redeal", "max_abs_err_vs_brandes"), 1e-3)
+    assert check_bench.compare(BASE, broken, "b.json", 25.0)
+
+
+def test_wall_nullness_is_structure():
+    gone = _mutated(("engines", "sparse", "expand", "round_wall_s"), None)
+    assert check_bench.compare(BASE, gone, "b.json", 25.0)
+
+
+def test_timing_artifacts_ignored():
+    rec = _mutated(("policies", "redeal", "rounds_redealt"), 0)
+    assert check_bench.compare(BASE, rec, "b.json", 25.0) == []
+
+
+def test_key_set_drift_fails_both_ways():
+    import copy
+
+    extra = copy.deepcopy(BASE)
+    extra["engines"]["sparse"]["expand"]["new_metric"] = 1
+    assert any(
+        "not in committed baseline" in f
+        for f in check_bench.compare(BASE, extra, "b.json", 25.0)
+    )
+    missing = copy.deepcopy(BASE)
+    del missing["engines"]["sparse"]["expand"]["rounds"]
+    assert any(
+        "missing from fresh" in f
+        for f in check_bench.compare(BASE, missing, "b.json", 25.0)
+    )
+
+
+def test_classify():
+    assert check_bench.classify("engines/sparse/expand/round_wall_s") == "wall"
+    assert check_bench.classify("policies/redeal/per_replica_wall_s/0") == "wall"
+    # signed difference of measured walls — a ratio test is meaningless
+    assert check_bench.classify("policies/redeal/idle_s_est") == "ignored"
+    assert check_bench.classify("idle_s_recovered_redeal_vs_none") == "ignored"
+    assert check_bench.classify("policies/none/max_abs_err_vs_brandes") == "err"
+    assert (
+        check_bench.classify("engines/sparse/none/link_bytes_per_round")
+        == "structural"
+    )
+    assert check_bench.classify("hybrid/dense_cells/0/1") == "structural"
+    assert check_bench.classify("hybrid/host_bytes/all_dense") == "structural"
+    assert check_bench.classify("policies/redeal/rounds_redealt") == "ignored"
+    assert check_bench.classify("policies/steal/duplicates_dispatched") == "ignored"
+
+
+def test_gate_against_real_committed_baselines():
+    """The committed BENCH_*.json must satisfy the gate against
+    themselves (the local `make bench-check` pass criterion)."""
+    for name in check_bench.BASELINES:
+        baseline = check_bench.committed_json(name, "HEAD")
+        if baseline is None:
+            pytest.skip(f"{name} not committed yet")
+        assert check_bench.compare(baseline, baseline, name, 25.0) == []

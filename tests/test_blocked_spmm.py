@@ -35,9 +35,11 @@ from repro.kernels.blocked_spmm import tiles_to_dense
 S = 8
 
 
-def _layout(graph, R, C, bm=2, bk=2, ring=True):
+def _layout(graph, R, C, bm=2, bk=2):
+    """(partition, full layout, ring layout) — two builds sharing one
+    cached arc→tile counting pass; each form materializes only itself."""
     part = partition_2d(graph, R, C)
-    return part, part.blocked_sparse(bm, bk, ring=ring)
+    return part, part.blocked_sparse(bm, bk), part.blocked_sparse(bm, bk, ring=True)
 
 
 # ----------------------------------------------------------------- layout
@@ -45,7 +47,9 @@ def _layout(graph, R, C, bm=2, bk=2, ring=True):
 def test_layout_roundtrip_dense(grid):
     """dense ⊕ reconstruct == original, for the full and ring layouts."""
     g = gnp_graph(26, 0.15, seed=0)
-    part, lay = _layout(g, *grid)
+    part, lay, ring_lay = _layout(g, *grid)
+    # each form materializes only itself (no discarded double build)
+    assert lay.ring_tiles is None and ring_lay.tiles is None
     dense = part.dense_blocks()
     R, C, chunk = part.R, part.C, part.chunk
     m, kdim = C * chunk, R * chunk
@@ -63,9 +67,9 @@ def test_layout_roundtrip_dense(grid):
             ring = np.zeros((m, kdim), np.float32)
             for r in range(R):
                 slot = tiles_to_dense(
-                    jnp.asarray(lay.ring_tiles[i, j, r]),
-                    jnp.asarray(lay.ring_tile_rows[i, j, r]),
-                    jnp.asarray(lay.ring_tile_cols[i, j, r]),
+                    jnp.asarray(ring_lay.ring_tiles[i, j, r]),
+                    jnp.asarray(ring_lay.ring_tile_rows[i, j, r]),
+                    jnp.asarray(ring_lay.ring_tile_cols[i, j, r]),
                     m,
                     chunk,
                 )
@@ -75,7 +79,7 @@ def test_layout_roundtrip_dense(grid):
 
 def test_layout_invariants_and_validation():
     g = gnp_graph(26, 0.15, seed=0)
-    part, lay = _layout(g, 2, 4)
+    part, lay, ring_lay = _layout(g, 2, 4)
     num_tr = lay.num_tile_rows
     for i in range(2):
         for j in range(4):
@@ -83,7 +87,7 @@ def test_layout_invariants_and_validation():
             assert np.all(np.diff(rows) >= 0)  # row-sorted
             assert set(range(num_tr)) <= set(rows.tolist())  # row-complete
             for r in range(2):
-                ring_rows = lay.ring_tile_rows[i, j, r]
+                ring_rows = ring_lay.ring_tile_rows[i, j, r]
                 assert np.all(np.diff(ring_rows) >= 0)
                 assert set(range(num_tr)) <= set(ring_rows.tolist())
     with pytest.raises(ValueError):
@@ -150,7 +154,7 @@ def test_footprint_prices_ring_layouts():
 @pytest.mark.parametrize("use_pallas", [True, False])
 def test_sparse_kernels_match_dense_partials(rng, use_pallas):
     g = gnp_graph(26, 0.15, seed=0)
-    part, lay = _layout(g, 2, 4)
+    part, lay, _ = _layout(g, 2, 4)
     dense = part.dense_blocks()
     chunk = part.chunk
     kdim, m = 2 * chunk, 4 * chunk
@@ -192,7 +196,7 @@ def test_sparse_kernels_match_dense_partials(rng, use_pallas):
 def test_ring_chunk_composition_matches_full(rng):
     """R chunked-acc steps over the ring slices == one full-block call."""
     g = gnp_graph(26, 0.15, seed=0)
-    part, lay = _layout(g, 2, 4)
+    part, lay, ring_lay = _layout(g, 2, 4)
     chunk = part.chunk
     kdim, m = 2 * chunk, 4 * chunk
     sigma = jnp.asarray(rng.integers(0, 5, (kdim, S)), jnp.float32)
@@ -207,9 +211,9 @@ def test_ring_chunk_composition_matches_full(rng):
     acc = jnp.zeros((m, S), jnp.float32)
     for r in range(2):
         acc = ops.frontier_spmm_sparse(
-            jnp.asarray(lay.ring_tiles[i, j, r]),
-            jnp.asarray(lay.ring_tile_rows[i, j, r]),
-            jnp.asarray(lay.ring_tile_cols[i, j, r]),
+            jnp.asarray(ring_lay.ring_tiles[i, j, r]),
+            jnp.asarray(ring_lay.ring_tile_rows[i, j, r]),
+            jnp.asarray(ring_lay.ring_tile_cols[i, j, r]),
             sigma[r * chunk : (r + 1) * chunk],
             depth[r * chunk : (r + 1) * chunk],
             2,
@@ -227,7 +231,7 @@ def test_empty_tiles_are_skipped(rng):
     from repro.graphs import disjoint_union, gnp_graph as gnp
 
     g = disjoint_union(gnp(16, 0.9, seed=1), gnp(16, 0.9, seed=2))
-    part, lay = _layout(g, 2, 4, bm=2, bk=2)
+    part, lay, _ = _layout(g, 2, 4, bm=2, bk=2)
     dense_tiles = lay.num_tile_rows * lay.num_tile_cols
     assert int(lay.nnz_tiles.sum()) < dense_tiles * 8 // 2  # mostly empty
     chunk = part.chunk

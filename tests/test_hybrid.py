@@ -1,0 +1,296 @@
+"""Hybrid dense/sparse per-cell engine + the shared counting pass.
+
+Four layers:
+
+* counting pass — `blocked_sparse_counts`, the layout builds and the
+  hybrid cell choice all consume ONE cached arc→tile unique pass per
+  tile shape (a call-count spy on the `_arc_tile_unique` seam pins the
+  no-duplicate-pass property), and the no-materialize accounting equals
+  the shipped layouts byte-for-byte in both the full and ring forms;
+* layout — `blocked_sparse(ring=True)` no longer materializes the full
+  tile array, and `blocked_hybrid` writes dense data only into the
+  dense-chosen cells' block slots while the sparse side stores tiles
+  only for the sparse-chosen cells;
+* choice — `cell_kernel_choice` resolves mixed on a skewed mesh and
+  degenerates to all-dense / all-sparse at the threshold extremes;
+* engine — `engine_kind="pallas_hybrid"` matches `brandes_reference`
+  within the repo's 1e-6 tolerance on 2x4 and 4x2 meshes for every
+  overlap policy on a mixed mesh, at both threshold edge cases, on a
+  skewed RMAT graph with at least one dense and one sparse cell, and on
+  sub-cluster meshes with divergent round depths.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.graphs.partition as partition_mod
+from repro.core import brandes_reference
+from repro.core.distributed import (
+    distributed_betweenness_centrality,
+    distributed_graph_arrays,
+    estimate_device_footprint,
+    hybrid_cell_choice,
+    level_time_estimates,
+    resolve_overlap,
+)
+from repro.graphs import disjoint_union, gnp_graph, path_graph, rmat_graph
+from repro.graphs.partition import partition_2d
+from repro.kernels.blocked_spmm import tiles_to_dense
+from repro.roofline.model import cell_kernel_choice
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 host devices"
+)
+
+
+def _skewed_graph():
+    """A dense community ⊕ a sparse path: at tile (2, 2) half the mesh
+    cells cross the bytes-streamed break-even and resolve dense while
+    the path cells stay BCSR — on both the 2x4 and 4x2 grids."""
+    return disjoint_union(gnp_graph(32, 1.0, seed=0), path_graph(32))
+
+
+# ------------------------------------------------------ counting pass
+def test_counting_pass_runs_exactly_once(monkeypatch):
+    """counts → choice → full layout → ring layout → hybrid layout is
+    ONE arc→tile unique pass per cell, not one per consumer."""
+    calls = {"n": 0}
+    orig = partition_mod._arc_tile_unique
+
+    def spy(*args, **kwargs):
+        calls["n"] += 1
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(partition_mod, "_arc_tile_unique", spy)
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    counts = part.blocked_sparse_counts(2, 2)
+    dense_cells, _ = hybrid_cell_choice(part, 2, 2, tile_counts=counts)
+    part.blocked_sparse(2, 2)
+    part.blocked_sparse(2, 2, ring=True)
+    part.blocked_hybrid(2, 2, dense_cells=dense_cells, ring=True)
+    part.blocked_sparse_counts(2, 2, cells=~dense_cells)  # guard's masked view
+    assert calls["n"] == part.R * part.C
+
+
+@pytest.mark.parametrize("ring", [False, True])
+def test_counts_equal_layout_with_and_without_mask(ring):
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    key = "ring" if ring else "full"
+    counts = part.blocked_sparse_counts(2, 2)
+    lay = part.blocked_sparse(2, 2, ring=ring)
+    assert counts[f"bytes_{key}"] == lay.adjacency_bytes()
+    assert counts["nnz_total"] == int(lay.nnz_tiles.sum())
+    mask = np.zeros((2, 4), bool)
+    mask[0, 0] = mask[1, 2] = True
+    counts_m = part.blocked_sparse_counts(2, 2, cells=mask)
+    lay_m = part.blocked_sparse(2, 2, ring=ring, cells=mask)
+    assert counts_m[f"bytes_{key}"] == lay_m.adjacency_bytes()
+    assert counts_m["nnz_total"] == int(lay_m.nnz_tiles.sum())
+    assert int(lay_m.nnz_tiles[~mask].sum()) == 0
+
+
+def test_ring_layout_materializes_only_ring():
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    full = part.blocked_sparse(2, 2)
+    ring = part.blocked_sparse(2, 2, ring=True)
+    assert full.ring_tiles is None and full.tiles is not None
+    assert ring.tiles is None and ring.ring_tiles is not None
+
+
+# ------------------------------------------------------------- choice
+def test_cell_kernel_choice_thresholds():
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    counts = part.blocked_sparse_counts(2, 2)
+    mixed = cell_kernel_choice(
+        counts["stored_full_cell"], R=2, C=4, chunk=part.chunk, bm=2, bk=2
+    )
+    assert 0 < int(mixed.sum()) < mixed.size  # skewed mesh → genuine mix
+    all_dense = cell_kernel_choice(
+        counts["stored_full_cell"], R=2, C=4, chunk=part.chunk, bm=2, bk=2,
+        threshold=0.0,
+    )
+    assert all_dense.all()
+    all_sparse = cell_kernel_choice(
+        counts["stored_full_cell"], R=2, C=4, chunk=part.chunk, bm=2, bk=2,
+        threshold=1e9,
+    )
+    assert not all_sparse.any()
+    with pytest.raises(ValueError):
+        cell_kernel_choice(np.zeros((3, 3)), R=2, C=4, chunk=part.chunk, bm=2, bk=2)
+
+
+def test_hybrid_layout_per_cell_materialization():
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    dense_cells, _ = hybrid_cell_choice(part, 2, 2)
+    hyb = part.blocked_hybrid(2, 2, dense_cells=dense_cells)
+    dense = part.dense_blocks()
+    m, kdim = part.C * part.chunk, part.R * part.chunk
+    for i in range(2):
+        for j in range(4):
+            if dense_cells[i, j]:
+                # dense-chosen: block data present, tile list filler-only
+                np.testing.assert_array_equal(hyb.blocks[i, j], dense[i, j])
+                assert int(hyb.sparse.nnz_tiles[i, j]) == 0
+                assert not hyb.sparse.tiles[i, j].any()
+            else:
+                # sparse-chosen: untouched zero block, tiles reconstruct
+                assert not hyb.blocks[i, j].any()
+                got = tiles_to_dense(
+                    jnp.asarray(hyb.sparse.tiles[i, j]),
+                    jnp.asarray(hyb.sparse.tile_rows[i, j]),
+                    jnp.asarray(hyb.sparse.tile_cols[i, j]),
+                    m,
+                    kdim,
+                )
+                np.testing.assert_array_equal(np.asarray(got), dense[i, j])
+    # materialized host bytes undercut the all-dense layout on this mix
+    assert hyb.host_bytes() < dense.nbytes
+    with pytest.raises(ValueError):
+        part.blocked_hybrid(2, 2, dense_cells=np.zeros((3, 3), bool))
+
+
+def test_graph_arrays_hybrid_arity():
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    full = distributed_graph_arrays(part, "pallas_hybrid", "none", tile=(2, 2))
+    assert len(full) == 5
+    blocks, tiles, _, _, dcell = full
+    assert blocks.ndim == 4 and tiles.ndim == 5
+    assert dcell.shape == (2, 4) and dcell.dtype == jnp.int32
+    ring = distributed_graph_arrays(part, "pallas_hybrid", "expand", tile=(2, 2))
+    assert len(ring) == 5 and ring[1].ndim == 6 and ring[1].shape[2] == part.R
+
+
+# ------------------------------------------- footprint + roofline plumbing
+def test_hybrid_footprint_prices_shipped_union():
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    dense = estimate_device_footprint(part, "pallas", 8)
+    sparse = estimate_device_footprint(part, "pallas_sparse", 8, bm=2, bk=2)
+    hybrid = estimate_device_footprint(part, "pallas_hybrid", 8, bm=2, bk=2)
+    # shard_map uniformity: the mixed layout ships the dense operand on
+    # every device plus the (sparse-cell-masked) tile list
+    assert hybrid["adjacency_bytes"] > dense["adjacency_bytes"]
+    assert hybrid["adjacency_bytes"] < dense["adjacency_bytes"] + sparse["adjacency_bytes"]
+    # the sparse side must be the masked counts, not the full tile list
+    all_sparse = estimate_device_footprint(
+        part, "pallas_hybrid", 8, bm=2, bk=2,
+        dense_cells=np.zeros((2, 4), bool),
+    )
+    assert all_sparse["adjacency_bytes"] >= hybrid["adjacency_bytes"]
+
+
+def test_hybrid_level_estimates_and_auto_overlap():
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    comp, exp, fold = level_time_estimates(part, "pallas_hybrid", 8, bm=2, bk=2)
+    assert comp > 0 and exp > 0 and fold > 0
+    # an all-dense choice prices exactly like the dense engine's compute
+    comp_dense, _, _ = level_time_estimates(
+        part, "pallas_hybrid", 8, bm=2, bk=2,
+        dense_cells=np.ones((2, 4), bool),
+    )
+    comp_pallas, _, _ = level_time_estimates(part, "pallas", 8)
+    assert comp_dense == pytest.approx(comp_pallas)
+    assert resolve_overlap("auto", part, "pallas_hybrid", 8, bm=2, bk=2) in (
+        "none",
+        "expand",
+        "expand+fold",
+    )
+
+
+# ----------------------------------------------------- distributed engine
+@needs_devices
+@pytest.mark.parametrize("grid", [(2, 4), (4, 2)])
+@pytest.mark.parametrize("overlap", ["none", "expand", "expand+fold", "auto"])
+def test_pallas_hybrid_matches_oracle_mixed_mesh(grid, overlap):
+    from repro.launch.mesh import make_mesh
+
+    g = _skewed_graph()
+    part = partition_2d(g, *grid)
+    dense_cells, _ = hybrid_cell_choice(part, 2, 2)
+    assert 0 < int(dense_cells.sum()) < dense_cells.size  # genuinely mixed
+    mesh = make_mesh(grid, ("data", "model"))
+    bc, _ = distributed_betweenness_centrality(
+        g,
+        mesh,
+        batch_size=8,
+        engine_kind="pallas_hybrid",
+        overlap=overlap,
+        tile=(2, 2),
+    )
+    np.testing.assert_allclose(bc, brandes_reference(g), rtol=1e-6, atol=1e-6)
+
+
+@needs_devices
+@pytest.mark.parametrize("threshold", [0.0, 1e9])
+def test_pallas_hybrid_threshold_edge_cases(threshold):
+    """All-dense (threshold 0) and all-sparse (huge threshold) are the
+    degenerate hybrids; both must stay exact under a ring schedule."""
+    from repro.launch.mesh import make_mesh
+
+    g = _skewed_graph()
+    part = partition_2d(g, 2, 4)
+    dense_cells, _ = hybrid_cell_choice(part, 2, 2, threshold=threshold)
+    assert dense_cells.all() if threshold == 0.0 else not dense_cells.any()
+    mesh = make_mesh((2, 4), ("data", "model"))
+    bc, _ = distributed_betweenness_centrality(
+        g,
+        mesh,
+        batch_size=8,
+        engine_kind="pallas_hybrid",
+        overlap="expand",
+        tile=(2, 2),
+        hybrid_threshold=threshold,
+    )
+    np.testing.assert_allclose(bc, brandes_reference(g), rtol=1e-6, atol=1e-6)
+
+
+@needs_devices
+def test_pallas_hybrid_skewed_rmat_mixed_cells():
+    """The engine's motivating case: a skewed RMAT graph whose mesh
+    resolves part dense, part BCSR — parity against the oracle."""
+    from repro.launch.mesh import make_mesh
+
+    g = rmat_graph(8, 8, seed=0)
+    part = partition_2d(g, 2, 4)
+    dense_cells, _ = hybrid_cell_choice(part, 8, 8)
+    assert 0 < int(dense_cells.sum()) < dense_cells.size
+    mesh = make_mesh((2, 4), ("data", "model"))
+    bc, _ = distributed_betweenness_centrality(
+        g,
+        mesh,
+        batch_size=64,
+        engine_kind="pallas_hybrid",
+        overlap="expand",
+        tile=(8, 8),
+    )
+    np.testing.assert_allclose(bc, brandes_reference(g), rtol=1e-6, atol=1e-6)
+
+
+@needs_devices
+def test_pallas_hybrid_subcluster_divergent_depths():
+    """Replicas with divergent data-dependent level counts must not
+    deadlock the mixed ring (lax.cond stays inside block-local compute,
+    so the ppermute rendezvous is identical across the mesh)."""
+    from repro.launch.mesh import make_mesh
+
+    g = disjoint_union(path_graph(40), gnp_graph(16, 0.3, seed=4))
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    bc, _ = distributed_betweenness_centrality(
+        g,
+        mesh,
+        replica_axis="pod",
+        batch_size=8,
+        engine_kind="pallas_hybrid",
+        overlap="expand",
+        tile=(2, 2),
+    )
+    np.testing.assert_allclose(bc, brandes_reference(g), rtol=1e-6, atol=1e-6)

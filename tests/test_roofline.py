@@ -1,5 +1,4 @@
 """HLO cost parser validated against closed-form matmul/scan costs."""
-import numpy as np
 import pytest
 
 import jax

@@ -12,7 +12,7 @@ import jax
 from repro.core import betweenness_centrality, brandes_reference
 from repro.core.scheduler import build_schedule
 from repro.distributed.fault_tolerance import RoundLedger
-from repro.graphs import gnp_graph, road_like_graph
+from repro.graphs import gnp_graph
 
 
 def test_bc_resumes_from_partial_rounds():

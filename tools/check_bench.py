@@ -1,0 +1,220 @@
+"""CI perf-regression gate over the BENCH_*.json baselines.
+
+``make bench-smoke`` regenerates ``BENCH_overlap.json`` /
+``BENCH_sparse.json`` / ``BENCH_subcluster.json`` in the working tree;
+this tool compares those fresh records against the *committed* baselines
+(``git show <ref>:<file>``) and fails on drift, so a kernel or layout
+regression fails the PR instead of silently rewriting a baseline.  A
+deliberate perf/structure change must commit the regenerated baseline in
+the same PR — which is exactly the reviewable diff we want.
+
+Four comparison classes, keyed on the metric path:
+
+* **structural** — link bytes, ring steps, per-class collective counts,
+  nnz/stored tile counts, A-stream bytes, the hybrid per-cell decision
+  and host-bytes record, graph/mesh/tile identity, round counts: must
+  match EXACTLY.  These are functions of the code, not the machine.
+* **wall-clock** — any ``*wall*`` metric: measured seconds, machine-
+  and load-dependent; must agree within a loose factor
+  (``--wall-factor``, default 25x either way) so a CI runner can't fail
+  the gate on speed alone, but a 100x pathology still trips.
+* **parity error** — ``max_abs_err*``: the oracle comparison, compared
+  within the repo's standard 1e-6 tolerance (a jax/XLA version bump may
+  legally change reduction order) — a real parity break still trips.
+* **ignored** — scheduler artifacts that are *timing-dependent by
+  design* (rounds stolen/re-dealt, duplicate dispatch counts,
+  per-replica level attribution, idle-seconds estimates — signed
+  differences of measured walls, for which a ratio test is
+  meaningless): key presence is still checked, the value is not.
+
+Run as ``make bench-check`` (regenerates, then compares) or standalone
+``python tools/check_bench.py`` after a ``make bench-smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+BASELINES = ("BENCH_overlap.json", "BENCH_sparse.json", "BENCH_subcluster.json")
+
+#: path components marking a measured-seconds metric (loose comparison);
+#: idle_s* metrics are NOT here — they are signed differences/estimates
+#: of walls that legitimately cross zero, so they fall through to
+#: "ignored" (key presence still checked)
+WALL_MARKERS = ("wall",)
+
+#: path components marking a structural metric (exact comparison); every
+#: other numeric leaf is a timing-dependent scheduler artifact (ignored)
+STRUCTURAL_MARKERS = (
+    "link_bytes",
+    "ring_steps",
+    "collectives_per_round",
+    "collectives_per_round_by_class",
+    "nnz_tiles",
+    "a_stream_bytes",
+    "adjacency_stored_bytes",
+    "dense_tiles",
+    "stored_tiles",
+    "dense_cells",
+    "cells_dense",
+    "cells_sparse",
+    "host_bytes",
+    "threshold",
+    "graph",
+    "mesh",
+    "tile",
+    "num_levels",
+    "overlap",
+    "rounds",
+)
+
+#: parity-error metrics: near-exact floats (the oracle comparison is
+#: deterministic per jax version, but a runner's jax/XLA bump may change
+#: reduction order) — compared within the repo's standard 1e-6 tolerance
+#: instead of bitwise, so the gate still catches a real parity break
+ERR_MARKERS = ("max_abs_err",)
+ERR_ATOL = 1e-6
+
+#: leaves that merely *contain* "rounds" but count timing-dependent
+#: scheduler decisions — never exact-matched
+TIMING_LEAVES = ("rounds_stolen", "rounds_redealt")
+
+
+def flatten(node, prefix="") -> dict:
+    """dict/list tree -> {path: leaf} with '/'-joined path components."""
+    out: dict = {}
+    if isinstance(node, dict):
+        items = ((str(k), v) for k, v in node.items())
+    elif isinstance(node, list):
+        items = ((str(i), v) for i, v in enumerate(node))
+    else:
+        return {prefix: node}
+    for key, val in items:
+        out.update(flatten(val, f"{prefix}/{key}" if prefix else key))
+    return out
+
+
+def classify(path: str) -> str:
+    """'wall' | 'err' | 'structural' | 'ignored' for one metric path."""
+    parts = path.split("/")
+    if any(any(m in p for m in WALL_MARKERS) for p in parts):
+        return "wall"
+    if any(p.startswith(m) for m in ERR_MARKERS for p in parts):
+        return "err"
+    if any(p in TIMING_LEAVES for p in parts):
+        return "ignored"
+    if any(p.startswith(m) or p == m for m in STRUCTURAL_MARKERS for p in parts):
+        return "structural"
+    return "ignored"
+
+
+def compare(baseline: dict, fresh: dict, name: str, wall_factor: float) -> list[str]:
+    """Drift list (empty = pass) between one committed/fresh record pair."""
+    base_flat, fresh_flat = flatten(baseline), flatten(fresh)
+    failures: list[str] = []
+    for path in sorted(set(base_flat) - set(fresh_flat)):
+        failures.append(f"{name}: {path} missing from fresh record")
+    for path in sorted(set(fresh_flat) - set(base_flat)):
+        failures.append(
+            f"{name}: {path} not in committed baseline (regenerate + commit it)"
+        )
+    for path in sorted(set(base_flat) & set(fresh_flat)):
+        want, got = base_flat[path], fresh_flat[path]
+        cls = classify(path)
+        if cls == "ignored":
+            continue
+        if cls == "wall":
+            if want == got:
+                continue
+            if want is None or got is None:  # null-ness is structure
+                failures.append(f"{name}: {path} null-ness {want!r} -> {got!r}")
+                continue
+            lo, hi = sorted((float(want), float(got)))
+            if lo <= 0 or hi / max(lo, 1e-12) > wall_factor:
+                failures.append(
+                    f"{name}: {path} wall {want!r} -> {got!r} "
+                    f"(outside {wall_factor}x)"
+                )
+            continue
+        if cls == "err":
+            if abs(float(want) - float(got)) > ERR_ATOL:
+                failures.append(
+                    f"{name}: {path} parity error {want!r} -> {got!r} "
+                    f"(beyond {ERR_ATOL})"
+                )
+            continue
+        # structural: exact (floats included — these are byte/count models)
+        if want != got:
+            failures.append(f"{name}: {path} drifted {want!r} -> {got!r}")
+    return failures
+
+
+def committed_json(path: str, ref: str) -> dict | None:
+    try:
+        text = subprocess.run(
+            ["git", "show", f"{ref}:{path}"],
+            cwd=ROOT,
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return json.loads(text)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=None)
+    ap.add_argument(
+        "--baseline-ref",
+        default="HEAD",
+        help="git ref holding the committed baselines (default HEAD)",
+    )
+    ap.add_argument(
+        "--wall-factor",
+        type=float,
+        default=25.0,
+        help="allowed wall-clock ratio either way (machine-speed slack)",
+    )
+    args = ap.parse_args(argv)
+    files = args.files or list(BASELINES)
+
+    failures: list[str] = []
+    checked = 0
+    for name in files:
+        fresh_path = ROOT / name
+        if not fresh_path.exists():
+            failures.append(f"{name}: no fresh record (run `make bench-smoke`)")
+            continue
+        baseline = committed_json(name, args.baseline_ref)
+        if baseline is None:
+            failures.append(
+                f"{name}: not committed at {args.baseline_ref} "
+                "(commit the generated baseline)"
+            )
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        failures.extend(compare(baseline, fresh, name, args.wall_factor))
+        checked += 1
+
+    if failures:
+        print("bench baseline drift detected:")
+        for f in failures:
+            print(f"  - {f}")
+        print(
+            "\nIf the change is intentional, regenerate with `make bench-smoke` "
+            "and commit the updated BENCH_*.json in this PR."
+        )
+        return 1
+    print(f"bench baselines in sync: {checked} records checked against HEAD")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
