@@ -36,11 +36,19 @@ bench-smoke:
 bench-check: bench-smoke
 	python tools/check_bench.py
 
+# Measured-cost autotune smoke: cold-measure -> cache-hit round trip on
+# 8 fake host devices (tools/autotune_smoke.py) — proves the
+# measure-once contract (second run hits, never re-measures) and BC
+# parity under autotune.  Writes AUTOTUNE_cache.json (generated
+# artifact; CI uploads it next to the BENCH baselines, never commit it).
+autotune-smoke:
+	PYTHONPATH=src:. python tools/autotune_smoke.py
+
 # Documentation health: the quickstart must execute, and the engine /
-# overlap / heuristics / straggler choice lists in README.md +
-# ARCHITECTURE.md must match the source-of-truth constants.
+# overlap / heuristics / straggler / autotune choice lists in README.md
+# + ARCHITECTURE.md must match the source-of-truth constants.
 docs-check:
 	PYTHONPATH=src python examples/quickstart.py
 	python tools/check_docs.py
 
-.PHONY: verify test lint bench bench-smoke bench-check docs-check
+.PHONY: verify test lint bench bench-smoke bench-check autotune-smoke docs-check

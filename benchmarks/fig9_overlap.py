@@ -44,6 +44,21 @@ NUM_LEVELS = 12
 MESH_SHAPE = (2, 4)
 
 
+def _interp_wall_opted_in() -> bool:
+    """Explicit opt-in to timing the Pallas engines on CPU.
+
+    The Pallas engines run in *interpret* mode on CPU hosts, so their
+    wall clock measures the interpreter, not the kernel — recording it
+    silently would poison the baseline.  ``round_wall_s`` stays null for
+    those engines unless the caller opts in via ``--interp-wall`` or
+    ``FIG9_INTERP_WALL=1`` (the gate, tools/check_bench.py, treats a
+    null↔value flip on a wall metric as a timing artifact either way).
+    """
+    import sys
+
+    return "--interp-wall" in sys.argv or os.environ.get("FIG9_INTERP_WALL") == "1"
+
+
 def _collective_counts(coll_records: list[dict]) -> dict[str, int]:
     """Per-class collective executions per round (trip-count-multiplied
     instruction counts from the HLO parser — roofline/hlo.py)."""
@@ -91,11 +106,12 @@ def _overlap_bench(g, schedule, part, mesh) -> dict:
             counts = _collective_counts(colls)
 
             # per-round wall time through the shared driver (profile
-            # mode).  Sparse only: the Pallas engine runs in interpret
-            # mode on CPU, where wall time measures the interpreter.
+            # mode).  Sparse always; the Pallas engines only behind the
+            # --interp-wall / FIG9_INTERP_WALL=1 opt-in — on CPU their
+            # wall time measures the interpreter.
             per_round = None
             rounds = len(schedule.rounds)
-            if engine_kind == "sparse":
+            if engine_kind == "sparse" or _interp_wall_opted_in():
 
                 def block_fn(sources, derived, _fn=fn, _ga=graph_args):
                     return _fn(*_ga, omega, sources, derived)

@@ -22,6 +22,14 @@ oracle, and writes per-policy wall, per-replica wall/levels, rounds
 stolen/re-dealt and the recovered idle seconds to
 ``BENCH_subcluster.json`` — the machine-readable baseline future PRs
 regress against (CI uploads it next to ``BENCH_overlap.json``).
+
+Part (c), the deal comparison: at a batch width spanning two components
+the legacy vertex-id deal mixes a deep path root with shallow clique
+roots in the same round — the shallow roots burn the depth difference
+as masked no-op levels — while the eccentricity-packed deal
+(``build_schedule(root_order="eccentricity")``) pairs like with like.
+The exact total traversal levels of both deals are recorded under
+``"deal"`` (structural: host BFS depths, deterministic schedules).
 """
 from __future__ import annotations
 
@@ -164,12 +172,66 @@ def _straggler_bench() -> dict:
     return record
 
 
+#: deal comparison batch width: TWO components per round, so the
+#: vertex-id deal mixes one deep path with one shallow clique per round
+#: while the eccentricity deal pairs like with like
+DEAL_BATCH = 2 * BLOCK
+
+
+def _deal_bench() -> dict:
+    """(c) interleaved vs eccentricity-packed round deal — exact levels.
+
+    A round's traversal runs to its *deepest* root's level, so the total
+    over rounds of ``max(root depth) + 1`` is the level count the
+    traversal loop actually executes.  Computed from exact host BFS
+    depths over deterministic schedules — a structural metric
+    (tools/check_bench.py compares it exactly), no timing involved.
+    """
+    from repro.core.scheduler import bfs_depths
+
+    g = skewed_depth_graph(PAIRS, BLOCK)
+    ecc_exact = np.array(
+        [int(bfs_depths(g, v).max()) for v in range(g.n)], np.int64
+    )
+
+    def total_levels(schedule) -> int:
+        return sum(
+            int(max(ecc_exact[v] for v in r.sources if v >= 0)) + 1
+            for r in schedule.rounds
+        )
+
+    sched_id, _, _, _ = build_schedule(g, batch_size=DEAL_BATCH, root_order="id")
+    sched_ecc, _, _, _ = build_schedule(
+        g, batch_size=DEAL_BATCH, root_order="eccentricity"
+    )
+    interleaved = total_levels(sched_id)
+    packed = total_levels(sched_ecc)
+    assert packed < interleaved, (
+        f"eccentricity deal must cut total levels: {packed} vs {interleaved}"
+    )
+    record = {
+        "batch_size": DEAL_BATCH,
+        "rounds": len(sched_id.rounds),
+        "interleaved_total_levels": interleaved,
+        "eccentricity_total_levels": packed,
+        "levels_saved": interleaved - packed,
+    }
+    emit(
+        "table3/deal_eccentricity",
+        0.0,
+        f"interleaved_levels={interleaved};packed_levels={packed};"
+        f"saved={interleaved - packed}",
+    )
+    return record
+
+
 def run() -> None:
     if not ensure_devices(8):
         emit("table3/skipped", 0.0, "needs 8 host devices")
         return
     _replication_sweep()
     record = _straggler_bench()
+    record["deal"] = _deal_bench()
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
     emit("table3/bench_json", 0.0, f"wrote={BENCH_JSON}")

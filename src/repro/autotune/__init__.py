@@ -1,0 +1,45 @@
+"""Measured-cost autotuning: persistent cost cache + micro-bench planner.
+
+Replaces roofline guesswork at the four choice seams (hybrid per-cell
+kernel choice, ``overlap="auto"``, straggler EWMA prior, BCSR tile
+pick) with cached measurements — see :mod:`repro.autotune.cache` for
+the key schema and :mod:`repro.autotune.measure` for the measure-once
+lifecycle.
+"""
+from repro.autotune.cache import (
+    AUTOTUNE_MODES,
+    CostCache,
+    CostRecord,
+    as_cache,
+    config_key,
+    graph_key,
+    graph_key_for,
+    normalize_autotune,
+)
+from repro.autotune.measure import (
+    MEASURE_LEVELS,
+    Candidate,
+    TunePlan,
+    default_bench,
+    measure_walls,
+    plan_autotune,
+    sample_batch,
+)
+
+__all__ = [
+    "AUTOTUNE_MODES",
+    "Candidate",
+    "CostCache",
+    "CostRecord",
+    "MEASURE_LEVELS",
+    "TunePlan",
+    "as_cache",
+    "config_key",
+    "default_bench",
+    "graph_key",
+    "graph_key_for",
+    "measure_walls",
+    "normalize_autotune",
+    "plan_autotune",
+    "sample_batch",
+]

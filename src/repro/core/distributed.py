@@ -112,6 +112,7 @@ def hybrid_cell_choice(
     *,
     threshold: float = 1.0,
     tile_counts: dict | None = None,
+    measured: tuple[float, float] | None = None,
 ) -> tuple[np.ndarray, dict]:
     """Resolve the hybrid engine's per-cell dense-vs-BCSR choice.
 
@@ -121,7 +122,10 @@ def hybrid_cell_choice(
     computed this resolve; the underlying arc→tile pass is cached either
     way).  The choice is logged — like ``overlap="auto"`` — so runs are
     auditable, and overridable via ``threshold``
-    (``--hybrid-threshold``).  Returns ``(dense_cells, tile_counts)``.
+    (``--hybrid-threshold``).  ``measured`` is the autotuner's
+    (dense_level_s, sparse_level_s) calibration pair: when present the
+    break-even compares measured seconds instead of the roofline's bytes
+    model.  Returns ``(dense_cells, tile_counts)``.
     """
     counts = tile_counts or partition.blocked_sparse_counts(bm, bk)
     dense_cells = cell_kernel_choice(
@@ -132,13 +136,15 @@ def hybrid_cell_choice(
         bm=counts["bm"],
         bk=counts["bk"],
         threshold=threshold,
+        measured=measured,
     )
     logger.info(
-        "hybrid cell choice (threshold %.3g, tile %dx%d): %d dense / %d sparse "
-        "cells %s",
+        "hybrid cell choice (threshold %.3g, tile %dx%d, %s): %d dense / "
+        "%d sparse cells %s",
         threshold,
         counts["bm"],
         counts["bk"],
+        "measured costs" if measured is not None else "roofline bytes",
         int(dense_cells.sum()),
         int(dense_cells.size - dense_cells.sum()),
         dense_cells.astype(int).tolist(),
@@ -431,16 +437,22 @@ def prior_round_seconds(
     tile_counts: dict | None = None,
     dense_cells: np.ndarray | None = None,
     hw=V5E,
+    measured_level_s: float | None = None,
 ) -> float:
-    """Roofline per-round wall estimate — the straggler EWMA's prior.
+    """Per-round wall estimate — the straggler EWMA's prior.
 
-    One level priced under the resolved collective schedule
+    With ``measured_level_s`` (the autotuner's measured per-level wall of
+    the resolved config) the prior is simply ``measured × PRIOR_LEVELS``
+    — a real time scale instead of a modelled one.  Otherwise one level
+    is priced under the resolved collective schedule
     (:func:`repro.roofline.model.overlap_step_time` via
     :func:`repro.roofline.model.auto_overlap_policy`'s estimate table) ×
     :data:`PRIOR_LEVELS` nominal levels.  Gives the scheduler a
     before-any-observation time scale (paper-motivated: round wall is
     data-dependent and unknown until traversal).
     """
+    if measured_level_s is not None:
+        return float(measured_level_s) * PRIOR_LEVELS
     compute_s, expand_s, fold_s = level_time_estimates(
         partition, engine_kind, batch_size,
         bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells, hw=hw,
@@ -462,18 +474,22 @@ def resolve_overlap(
     tile_counts: dict | None = None,
     dense_cells: np.ndarray | None = None,
     hw=V5E,
+    measured: dict | None = None,
 ) -> str:
-    """Resolve ``overlap="auto"`` from the roofline's per-level estimate.
+    """Resolve ``overlap="auto"`` from measured or roofline level costs.
 
     Prices one level's block compute (engine-dependent FLOPs/A-stream)
     and expand/fold collective bytes with the α-β link model, then picks
     the schedule :func:`repro.roofline.model.auto_overlap_policy`
-    estimates fastest.  The choice is logged (logging INFO + returned);
-    passing an explicit policy bypasses this entirely.  ``bm``/``bk``:
-    the blocked-sparse tile shape the engine will actually be built with
-    (defaults to the partition default), so the estimate prices the real
-    layout; ``dense_cells``: the hybrid engine's resolved per-cell
-    choice, for the same reason.
+    estimates fastest.  ``measured`` (policy -> measured per-level
+    seconds from the autotune cache) takes precedence: when any policy
+    has a measurement the pick compares measured policies only.  The
+    choice is logged (logging INFO + returned); passing an explicit
+    policy bypasses this entirely.  ``bm``/``bk``: the blocked-sparse
+    tile shape the engine will actually be built with (defaults to the
+    partition default), so the estimate prices the real layout;
+    ``dense_cells``: the hybrid engine's resolved per-cell choice, for
+    the same reason.
     """
     if overlap != "auto":
         return normalize_overlap(overlap)
@@ -482,12 +498,14 @@ def resolve_overlap(
         bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells, hw=hw,
     )
     policy, estimates = auto_overlap_policy(
-        compute_s, expand_s, fold_s, partition.R, partition.C, hw=hw
+        compute_s, expand_s, fold_s, partition.R, partition.C, hw=hw,
+        measured=measured,
     )
     logger.info(
-        "overlap='auto' -> %r for engine %s (per-level estimates: %s)",
+        "overlap='auto' -> %r for engine %s (%s per-level estimates: %s)",
         policy,
         engine_kind,
+        "measured" if measured else "roofline",
         {k: f"{v*1e6:.2f}us" for k, v in estimates.items()},
     )
     return policy
@@ -826,6 +844,8 @@ def distributed_betweenness_centrality(
     checkpoint=None,
     straggler: str = "none",
     straggler_factor: float = 2.0,
+    autotune: str = "off",
+    autotune_cache=None,
 ) -> tuple[np.ndarray, Schedule]:
     """Run the full distributed BC computation on ``mesh``.
 
@@ -859,12 +879,51 @@ def distributed_betweenness_centrality(
     adjacency + state footprint is checked *before* compilation and an
     over-budget engine errors with a suggestion instead of OOMing
     mid-round.
+    ``autotune`` (:data:`repro.autotune.AUTOTUNE_MODES`) swaps the
+    roofline guesses behind the tile pick, the hybrid cell choice,
+    ``overlap="auto"`` and the straggler prior for cached measurements
+    (``"cache"``: consult only; ``"measure"``: micro-bench on a miss and
+    record — measure-once), and switches the scheduler to
+    eccentricity-packed rounds (``root_order="eccentricity"``) whose
+    per-round depth prior seeds the replica deal.  ``autotune_cache`` is
+    the persistent cache: a path, a :class:`repro.autotune.CostCache`,
+    or None for in-memory.
     """
+    from repro.autotune import as_cache, normalize_autotune, plan_autotune, sample_batch
+
+    autotune = normalize_autotune(autotune)
     schedule, prep, residual, omega_i = build_schedule(
-        graph, batch_size=batch_size, heuristics=heuristics
+        graph, batch_size=batch_size, heuristics=heuristics,
+        root_order="eccentricity" if autotune != "off" else "id",
     )
     R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
     part = partition_2d(residual, R, C)
+
+    plan = None
+    if autotune != "off" and schedule.rounds:
+        sources0, derived0 = sample_batch(schedule, fr)
+        plan = plan_autotune(
+            part,
+            mesh,
+            engine_kind=engine_kind,
+            overlap=overlap,
+            batch_size=batch_size,
+            tile=tile,
+            mode=autotune,
+            cache=as_cache(autotune_cache),
+            graph=residual,
+            fr=fr,
+            row_axis=row_axis,
+            col_axis=col_axis,
+            replica_axis=replica_axis,
+            sources=sources0,
+            derived=derived0,
+            hybrid_threshold=hybrid_threshold,
+        )
+        if tile is None and plan.tile is not None:
+            tile = plan.tile
+        logger.info("autotune[%s]: %s", autotune, plan.report())
+
     bm, bk = tile if tile is not None else (None, None)
     # ONE host arc→tile counting pass (cached on the partition) serves
     # the hybrid cell choice, the auto-overlap estimate, the memory
@@ -877,11 +936,13 @@ def distributed_betweenness_centrality(
     dense_cells = None
     if engine_kind == "pallas_hybrid":
         dense_cells, _ = hybrid_cell_choice(
-            part, bm, bk, threshold=hybrid_threshold, tile_counts=tile_counts
+            part, bm, bk, threshold=hybrid_threshold, tile_counts=tile_counts,
+            measured=plan.cell_costs if plan is not None else None,
         )
     overlap = resolve_overlap(
         overlap, part, engine_kind, batch_size,
         bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells,
+        measured=plan.overlap_level_s if plan is not None else None,
     )
     check_device_memory(
         part, engine_kind, batch_size, hbm_limit_bytes,
@@ -926,6 +987,9 @@ def distributed_betweenness_centrality(
         prior_round_s = prior_round_seconds(
             part, engine_kind, batch_size, overlap,
             bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells,
+            measured_level_s=(
+                plan.level_s_for(overlap) if plan is not None else None
+            ),
         )
 
     driver = BCDriver(
@@ -939,6 +1003,7 @@ def distributed_betweenness_centrality(
         straggler=straggler,
         straggler_factor=straggler_factor,
         prior_round_s=prior_round_s,
+        round_costs=schedule.round_depths,
     )
     result = driver.run()
     return result.bc, schedule

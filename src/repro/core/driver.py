@@ -239,7 +239,12 @@ class BCDriver:
     ``straggler_factor`` is the EWMA ratio that flags a replica as a
     straggler; ``prior_round_s`` seeds every replica's EWMA before any
     round completes (callers pass the roofline ``overlap_step_time``
-    estimate; symmetric, so no re-deal can fire on the prior alone).
+    estimate — or, under ``autotune``, the measured per-level cost via
+    :func:`repro.core.distributed.prior_round_seconds` — symmetric, so
+    no re-deal can fire on the prior alone).  ``round_costs`` hands the
+    static deal a per-round cost prior (``Schedule.round_depths``): the
+    initial queues then pack similar-cost rounds per dispatch block
+    instead of interleaving by id.
     """
 
     def __init__(
@@ -258,6 +263,7 @@ class BCDriver:
         straggler: str = "none",
         straggler_factor: float = 2.0,
         prior_round_s: float | None = None,
+        round_costs=None,
     ):
         self.round_fn = round_fn
         self.profile = profile
@@ -269,6 +275,10 @@ class BCDriver:
         self.straggler = normalize_straggler(straggler)
         self.straggler_factor = float(straggler_factor)
         self.prior_round_s = prior_round_s
+        #: per-round expected cost (Schedule.round_depths when the
+        #: scheduler packed by eccentricity) — seeds the straggler deal
+        #: (split_rounds round_costs) so lanes start cost-balanced
+        self.round_costs = round_costs
         self._bc0 = np.zeros(n, np.float64)
         self._ns0: dict[int, float] = {}
         self._fingerprint = None
@@ -485,7 +495,9 @@ class BCDriver:
         s = self.schedule.batch_size
         k = self.schedule.derived_per_round
         rounds = self.schedule.rounds
-        queues = split_rounds(len(rounds), fr, self._committed_union())
+        queues = split_rounds(
+            len(rounds), fr, self._committed_union(), round_costs=self.round_costs
+        )
 
         prior = self.prior_round_s
         ewma: list[float | None] = [None] * fr

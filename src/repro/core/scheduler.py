@@ -26,6 +26,7 @@ unit-testable without a mesh.
 from __future__ import annotations
 
 import dataclasses
+import logging
 
 import numpy as np
 
@@ -33,13 +34,20 @@ from repro.core.heuristics.one_degree import OneDegreeReduction, one_degree_redu
 from repro.core.heuristics.two_degree import claim_two_degree
 from repro.graphs.graph import Graph
 
+logger = logging.getLogger(__name__)
+
 __all__ = [
     "Round",
     "Schedule",
     "build_schedule",
     "HEURISTICS_MODES",
+    "ROOT_ORDERS",
+    "MXU_LANES",
+    "bfs_depths",
+    "estimate_eccentricities",
     "split_rounds",
     "redeal_rounds",
+    "validate_batch_size",
 ]
 
 #: The heuristics selector (paper Fig. 12 naming), the single source of
@@ -49,6 +57,109 @@ __all__ = [
 #: 1-degree pass to a fixed point (beyond-paper pendant-tree contraction,
 #: heuristics/one_degree.py).
 HEURISTICS_MODES = ("h0", "h1", "h2", "h3", "h1t", "h3t")
+
+#: explicit-source round-packing orders: "id" fills rounds in vertex-id
+#: order (legacy); "eccentricity" sorts by sampled eccentricity
+#: descending so similar-depth roots share a round — a round's traversal
+#: runs to its *deepest* root's level, so a shallow root batched with a
+#: deep one burns the depth difference as masked no-op levels, and under
+#: replica lockstep (ring overlap) a whole replica can idle the same way
+ROOT_ORDERS = ("id", "eccentricity")
+
+#: MXU lane width: the [n, s] frontier matmul pads the source dimension
+#: to this; the batch_size validator hints when the padding wastes more
+#: than half a tile
+MXU_LANES = 128
+
+
+def validate_batch_size(batch_size: int, *, lanes: int = MXU_LANES) -> int:
+    """Validate the multi-source batch width (both entrypoints funnel
+    through :func:`build_schedule`, so this covers them all).
+
+    Rejects ``< 1`` outright; logs a hint when the padded column width
+    wastes more than half an MXU tile (e.g. ``batch_size=48`` pads to
+    128 and masks 80 dead lanes every matmul).
+    """
+    batch_size = int(batch_size)
+    if batch_size < 1:
+        raise ValueError(
+            f"batch_size must be >= 1, got {batch_size}: every round needs "
+            "at least one explicit source column"
+        )
+    pad = (-batch_size) % lanes
+    if pad > lanes // 2:
+        better = batch_size - (batch_size % lanes) or lanes
+        logger.warning(
+            "batch_size=%d pads the source dimension to %d (%d wasted MXU "
+            "lanes, more than half a %d-lane tile); %d or a multiple of %d "
+            "wastes none",
+            batch_size, batch_size + pad, pad, lanes, better, lanes,
+        )
+    return batch_size
+
+
+def bfs_depths(graph: Graph, root: int) -> np.ndarray:
+    """Exact BFS depth of every vertex from ``root`` (-1 = unreached).
+
+    Vectorized over the symmetric arc list (no per-vertex Python loop):
+    each step scatters the frontier through ``src -> dst`` masks.
+    """
+    depth = np.full(graph.n, -1, np.int64)
+    depth[root] = 0
+    frontier = np.zeros(graph.n, bool)
+    frontier[root] = True
+    d = 0
+    while frontier.any():
+        nxt = np.zeros(graph.n, bool)
+        nxt[graph.dst[frontier[graph.src]]] = True
+        nxt &= depth < 0
+        if not nxt.any():
+            break
+        d += 1
+        depth[nxt] = d
+        frontier = nxt
+    return depth
+
+
+def estimate_eccentricities(
+    graph: Graph, num_samples: int = 8, seed: int = 0
+) -> np.ndarray:
+    """Sampled lower-bound eccentricity per vertex (farthest-first BFS).
+
+    Landmarks are chosen farthest-first: the first at random, each next
+    at the vertex maximizing its distance to all previous landmarks —
+    with unreached vertices (other components) counting as infinitely
+    far, so every connected component receives at least one landmark
+    *before* the ``num_samples`` refinement budget applies (coverage is
+    what makes the estimate usable as a round-packing key on disjoint
+    unions; a component with no landmark would estimate 0 and sort with
+    the shallow cliques).  ``ecc[v]`` is the max over landmarks of
+    ``dist(v, landmark)`` — a lower bound on the true eccentricity,
+    exact at ≥1 landmark per component endpoints and, for packing, only
+    the *relative* order matters.
+    """
+    if graph.n == 0:
+        return np.zeros(0, np.int64)
+    rng = np.random.default_rng(seed)
+    ecc = np.zeros(graph.n, np.int64)
+    far = np.iinfo(np.int64).max
+    mind = np.full(graph.n, far, np.int64)  # min distance to any landmark
+    root = int(rng.integers(graph.n))
+    taken = 0
+    while True:
+        depth = bfs_depths(graph, root)
+        reached = depth >= 0
+        np.maximum(ecc, depth, where=reached, out=ecc)
+        # the landmark's own eccentricity is exact from its BFS (it would
+        # otherwise self-measure 0 and sort below every shallow root)
+        ecc[root] = max(ecc[root], int(depth[reached].max()))
+        np.minimum(mind, depth, where=reached, out=mind)
+        taken += 1
+        root = int(np.argmax(mind))
+        if mind[root] == far:
+            continue  # an uncovered component: keep going past the budget
+        if taken >= num_samples or mind[root] == 0:
+            return ecc
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +178,11 @@ class Schedule:
     num_leaf_skipped: int  # 1-degree vertices never traversed
     num_isolated_omega: int  # residual-isolated vertices resolved analytically
     analytic_corrections: np.ndarray  # f64 [k, 2] rows (v, n_comp) resolved w/o traversal
+    #: per-round expected traversal depth (max sampled eccentricity over
+    #: the round's roots) — the cost prior for the replica deal
+    #: (:func:`split_rounds` ``round_costs``); None unless the schedule
+    #: was built with ``root_order="eccentricity"``
+    round_depths: np.ndarray | None = None
 
 
 def _finish_round(src_list, derived_list, batch_size, derived_per_round) -> Round:
@@ -83,6 +199,9 @@ def build_schedule(
     batch_size: int = 32,
     heuristics: str = "h0",
     derived_per_round: int | None = None,
+    root_order: str = "id",
+    ecc_samples: int = 8,
+    ecc_seed: int = 0,
 ) -> tuple[Schedule, OneDegreeReduction | None, Graph, np.ndarray]:
     """Plan the full BC computation.
 
@@ -96,6 +215,13 @@ def build_schedule(
                   1-degree pass).
       derived_per_round: cap on derived columns per round (default:
                   batch_size // 2 — a triple contributes ≥2 sources).
+      root_order: one of :data:`ROOT_ORDERS` — "id" (legacy vertex-id
+                  fill) or "eccentricity" (sampled-eccentricity
+                  descending, packing similar-depth roots into the same
+                  round; also populates ``Schedule.round_depths`` so the
+                  replica deal can balance expected cost).
+      ecc_samples / ecc_seed: :func:`estimate_eccentricities` budget and
+                  landmark seed (only read under "eccentricity").
 
     Returns (schedule, one_degree_result_or_None, residual_graph, omega).
     """
@@ -104,6 +230,11 @@ def build_schedule(
             f"unknown heuristics mode {heuristics!r}; expected one of "
             f"{HEURISTICS_MODES}"
         )
+    if root_order not in ROOT_ORDERS:
+        raise ValueError(
+            f"unknown root_order {root_order!r}; expected one of {ROOT_ORDERS}"
+        )
+    batch_size = validate_batch_size(batch_size)
     use_h1 = heuristics in ("h1", "h3", "h1t", "h3t")
     use_h2 = heuristics in ("h2", "h3", "h3t")
     exhaustive = heuristics.endswith("t")  # beyond-paper tree contraction
@@ -166,12 +297,21 @@ def build_schedule(
             consumed.add(v)
         cur_der.append((c, cur_pos[a], cur_pos[b]))
 
-    # 2) fill with the remaining explicit sources
+    # 2) fill with the remaining explicit sources — in vertex-id order,
+    # or deepest-first under "eccentricity" so each round packs
+    # similar-depth roots (the round runs to its deepest root's level)
+    ecc = (
+        estimate_eccentricities(residual, num_samples=ecc_samples, seed=ecc_seed)
+        if root_order == "eccentricity"
+        else None
+    )
     explicit_rest = [
         int(v)
         for v in np.nonzero(eligible)[0]
         if v not in consumed and v not in derived_set
     ] + demoted
+    if ecc is not None:
+        explicit_rest.sort(key=lambda v: (-int(ecc[v]), v))
     for v in explicit_rest:
         if len(cur_src) >= batch_size:
             flush()
@@ -182,6 +322,22 @@ def build_schedule(
 
     num_derived = sum(int((r.derived[:, 0] >= 0).sum()) for r in rounds)
     num_explicit = sum(int((r.sources >= 0).sum()) for r in rounds)
+    round_depths = None
+    if ecc is not None:
+        round_depths = np.array(
+            [
+                max(
+                    (
+                        int(ecc[v])
+                        for v in np.concatenate((r.sources, r.derived[:, 0]))
+                        if v >= 0
+                    ),
+                    default=0,
+                )
+                for r in rounds
+            ],
+            np.int64,
+        )
     schedule = Schedule(
         rounds=rounds,
         batch_size=batch_size,
@@ -191,12 +347,13 @@ def build_schedule(
         num_leaf_skipped=num_leaf_skipped,
         num_isolated_omega=int(iso_omega.size),
         analytic_corrections=analytic,
+        round_depths=round_depths,
     )
     return schedule, prep, residual, omega
 
 
 def split_rounds(
-    num_rounds: int, fr: int, committed=()
+    num_rounds: int, fr: int, committed=(), round_costs=None
 ) -> list[list[int]]:
     """Static per-replica deal of a schedule's round ids.
 
@@ -207,14 +364,38 @@ def split_rounds(
     policies start from the *same* static assignment and any wall-time
     difference is attributable to the re-deal alone.  Rounds in
     ``committed`` (e.g. from a resumed checkpoint) are excluded.
+
+    ``round_costs`` (one expected cost per round, e.g.
+    ``Schedule.round_depths`` from an eccentricity-ordered schedule)
+    switches to the *cost-packed* deal: the pool is sorted costliest
+    first and consecutive ``fr``-tuples dealt one per lane — the same
+    shape as the straggler's :func:`redeal_rounds`, but seeded from the
+    eccentricity prior instead of waiting for the EWMA to learn it.  A
+    dispatch block then co-schedules similar-cost rounds, so under
+    replica lockstep no lane burns masked no-op levels waiting on a much
+    deeper partner, and total expected cost balances across ledgers.
     """
     if fr < 1:
         raise ValueError(f"need at least one replica, got fr={fr}")
     done = set(committed)
-    return [
-        [rid for rid in range(r, num_rounds, fr) if rid not in done]
-        for r in range(fr)
-    ]
+    if round_costs is None:
+        return [
+            [rid for rid in range(r, num_rounds, fr) if rid not in done]
+            for r in range(fr)
+        ]
+    costs = [float(c) for c in round_costs]
+    if len(costs) != num_rounds:
+        raise ValueError(
+            f"{num_rounds} rounds but {len(costs)} round costs"
+        )
+    pool = sorted(
+        (rid for rid in range(num_rounds) if rid not in done),
+        key=lambda rid: (-costs[rid], rid),
+    )
+    queues: list[list[int]] = [[] for _ in range(fr)]
+    for i, rid in enumerate(pool):
+        queues[i % fr].append(rid)
+    return queues
 
 
 def redeal_rounds(

@@ -286,6 +286,23 @@ class TwoDPartition:
         valid = self.dst_local[i, j] != self.C * self.chunk
         return self.dst_local[i, j][valid], self.src_local[i, j][valid]
 
+    def tile_candidates(self, limit: int = 3) -> list[tuple[int, int]]:
+        """Candidate square BCSR (bm, bk) tile shapes for the autotuner.
+
+        Divisors of ``chunk`` ≤ 128 (the ring-chunk alignment
+        :meth:`_tile_dims` enforces), lane-aligned (multiples of 8) when
+        any exist, largest first, capped at ``limit`` — a bounded menu
+        the measured-cost planner can afford to time exhaustively.  The
+        first entry is always the legacy :func:`default_tile_dim` pick,
+        so autotune-off and roofline-fallback behavior are unchanged.
+        """
+        divisors = [
+            d for d in range(1, min(self.chunk, 128) + 1) if self.chunk % d == 0
+        ]
+        lane = [d for d in divisors if d % 8 == 0] or divisors
+        picks = sorted(lane, reverse=True)[: max(1, limit)]
+        return [(d, d) for d in picks]
+
     def _tile_dims(self, bm: int | None, bk: int | None) -> tuple[int, int]:
         bm = default_tile_dim(self.chunk) if bm is None else bm
         bk = default_tile_dim(self.chunk) if bk is None else bk

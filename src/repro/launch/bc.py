@@ -39,6 +39,13 @@ replica's EWMA per-round wall exceeds ``--straggler-factor ×`` the
 fastest's.  Commits stay exactly-once across steals, re-deals and
 kill-and-resume (per-replica round ledgers, first commit wins).
 
+``--autotune`` swaps the roofline guesses behind the tile, hybrid-cell,
+``--overlap auto`` and straggler-prior choices for cached measurements
+(``off`` roofline-only | ``cache`` consult, never measure | ``measure``
+micro-bench on a miss and record), persisted across runs via
+``--autotune-cache PATH``; it also packs rounds by sampled root
+eccentricity so depth-divergent roots stop sharing a batch.
+
 The per-device adjacency + state footprint is reported before
 compiling; ``--hbm-gb <GiB>`` additionally arms the fail-fast memory
 guard, turning an over-budget engine into an immediate error with a
@@ -56,6 +63,7 @@ import time
 
 import numpy as np
 
+from repro.autotune import AUTOTUNE_MODES
 from repro.core import betweenness_centrality
 from repro.core.bc import ENGINE_KINDS
 from repro.core.driver import STRAGGLER_POLICIES
@@ -137,6 +145,23 @@ def main() -> None:
         "triggers a re-deal (straggler=redeal only; steal is "
         "queue-driven and ignores it)",
     )
+    ap.add_argument(
+        "--autotune",
+        default="off",
+        choices=list(AUTOTUNE_MODES),
+        help="measured-cost autotuning (needs --mesh): 'cache' consults "
+        "the measured-cost cache and falls back to the roofline on a "
+        "miss; 'measure' micro-benches candidate configs on a miss and "
+        "records them (measure-once — the next run with the same graph "
+        "stats + mesh hits the cache).  Also switches the scheduler to "
+        "eccentricity-packed rounds",
+    )
+    ap.add_argument(
+        "--autotune-cache",
+        default=None,
+        help="path of the persistent measured-cost cache JSON "
+        "(default: in-memory for this run only)",
+    )
     ap.add_argument("--ckpt-dir", default=None, help="round-ledger resume dir")
     ap.add_argument("--out", default=None)
     ap.add_argument("--top", type=int, default=10)
@@ -192,6 +217,10 @@ def main() -> None:
             "--straggler re-deals rounds between sub-cluster replicas; "
             "pass a replicated --mesh FRxRxC"
         )
+    if args.autotune != "off" and not args.mesh:
+        raise SystemExit(
+            "--autotune measures distributed round configs; pass --mesh RxC"
+        )
 
     print(
         f"{name}: n={graph.n} m={graph.num_edges} "
@@ -221,6 +250,8 @@ def main() -> None:
             checkpoint=checkpoint,
             straggler=args.straggler,
             straggler_factor=args.straggler_factor,
+            autotune=args.autotune,
+            autotune_cache=args.autotune_cache,
         )
         rounds = len(schedule.rounds)
     else:

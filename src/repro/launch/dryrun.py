@@ -51,6 +51,18 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, save_hlo: str | N
         )
         print(f"[mem] {cell.name}: per-device footprint {per_engine}")
 
+    # Measured-cost autotune status (BC cells): whether a run of this
+    # graph/mesh key would hit the persistent cost cache, and with how
+    # many measured configs — before any compile happens.
+    tune = cell.static_meta.get("tune")
+    if tune:
+        source = (
+            f"cache {tune['cache_path']} ({tune['cached_configs']} configs)"
+            if tune["cached_configs"]
+            else "no cached measurements (autotune=measure would record them)"
+        )
+        print(f"[tune] {cell.name}: key {tune['graph_key']} -> {source}")
+
     with use_mesh(mesh):
         if hasattr(cell.fn, "lower"):  # pre-jitted (BC round fn)
             jitted = cell.fn

@@ -504,6 +504,26 @@ def _build_bc_cell(cfg: BCArch, shape, mesh) -> CellProgram:
     }
 
     fr = mesh.shape["pod"] if replica_axis else 1
+
+    # [tune] report: would this cell's autotune key hit the measured-cost
+    # cache?  (Read-only — the dry run never measures; the cache path
+    # follows the smoke tool's AUTOTUNE_CACHE_JSON convention.)
+    import os
+
+    from repro.autotune import AUTOTUNE_MODES, CostCache, graph_key
+
+    cache_path = os.environ.get("AUTOTUNE_CACHE_JSON", "AUTOTUNE_cache.json")
+    tune_cache = CostCache(cache_path) if os.path.exists(cache_path) else None
+    gkey = graph_key(n, m2, R=R, C=C, fr=fr)
+    tune_meta = {
+        "graph_key": gkey,
+        "modes": list(AUTOTUNE_MODES),
+        "cache_path": cache_path if tune_cache is not None else None,
+        "cached_configs": (
+            len(tune_cache.entries.get(gkey, {})) if tune_cache is not None else 0
+        ),
+    }
+
     s, k = cfg.batch_size, max(1, cfg.batch_size // 2)
     args_specs = (
         SDS((R, C, max_arcs), jnp.int32),
@@ -525,6 +545,7 @@ def _build_bc_cell(cfg: BCArch, shape, mesh) -> CellProgram:
             "sources_per_round": s + k,
             "model_flops": model_flops,
             "hbm_footprint_bytes": footprints,
+            "tune": tune_meta,
         },
         needs_shardmap_mesh=True,
     )

@@ -202,6 +202,7 @@ def cell_kernel_choice(
     bk: int,
     threshold: float = 1.0,
     elem: int = 4,
+    measured: tuple[float, float] | None = None,
 ) -> np.ndarray:
     """Per-device-cell dense-vs-BCSR kernel pick (bool [R, C], True = dense).
 
@@ -223,10 +224,22 @@ def cell_kernel_choice(
     count the kernel's grid actually iterates.  ``threshold`` is the
     ``--hybrid-threshold`` knob: 0 forces every cell dense, a huge value
     forces every cell sparse, 1.0 is the break-even default.
+
+    ``measured`` replaces the bytes model with a measured calibration
+    pair ``(dense_level_s, sparse_level_s)`` from the autotune cache
+    (:mod:`repro.autotune`): the pure-dense per-level wall prices every
+    cell's dense cost, the pure-BCSR wall divided by the total stored
+    tiles prices one tile, and a cell goes dense where
+    ``stored · per_tile_s >= threshold · dense_level_s`` — same
+    break-even rule, measured seconds instead of modelled bytes.
     """
     stored = np.asarray(stored_tiles_cell, np.float64)
     if stored.shape != (R, C):
         raise ValueError(f"stored_tiles_cell shape {stored.shape} != {(R, C)}")
+    if measured is not None:
+        dense_level_s, sparse_level_s = (float(x) for x in measured)
+        per_tile_s = sparse_level_s / max(float(stored.max()), 1.0)
+        return stored * per_tile_s >= threshold * dense_level_s
     dense_bytes = float(C * chunk) * (R * chunk) * elem
     bcsr_bytes = stored * (sparse_tile_bytes(bm, bk, elem) + TILE_OVERHEAD_BYTES)
     return bcsr_bytes >= threshold * dense_bytes
@@ -349,6 +362,7 @@ def auto_overlap_policy(
     R: int,
     C: int,
     hw: HardwareSpec = V5E,
+    measured: dict | None = None,
 ) -> tuple[str, dict]:
     """Pick the ring policy from the ``overlap_step_time`` estimate.
 
@@ -359,6 +373,14 @@ def auto_overlap_policy(
     latency on top of the pipelined β term.  Returns the winning policy
     and the per-policy estimates (logged by the caller so the choice is
     auditable and overridable).
+
+    ``measured`` maps policy -> measured per-level seconds from the
+    autotune cache (:mod:`repro.autotune`).  When any policy has a
+    measurement, the pick compares *measured policies only* (measured
+    walls and model seconds are not on the same scale) and the returned
+    estimates dict carries the measured values in place of the modelled
+    ones, so the caller's audit log shows what the choice actually
+    compared.
     """
     alpha = hw.ici_step_latency_s
     estimates = {
@@ -369,6 +391,14 @@ def auto_overlap_policy(
         "expand+fold": overlap_step_time(compute_s, expand_s + fold_s, R)
         + (R - 1 + C - 1) * alpha,
     }
+    if measured:
+        known = {
+            p: float(s) for p, s in measured.items()
+            if p in estimates and s is not None
+        }
+        if known:
+            estimates.update(known)
+            return min(known, key=known.get), estimates
     return min(estimates, key=estimates.get), estimates
 
 

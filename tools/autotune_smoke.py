@@ -1,0 +1,105 @@
+"""Autotune smoke: cold-measure → cache-hit round trip on fake devices.
+
+``make autotune-smoke`` / the distributed-overlap CI job run this to
+prove the measure-once contract end to end on 8 fake host devices:
+
+  1. **cold run** — ``distributed_betweenness_centrality`` with
+     ``autotune="measure"`` against an empty cache file: candidate
+     configs are micro-benched, recorded, and the result must match the
+     Brandes oracle.
+  2. **warm run** — the same graph/mesh with ``autotune="measure"``
+     against the persisted file: every consult must HIT (zero fresh
+     measurements, zero stores — the cache file is byte-identical
+     after), and parity must hold again.
+  3. **cache-only run** — ``autotune="cache"`` also serves fully from
+     the file (no bench construction possible to need).
+
+The cache file (``AUTOTUNE_CACHE_JSON``, default ``AUTOTUNE_cache.json``)
+is left behind for CI to upload next to the BENCH baselines.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.common import ensure_devices, make_mesh  # noqa: E402
+
+ensure_devices(8)
+
+import numpy as np  # noqa: E402
+
+CACHE_PATH = os.environ.get("AUTOTUNE_CACHE_JSON", "AUTOTUNE_cache.json")
+
+
+def main() -> int:
+    if not ensure_devices(8):
+        print("autotune-smoke: needs 8 host devices, skipping")
+        return 0
+
+    from repro.autotune import CostCache
+    from repro.core.brandes_ref import brandes_reference
+    from repro.core.distributed import distributed_betweenness_centrality
+    from repro.graphs import rmat_graph
+
+    cache_file = pathlib.Path(CACHE_PATH)
+    if cache_file.exists():
+        cache_file.unlink()  # a true cold start every smoke
+
+    g = rmat_graph(6, 4, seed=2)
+    expected = brandes_reference(g)
+    mesh = make_mesh((2, 4), ("data", "model"))
+
+    def run(mode: str) -> CostCache:
+        cache = CostCache(CACHE_PATH)
+        bc, _ = distributed_betweenness_centrality(
+            g,
+            mesh,
+            batch_size=16,
+            engine_kind="pallas_sparse",
+            overlap="auto",
+            autotune=mode,
+            autotune_cache=cache,
+        )
+        # repo-standard distributed parity tolerance (f32 accumulation)
+        np.testing.assert_allclose(bc, expected, rtol=1e-5, atol=1e-5)
+        err = float(np.abs(bc - expected).max())
+        print(
+            f"autotune-smoke[{mode}]: parity ok (err {err:.2e}), "
+            f"cache {cache.stats()}"
+        )
+        return cache
+
+    # 1. cold: must measure and record
+    cold = run("measure")
+    assert cold.stores > 0, "cold run recorded nothing"
+    assert cold.num_records() > 0
+    assert cache_file.exists(), f"cache not persisted at {CACHE_PATH}"
+    persisted = cache_file.read_bytes()
+
+    # 2. warm measure: every consult hits, nothing re-measured
+    warm = run("measure")
+    assert warm.hits > 0, "warm run never consulted the cache"
+    assert warm.stores == 0, (
+        f"measure-once violated: warm run re-measured {warm.stores} configs"
+    )
+    assert cache_file.read_bytes() == persisted, "cache file changed on a warm run"
+
+    # 3. cache-only mode serves from the file too
+    cached = run("cache")
+    assert cached.hits > 0 and cached.stores == 0
+
+    print(
+        f"autotune-smoke: measure-once round trip ok — "
+        f"{cold.stores} configs measured cold, {warm.hits} served warm, "
+        f"cache at {CACHE_PATH}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,7 +17,10 @@ Four comparison classes, keyed on the metric path:
 * **wall-clock** — any ``*wall*`` metric: measured seconds, machine-
   and load-dependent; must agree within a loose factor
   (``--wall-factor``, default 25x either way) so a CI runner can't fail
-  the gate on speed alone, but a 100x pathology still trips.
+  the gate on speed alone, but a 100x pathology still trips.  A wall
+  flipping between null and a value is likewise a timing artifact (the
+  metric is recorded only behind opt-in measurement modes, e.g. fig9's
+  ``--interp-wall``) — key presence is still enforced.
 * **parity error** — ``max_abs_err*``: the oracle comparison, compared
   within the repo's standard 1e-6 tolerance (a jax/XLA version bump may
   legally change reduction order) — a real parity break still trips.
@@ -71,6 +74,11 @@ STRUCTURAL_MARKERS = (
     "num_levels",
     "overlap",
     "rounds",
+    # the scheduler's deal comparison (table3 "deal" section): exact BFS
+    # depths + deterministic schedules — total_levels is a code property
+    "deal",
+    "batch_size",
+    "total_levels",
 )
 
 #: parity-error metrics: near-exact floats (the oracle comparison is
@@ -131,8 +139,13 @@ def compare(baseline: dict, fresh: dict, name: str, wall_factor: float) -> list[
         if cls == "wall":
             if want == got:
                 continue
-            if want is None or got is None:  # null-ness is structure
-                failures.append(f"{name}: {path} null-ness {want!r} -> {got!r}")
+            if want is None or got is None:
+                # a wall flipping between null and a value is a timing
+                # artifact, not structural drift: walls are recorded only
+                # behind measurement opt-ins (fig9 --interp-wall for the
+                # interpreted Pallas engines), so the same code measures
+                # or skips depending on how the smoke was invoked.  The
+                # key-set check above still fails if the key disappears.
                 continue
             lo, hi = sorted((float(want), float(got)))
             if lo <= 0 or hi / max(lo, 1e-12) > wall_factor:

@@ -3,7 +3,8 @@
 README.md and ARCHITECTURE.md document the engine × overlap × heuristics
 × straggler configuration matrix.  Those lists have single sources of
 truth in code (`ENGINE_KINDS`, `DIST_ENGINE_KINDS`, `OVERLAP_POLICIES`,
-`HEURISTICS_MODES`, `STRAGGLER_POLICIES`); this check fails CI when a
+`HEURISTICS_MODES`, `STRAGGLER_POLICIES`, `AUTOTUNE_MODES`); this check
+fails CI when a
 constant gains a value the docs never mention — the failure mode where a
 new engine/policy ships undocumented.  (The reverse — docs mentioning a
 *removed* value — is not mechanically detectable here; on a rename,
@@ -28,6 +29,7 @@ def _tokens(text: str) -> set[str]:
 
 
 def main() -> int:
+    from repro.autotune import AUTOTUNE_MODES
     from repro.core.bc import ENGINE_KINDS
     from repro.core.distributed import DIST_ENGINE_KINDS
     from repro.core.driver import STRAGGLER_POLICIES
@@ -42,11 +44,13 @@ def main() -> int:
             "overlap (OVERLAP_POLICIES + auto)": overlap_choices,
             "heuristics (HEURISTICS_MODES)": HEURISTICS_MODES,
             "straggler (STRAGGLER_POLICIES)": STRAGGLER_POLICIES,
+            "autotune (AUTOTUNE_MODES)": AUTOTUNE_MODES,
         },
         "ARCHITECTURE.md": {
             "engine_kind (distributed DIST_ENGINE_KINDS)": DIST_ENGINE_KINDS,
             "overlap (OVERLAP_POLICIES + auto)": overlap_choices,
             "straggler (STRAGGLER_POLICIES)": STRAGGLER_POLICIES,
+            "autotune (AUTOTUNE_MODES)": AUTOTUNE_MODES,
         },
     }
     failures: list[str] = []
