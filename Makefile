@@ -44,6 +44,14 @@ bench-check: bench-smoke
 autotune-smoke:
 	PYTHONPATH=src:. python tools/autotune_smoke.py
 
+# Fault-matrix smoke: every injectable fault class (transient, poison,
+# kill, torn snapshot, corrupted autotune cache) end-to-end on 8 fake
+# host devices (tools/chaos_smoke.py) — the self-healing round loop must
+# keep BC parity with the Brandes oracle and report its recovery
+# telemetry under each one.
+chaos-smoke:
+	PYTHONPATH=src:. python tools/chaos_smoke.py
+
 # Documentation health: the quickstart must execute, and the engine /
 # overlap / heuristics / straggler / autotune choice lists in README.md
 # + ARCHITECTURE.md must match the source-of-truth constants.
@@ -51,4 +59,4 @@ docs-check:
 	PYTHONPATH=src python examples/quickstart.py
 	python tools/check_docs.py
 
-.PHONY: verify test lint bench bench-smoke bench-check autotune-smoke docs-check
+.PHONY: verify test lint bench bench-smoke bench-check autotune-smoke chaos-smoke docs-check

@@ -31,11 +31,14 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import pathlib
 import tempfile
 
 import numpy as np
+
+logger = logging.getLogger(__name__)
 
 #: autotune modes (single source of truth — check_docs enforces that the
 #: README/ARCHITECTURE flag tables mention every value):
@@ -154,9 +157,20 @@ class CostCache:
             return
         try:
             obj = json.loads(self.path.read_text())
-        except (OSError, json.JSONDecodeError):
+        except (OSError, ValueError) as e:  # bad JSON / non-UTF-8 bytes
+            # corrupt-tolerant, but never silent: a garbled cache means
+            # every measurement is gone and the run re-measures cold
+            logger.warning(
+                "autotune cache %s is unreadable (%s: %s); starting empty",
+                self.path, type(e).__name__, e,
+            )
             return
         if not isinstance(obj, dict) or obj.get("version") != CACHE_VERSION:
+            logger.warning(
+                "autotune cache %s has an unexpected version/shape "
+                "(want version %s); starting empty",
+                self.path, CACHE_VERSION,
+            )
             return
         for gkey, configs in obj.get("entries", {}).items():
             try:
@@ -165,6 +179,10 @@ class CostCache:
                     for ckey, rec in configs.items()
                 }
             except (KeyError, TypeError, ValueError):
+                logger.warning(
+                    "autotune cache %s: malformed record group %s skipped",
+                    self.path, gkey,
+                )
                 continue  # skip a malformed group, keep the rest
 
     def save(self) -> None:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import os
 import queue
 import re
@@ -39,10 +40,18 @@ import numpy as np
 
 import jax
 
-__all__ = ["Checkpointer", "CheckpointManager", "BCCheckpoint"]
+__all__ = ["Checkpointer", "CheckpointManager", "BCCheckpoint", "DEFAULT_GENERATIONS"]
+
+log = logging.getLogger(__name__)
 
 PyTree = Any
 _COMMIT = "COMMITTED"
+
+#: BC snapshot generations kept on disk (newest at ``path``, older at
+#: ``path.g1``, ``path.g2``, …).  3 balances torn-write survival — one
+#: torn newest + one bit-rotted older still leaves an intact resume
+#: point — against disk for large-graph partial BC arrays.
+DEFAULT_GENERATIONS = 3
 
 
 def _path_str(kp) -> str:
@@ -155,8 +164,14 @@ class Checkpointer:
             raise self._errors[0]
 
     def close(self) -> None:
-        if self._queue is not None:
+        """Shut the worker down even when a queued write failed: wait()
+        re-raises the write error, so the sentinel/join must run on the
+        way out or the writer thread leaks past close()."""
+        if self._queue is None:
+            return
+        try:
             self.wait()
+        finally:
             self._queue.put(None)
             self._worker.join()
 
@@ -289,26 +304,67 @@ class BCCheckpoint:
     multi-ledger driver keeps its commit attribution.  The straggler
     policy and replica count may differ across the resume: exactly-once
     only needs the union.
+
+    **Generations & integrity.**  A single snapshot file makes a torn
+    write (kill mid-flush, disk full) total loss, so ``save`` rotates
+    the last ``generations`` snapshots — newest always at ``path``
+    (legacy layout), older shifted to ``path.g1``, ``path.g2``, … —
+    and embeds a per-array sha1 manifest (same scheme as
+    :class:`Checkpointer`'s ``manifest.json``).  ``load`` walks newest →
+    oldest, validates hashes, and resumes from the first intact
+    generation with a logged warning for every one it skips; only when
+    *every* generation is gone/corrupt does it cold-start (again warned,
+    never a traceback).  :attr:`loaded_generation` records which one the
+    last load used (0 = newest, None = cold start) so the driver can
+    report it in ``BCResult.recovery_stats``.  A *readable* snapshot
+    whose fingerprint mismatches still raises ValueError — that is a
+    configuration error, not corruption, and older generations would
+    only mask it.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, generations: int = DEFAULT_GENERATIONS):
         self.path = path
+        self.generations = max(1, int(generations))
+        #: generation index the last load() resumed from (None = cold).
+        self.loaded_generation: int | None = None
+
+    def generation_paths(self) -> list[str]:
+        """Snapshot paths newest → oldest (``path``, ``path.g1``, …)."""
+        return [self.path] + [
+            f"{self.path}.g{i}" for i in range(1, self.generations)
+        ]
 
     def exists(self) -> bool:
-        return os.path.exists(self.path)
+        return any(os.path.exists(p) for p in self.generation_paths())
 
-    def _open(self, expected_fingerprint: str | None):
-        z = np.load(self.path)
-        stored = str(z["fingerprint"])
-        if expected_fingerprint is not None and stored != expected_fingerprint:
-            z.close()
-            raise ValueError(
-                f"checkpoint {self.path} was written for a different "
-                f"schedule (stored {stored}, expected "
-                f"{expected_fingerprint}) — same graph, batch size and "
-                f"heuristics are required to resume"
-            )
-        return z
+    def _read_validated(self, path: str) -> dict:
+        """Load one snapshot file and verify its manifest hashes.
+
+        Raises (IOError or whatever np.load raises) on torn/garbled
+        files; pre-generational snapshots carry no manifest and are
+        accepted as-is for compatibility.
+        """
+        with np.load(path, allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+        missing = [
+            k for k in ("bc", "ns_roots", "ns_vals", "fingerprint")
+            if k not in arrays
+        ]
+        if missing:
+            raise IOError(f"snapshot {path} missing arrays {missing}")
+        if "manifest" in arrays:
+            manifest = json.loads(str(arrays["manifest"]))
+            for key, want in manifest["sha1"].items():
+                if key not in arrays:
+                    raise IOError(
+                        f"snapshot {path} missing array {key!r} named in manifest"
+                    )
+                got = hashlib.sha1(
+                    np.ascontiguousarray(arrays[key]).tobytes()
+                ).hexdigest()
+                if got != want:
+                    raise IOError(f"snapshot {path}: sha1 mismatch in {key!r}")
+        return arrays
 
     def load(self, expected_fingerprint: str | None = None):
         """Returns (bc f64 [n] | None, ns_by_root dict, committed list).
@@ -325,27 +381,66 @@ class BCCheckpoint:
 
         ``committed_by_ledger`` is a list of per-replica committed-round
         lists; a snapshot written by the single-ledger loop loads as one
-        ledger.  Same fingerprint semantics as :meth:`load`.
+        ledger.  Same fingerprint semantics as :meth:`load`.  Walks the
+        generations newest → oldest past corrupt files (warned, never
+        raised); an empty/unrecoverable state returns the cold-start
+        triple ``(None, {}, [])``.
         """
-        if not self.exists():
+        self.loaded_generation = None
+        candidates = [
+            (gen, p)
+            for gen, p in enumerate(self.generation_paths())
+            if os.path.exists(p)
+        ]
+        if not candidates:
             return None, {}, []
-        with self._open(expected_fingerprint) as z:
-            bc = z["bc"].astype(np.float64)
+        for gen, p in candidates:
+            try:
+                arrays = self._read_validated(p)
+            except Exception as e:
+                log.warning(
+                    "BCCheckpoint: snapshot %s unreadable (%s: %s); "
+                    "falling back to an older generation",
+                    p, type(e).__name__, e,
+                )
+                continue
+            stored = str(arrays["fingerprint"])
+            if expected_fingerprint is not None and stored != expected_fingerprint:
+                raise ValueError(
+                    f"checkpoint {p} was written for a different "
+                    f"schedule (stored {stored}, expected "
+                    f"{expected_fingerprint}) — same graph, batch size and "
+                    f"heuristics are required to resume"
+                )
+            bc = arrays["bc"].astype(np.float64)
             ns_by_root = {
-                int(r): float(v) for r, v in zip(z["ns_roots"], z["ns_vals"])
+                int(r): float(v)
+                for r, v in zip(arrays["ns_roots"], arrays["ns_vals"])
             }
-            if "ledger_count" in z.files:
+            if "ledger_count" in arrays:
                 by_ledger = [
-                    [int(r) for r in z[f"committed_r{i}"]]
-                    for i in range(int(z["ledger_count"]))
+                    [int(r) for r in arrays[f"committed_r{i}"]]
+                    for i in range(int(arrays["ledger_count"]))
                 ]
             else:  # legacy single-ledger snapshot
-                by_ledger = [[int(r) for r in z["committed"]]]
-        return bc, ns_by_root, by_ledger
+                by_ledger = [[int(r) for r in arrays["committed"]]]
+            self.loaded_generation = gen
+            if gen > 0:
+                log.warning(
+                    "BCCheckpoint: resumed from generation %d (%s); newer "
+                    "snapshots were corrupt", gen, p,
+                )
+            return bc, ns_by_root, by_ledger
+        log.warning(
+            "BCCheckpoint: no intact snapshot generation at %s; cold start",
+            self.path,
+        )
+        return None, {}, []
 
     def save(self, bc, ns_by_root: dict, committed, fingerprint: str) -> None:
         """``committed``: flat list[int] (one ledger) or list of per-replica
-        lists (multi-ledger); atomically replaces the previous snapshot."""
+        lists (multi-ledger).  Writes atomically (tmp + rename) and
+        rotates the previous snapshots one generation older."""
         roots = np.asarray(sorted(ns_by_root), np.int64)
         vals = np.asarray([ns_by_root[int(r)] for r in roots], np.float64)
         committed = list(committed)
@@ -368,6 +463,23 @@ class BCCheckpoint:
         }
         for i, lane in enumerate(by_ledger):
             arrays[f"committed_r{i}"] = np.asarray(sorted(lane), np.int64)
+        arrays["manifest"] = np.asarray(
+            json.dumps(
+                {
+                    "sha1": {
+                        k: hashlib.sha1(
+                            np.ascontiguousarray(v).tobytes()
+                        ).hexdigest()
+                        for k, v in arrays.items()
+                    }
+                }
+            )
+        )
         tmp = f"{self.path}.tmp.npz"
         np.savez(tmp, **arrays)
+        # rotate oldest-first so each os.replace lands on a free slot
+        gens = self.generation_paths()
+        for newer, older in zip(gens[-2::-1], gens[:0:-1]):
+            if os.path.exists(newer):
+                os.replace(newer, older)
         os.replace(tmp, self.path)

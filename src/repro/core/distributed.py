@@ -55,6 +55,7 @@ distributed/fault_tolerance.py).
 from __future__ import annotations
 
 import logging
+import os
 
 import numpy as np
 
@@ -63,7 +64,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.driver import BCDriver, traversal_round
+from repro.core.driver import (
+    BCDriver,
+    DEFAULT_MAX_RETRIES,
+    DEFAULT_RETRY_BACKOFF_S,
+    traversal_round,
+)
 from repro.core.operators import (
     DistributedOperator,
     DistributedPallasHybridOperator,
@@ -846,7 +852,12 @@ def distributed_betweenness_centrality(
     straggler_factor: float = 2.0,
     autotune: str = "off",
     autotune_cache=None,
-) -> tuple[np.ndarray, Schedule]:
+    chaos=None,
+    max_retries: int = DEFAULT_MAX_RETRIES,
+    retry_backoff_s: float = DEFAULT_RETRY_BACKOFF_S,
+    numeric_guard: bool | None = None,
+    full_result: bool = False,
+):
     """Run the full distributed BC computation on ``mesh``.
 
     Rounds are dealt ``fr`` at a time (one per sub-cluster) by the shared
@@ -888,8 +899,37 @@ def distributed_betweenness_centrality(
     per-round depth prior seeds the replica deal.  ``autotune_cache`` is
     the persistent cache: a path, a :class:`repro.autotune.CostCache`,
     or None for in-memory.
+
+    **Robustness.**  ``chaos`` (a ``--chaos`` spec string or
+    :class:`repro.distributed.chaos.FaultPlan`) wraps the round fn in
+    :class:`~repro.distributed.chaos.ChaosRoundFn` and the
+    checkpoint/autotune-cache writers in the matching file-seam chaos
+    wrappers, injecting the plan's faults deterministically; the
+    unwrapped round fn doubles as the driver's ``fallback_round_fn``
+    (known-good recompute path for persistently non-finite blocks).
+    ``max_retries`` / ``retry_backoff_s`` / ``numeric_guard`` are the
+    driver's self-healing knobs (core/driver.py); recovery telemetry
+    lands in ``BCResult.recovery_stats`` (plus a ``"chaos"`` sub-dict
+    with injection counters when a plan was active).  ``full_result``
+    returns that :class:`~repro.core.driver.BCResult` instead of the
+    legacy ``(bc, schedule)`` pair.
     """
     from repro.autotune import as_cache, normalize_autotune, plan_autotune, sample_batch
+    from repro.distributed.chaos import (
+        ChaosCheckpoint,
+        ChaosCostCache,
+        ChaosFS,
+        ChaosRoundFn,
+        FaultPlan,
+    )
+
+    chaos_plan = FaultPlan.parse(chaos)
+    chaos_fs = ChaosFS(chaos_plan) if chaos_plan else None
+    if chaos_fs is not None:
+        if isinstance(autotune_cache, (str, os.PathLike)):
+            autotune_cache = ChaosCostCache(autotune_cache, chaos_fs)
+        if checkpoint is not None:
+            checkpoint = ChaosCheckpoint(checkpoint, chaos_fs)
 
     autotune = normalize_autotune(autotune)
     schedule, prep, residual, omega_i = build_schedule(
@@ -992,8 +1032,14 @@ def distributed_betweenness_centrality(
             ),
         )
 
+    dispatch_fn = block_fn
+    fallback_fn = None
+    if chaos_plan:
+        dispatch_fn = ChaosRoundFn(block_fn, chaos_plan)
+        fallback_fn = block_fn  # the unwrapped, known-good path
+
     driver = BCDriver(
-        block_fn,
+        dispatch_fn,
         schedule,
         n=graph.n,
         prep=prep,
@@ -1004,6 +1050,24 @@ def distributed_betweenness_centrality(
         straggler_factor=straggler_factor,
         prior_round_s=prior_round_s,
         round_costs=schedule.round_depths,
+        max_retries=max_retries,
+        retry_backoff_s=retry_backoff_s,
+        numeric_guard=numeric_guard,
+        fallback_round_fn=fallback_fn,
+        # the planner's taxonomy for elastic re-mesh on replica loss:
+        # replica lanes are 'pod' groups, the grid is data × model
+        mesh_shape=(fr, R, C),
+        mesh_axes=("pod", "data", "model"),
     )
     result = driver.run()
+    if chaos_plan:
+        result.recovery_stats["chaos"] = {
+            "plan": repr(chaos_plan),
+            "dispatch_calls": dispatch_fn.calls,
+            "checkpoint_saves": chaos_fs.checkpoint_saves,
+            "cache_puts": chaos_fs.cache_puts,
+            "files_corrupted": list(chaos_fs.files_corrupted),
+        }
+    if full_result:
+        return result
     return result.bc, schedule

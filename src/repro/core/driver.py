@@ -62,6 +62,8 @@ __all__ = [
     "apply_reduction_corrections",
     "STRAGGLER_POLICIES",
     "normalize_straggler",
+    "DEFAULT_MAX_RETRIES",
+    "DEFAULT_RETRY_BACKOFF_S",
 ]
 
 logger = logging.getLogger(__name__)
@@ -83,6 +85,14 @@ logger = logging.getLogger(__name__)
 STRAGGLER_POLICIES = ("none", "steal", "redeal")
 
 _EWMA_ALPHA = 0.5  # weight of the newest per-round wall observation
+
+#: Self-healing defaults: re-dispatches allowed per block (transient
+#: errors and quarantined non-finite outputs share the budget) and the
+#: base of the exponential backoff between transient retries.  2 retries
+#: rides out the one-off XLA hiccups worth retrying; anything persisting
+#: past that is a real failure the fallback/caller must see.
+DEFAULT_MAX_RETRIES = 2
+DEFAULT_RETRY_BACKOFF_S = 0.05
 
 
 def normalize_straggler(policy: str | None) -> str:
@@ -204,6 +214,11 @@ class BCResult:
     straggler_stats: dict | None = None  # multi-ledger scheduler telemetry
     #   (straggler != "none" only): per-replica wall/rounds/levels,
     #   rounds stolen / re-dealt, speculative duplicates, idle estimate.
+    recovery_stats: dict | None = None  # self-healing telemetry (always
+    #   set by BCDriver): retries, transient_errors, quarantined_blocks,
+    #   fallback_recomputes, remesh_events, dead_replicas,
+    #   resumed_generation (BCCheckpoint generation the run resumed
+    #   from; None = cold start / no checkpoint).
 
 
 def _unpack_block(out):
@@ -245,6 +260,20 @@ class BCDriver:
     static deal a per-round cost prior (``Schedule.round_depths``): the
     initial queues then pack similar-cost rounds per dispatch block
     instead of interleaving by id.
+
+    **Self-healing** (telemetry in ``BCResult.recovery_stats``):
+    transient round failures are retried in place (``max_retries``
+    re-dispatches, exponential backoff from ``retry_backoff_s``); the
+    numeric guard (``numeric_guard``, auto-on wherever the loop already
+    syncs per block) quarantines non-finite bc/ns blocks and re-runs
+    them, escalating to ``fallback_round_fn`` — the caller's known-good
+    dense path — when the corruption persists; under ``straggler ≠
+    "none"`` a :class:`repro.distributed.fault_tolerance.
+    ReplicaLostError` from the round_fn triggers an elastic re-mesh
+    (``plan_elastic_remesh`` over ``mesh_shape``/``mesh_axes``): the
+    dead replica's ledger merges into a survivor's, its backlog is
+    re-dealt, and the loop continues at reduced effective ``fr`` with
+    the dead lane dealt only padding.
     """
 
     def __init__(
@@ -264,6 +293,12 @@ class BCDriver:
         straggler_factor: float = 2.0,
         prior_round_s: float | None = None,
         round_costs=None,
+        max_retries: int = DEFAULT_MAX_RETRIES,
+        retry_backoff_s: float = DEFAULT_RETRY_BACKOFF_S,
+        numeric_guard: bool | None = None,
+        fallback_round_fn: Callable | None = None,
+        mesh_shape: tuple[int, ...] | None = None,
+        mesh_axes: tuple[str, ...] | None = None,
     ):
         self.round_fn = round_fn
         self.profile = profile
@@ -284,6 +319,41 @@ class BCDriver:
         self._fingerprint = None
         self.fr = max(1, rounds_per_dispatch)
         self.max_inflight = max(1, max_inflight)
+
+        # ------------------------------------------------- self-healing
+        self.max_retries = max(0, int(max_retries))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.fallback_round_fn = fallback_round_fn
+        # The guard fetches a per-block finiteness bit, i.e. a host sync.
+        # Auto-resolution turns it on exactly where that sync is already
+        # paid (profile / straggler modes block per dispatch to measure)
+        # or where the caller opted into recovery (a fallback round_fn);
+        # the pure-async static fast path stays unsynced unless asked.
+        if numeric_guard is None:
+            numeric_guard = (
+                fallback_round_fn is not None
+                or self.straggler != "none"
+                or profile
+            )
+        self.numeric_guard = bool(numeric_guard)
+        # mesh geometry for plan_elastic_remesh on replica loss: the
+        # replica ('pod') axis is the dispatch lane dim by default;
+        # distributed callers pass the true (fr, R, C) shape.
+        self.mesh_shape = tuple(mesh_shape) if mesh_shape is not None else (self.fr,)
+        self.mesh_axes = tuple(mesh_axes) if mesh_axes is not None else ("pod",)
+        self._dead_lanes: set[int] = set()
+        self.recovery: dict = {
+            "retries": 0,
+            "transient_errors": 0,
+            "quarantined_blocks": 0,
+            "fallback_recomputes": 0,
+            "remesh_events": 0,
+            "dead_replicas": [],
+            "resumed_generation": None,
+        }
+        self._finite_check = jax.jit(
+            lambda bc, ns: jnp.isfinite(bc).all() & jnp.isfinite(ns).all()
+        )
 
         from repro.distributed.fault_tolerance import (
             RoundLedger,
@@ -323,6 +393,15 @@ class BCDriver:
                 ledger = RoundLedger.from_state(committed)
             self.ledger = ledger
             self.ledgers = None
+        if checkpoint is not None:
+            gen = getattr(checkpoint, "loaded_generation", None)
+            self.recovery["resumed_generation"] = gen
+            if gen is not None:
+                (logger.warning if gen > 0 else logger.info)(
+                    "resumed from checkpoint generation %d%s",
+                    gen,
+                    " (newer snapshots were corrupt)" if gen > 0 else "",
+                )
         # donated device-side accumulate: bc never round-trips per round
         self._accumulate = jax.jit(lambda acc, x: acc + x, donate_argnums=(0,))
         # drain-time masked accumulate (straggler modes): the commit
@@ -336,6 +415,83 @@ class BCDriver:
         )
         self._masked_scale = jax.jit(_bmask)
 
+    # ---------------------------------------------------- self-healing
+    def _dispatch_block(self, srcs, ders):
+        """Run ``round_fn`` on one dispatch block with recovery.
+
+        Transient failures (:func:`repro.distributed.fault_tolerance.
+        is_transient_error`) are retried in place with exponential
+        backoff, up to ``max_retries`` re-dispatches per block.  Under
+        the numeric guard a block whose bc/ns came back non-finite is
+        *quarantined* — never accumulated — and re-dispatched from the
+        same budget; if the poison persists the block is recomputed via
+        ``fallback_round_fn`` (the caller's known-good dense path) with
+        a fresh budget.  :class:`ReplicaLostError` always propagates:
+        in-place retry cannot resurrect devices — the multi-ledger loop
+        re-meshes instead.  Returns the unpacked 4-tuple.
+        """
+        import time
+
+        from repro.distributed.fault_tolerance import is_transient_error
+
+        srcs_dev = jnp.asarray(srcs)
+        ders_dev = jnp.asarray(ders)
+        fn = self.round_fn
+        attempt = 0
+        while True:
+            try:
+                out = _unpack_block(fn(srcs_dev, ders_dev))
+            except Exception as e:
+                if is_transient_error(e) and attempt < self.max_retries:
+                    backoff = self.retry_backoff_s * (2.0 ** attempt)
+                    self.recovery["transient_errors"] += 1
+                    self.recovery["retries"] += 1
+                    logger.warning(
+                        "transient round failure (%s: %s); retry %d/%d "
+                        "after %.3fs backoff",
+                        type(e).__name__, e, attempt + 1, self.max_retries,
+                        backoff,
+                    )
+                    time.sleep(backoff)
+                    attempt += 1
+                    continue
+                raise
+            if self.numeric_guard and not bool(
+                self._finite_check(out[0], out[1])
+            ):
+                self.recovery["quarantined_blocks"] += 1
+                if attempt < self.max_retries:
+                    self.recovery["retries"] += 1
+                    logger.warning(
+                        "non-finite bc/ns block quarantined; re-dispatching "
+                        "(%d/%d)", attempt + 1, self.max_retries,
+                    )
+                    attempt += 1
+                    continue
+                if (
+                    self.fallback_round_fn is not None
+                    and fn is not self.fallback_round_fn
+                ):
+                    self.recovery["fallback_recomputes"] += 1
+                    logger.warning(
+                        "non-finite bc/ns block persists after %d "
+                        "re-dispatches; recomputing via the fallback "
+                        "round_fn", self.max_retries,
+                    )
+                    fn = self.fallback_round_fn
+                    attempt = 0
+                    continue
+                raise FloatingPointError(
+                    f"non-finite bc/ns block output persisted through "
+                    f"{self.max_retries} re-dispatches"
+                    + (
+                        " and the fallback round_fn"
+                        if self.fallback_round_fn is not None
+                        else " (no fallback_round_fn supplied)"
+                    )
+                )
+            return out
+
     # ------------------------------------------------------- legacy deal
     def _blocks(self):
         """Deal rounds into [fr]-sized dispatch blocks of host arrays.
@@ -344,6 +500,10 @@ class BCDriver:
         shapes stay static, contributions are exactly zero, and the
         ledger keeps exactly-once semantics across restarts and
         speculative re-execution (distributed/fault_tolerance.py).
+        Rounds are only *read* here — the commit happens at drain time
+        (after the block's results exist), so a dispatch that dies never
+        strands its rounds as committed-but-never-accumulated in a
+        caller-owned ledger.
         """
         s = self.schedule.batch_size
         k = self.schedule.derived_per_round
@@ -355,7 +515,7 @@ class BCDriver:
             live = []
             for r, rnd in enumerate(block):
                 rid = start + r
-                if self.ledger is not None and not self.ledger.try_commit(rid):
+                if self.ledger is not None and self.ledger.is_committed(rid):
                     continue  # already accumulated by a previous run
                 srcs[r] = rnd.sources
                 ders[r] = rnd.derived
@@ -407,6 +567,11 @@ class BCDriver:
                 for root, nv in zip(roots_np[r], ns_np[r]):
                     if root >= 0:
                         ns_by_root[int(root)] = float(nv)
+            # commit at drain, not dispatch: the round's contribution now
+            # exists on device, so a crash before this point re-deals it
+            if self.ledger is not None:
+                for rid in rids:
+                    self.ledger.try_commit(rid)
             drained.extend(rids)
 
         def snapshot():
@@ -420,9 +585,7 @@ class BCDriver:
 
         for srcs, ders, live in self._blocks():
             t_blk = time.perf_counter()
-            bc_blk, ns, roots, _levels = _unpack_block(
-                self.round_fn(jnp.asarray(srcs), jnp.asarray(ders))
-            )
+            bc_blk, ns, roots, _levels = self._dispatch_block(srcs, ders)
             if block_times is not None:  # profile: sync to time this block
                 jax.block_until_ready(bc_blk)
                 block_times.append(time.perf_counter() - t_blk)
@@ -452,6 +615,7 @@ class BCDriver:
             backward_columns=bwd_cols,
             wall_s=time.perf_counter() - t_start,
             block_times=block_times,
+            recovery_stats=dict(self.recovery),
         )
 
     # ------------------------------------------- multi-ledger scheduler
@@ -490,6 +654,8 @@ class BCDriver:
           ratio crosses ``straggler_factor``.
         """
         import time
+
+        from repro.distributed.fault_tolerance import ReplicaLostError
 
         fr = self.fr
         s = self.schedule.batch_size
@@ -534,11 +700,77 @@ class BCDriver:
         t_start = time.perf_counter()
 
         def flagged() -> bool:
-            vals = [ewma[r] for r in range(fr) if observed[r]]
+            vals = [
+                ewma[r] for r in range(fr)
+                if observed[r] and r not in self._dead_lanes
+            ]
             if len(vals) < 2:
                 return False
             lo, hi = min(vals), max(vals)
             return lo > 0.0 and hi > self.straggler_factor * lo
+
+        def on_replica_loss(err, lane_rids, duplicate):
+            """Self-heal a lost replica lane (nothing from the failed
+            dispatch landed): consult the elasticity planner, move the
+            dead lane's ledger commits to a survivor (the committed
+            union — exactly-once — is unchanged), re-deal its backlog,
+            and continue at reduced effective fr (the dead lane is dealt
+            only padding from here on, so shapes stay static)."""
+            from repro.distributed.fault_tolerance import plan_elastic_remesh
+
+            dead = int(getattr(err, "replica", -1))
+            if dead < 0 or dead >= fr or dead in self._dead_lanes:
+                raise err
+            self._dead_lanes.add(dead)
+            survivors = [r for r in range(fr) if r not in self._dead_lanes]
+            if not survivors:
+                raise err
+            self.recovery["remesh_events"] += 1
+            self.recovery["dead_replicas"] = sorted(self._dead_lanes)
+            # the failed block's owned rounds go back to the front of a
+            # surviving queue (duplicates' owners requeue their own copy)
+            for r in range(fr):
+                rid = lane_rids[r]
+                if rid is None or duplicate[r]:
+                    continue
+                if any(led.is_committed(rid) for led in self.ledgers):
+                    continue
+                target = r if r in survivors else survivors[0]
+                queues[target].insert(0, rid)
+            taken = self.ledgers[survivors[0]].merge(self.ledgers[dead])
+            orphans = list(queues[dead])
+            queues[dead] = []
+            for i, rid in enumerate(orphans):
+                queues[survivors[i % len(survivors)]].append(rid)
+            sub, _ = redeal_rounds(
+                [queues[r] for r in survivors], [est(r) for r in survivors]
+            )
+            for r, q in zip(survivors, sub):
+                queues[r] = q
+            try:
+                total = 1
+                for dim in self.mesh_shape:
+                    total *= dim
+                pod_ax = (
+                    self.mesh_axes.index("pod") if "pod" in self.mesh_axes else 0
+                )
+                per_pod = max(1, total // max(1, self.mesh_shape[pod_ax]))
+                plan = plan_elastic_remesh(
+                    self.mesh_shape, self.mesh_axes,
+                    per_pod * len(self._dead_lanes),
+                )
+                logger.warning(
+                    "replica %d lost: re-mesh %s -> %s (%s); merged %d "
+                    "committed rounds into replica %d, re-dealt %d pending",
+                    dead, self.mesh_shape, plan.shape, plan.note, taken,
+                    survivors[0], len(orphans),
+                )
+            except Exception as pe:  # planning is advisory, never fatal
+                logger.warning(
+                    "replica %d lost: elastic re-mesh planning failed "
+                    "(%s: %s); continuing on %d surviving lanes",
+                    dead, type(pe).__name__, pe, len(survivors),
+                )
 
         def snapshot():
             self.checkpoint.save(
@@ -549,13 +781,18 @@ class BCDriver:
             )
 
         while any(queues):
+            alive = [r for r in range(fr) if r not in self._dead_lanes]
             # ---------------------------------------- policy: move work
             if self.straggler == "redeal":
-                lengths = [len(q) for q in queues]
+                lengths = [len(queues[r]) for r in alive]
                 fire = flagged()
                 tail_gap = min(lengths) == 0 and max(lengths) >= 2
                 if (fire and not was_flagged) or tail_gap:
-                    queues, moved = redeal_rounds(queues, [est(r) for r in range(fr)])
+                    sub, moved = redeal_rounds(
+                        [queues[r] for r in alive], [est(r) for r in alive]
+                    )
+                    for r, q in zip(alive, sub):
+                        queues[r] = q
                     if moved:
                         stats["rounds_redealt"] += moved
                         stats["redeal_events"] += 1
@@ -564,21 +801,24 @@ class BCDriver:
                             "(EWMA s/round: %s)",
                             moved,
                             [None if ewma[r] is None else round(ewma[r], 6)
-                             for r in range(fr)],
+                             for r in alive],
                         )
                 was_flagged = fire
 
             # ----------------------------------------------- form block
             lane_rids: list[int | None] = [
-                queues[r].pop(0) if queues[r] else None for r in range(fr)
+                queues[r].pop(0)
+                if r not in self._dead_lanes and queues[r]
+                else None
+                for r in range(fr)
             ]
             duplicate = [False] * fr
             if self.straggler == "steal":
                 # idle lanes pull from the heaviest remaining backlog
-                for r in sorted(range(fr), key=est):
+                for r in sorted(alive, key=est):
                     if lane_rids[r] is not None:
                         continue
-                    donors = [d for d in range(fr) if queues[d]]
+                    donors = [d for d in alive if queues[d]]
                     if not donors:
                         continue
                     donor = max(donors, key=lambda d: len(queues[d]) * est(d))
@@ -586,10 +826,10 @@ class BCDriver:
                     stats["rounds_stolen"] += 1
                 # tail: still-idle lanes back up the presumed straggler's
                 # round instead of dispatching padding (first commit wins)
-                live = [r for r in range(fr) if lane_rids[r] is not None]
-                idle = [r for r in range(fr) if lane_rids[r] is None]
-                if live and idle:
-                    slowest = max(live, key=est)
+                working = [r for r in alive if lane_rids[r] is not None]
+                idle = [r for r in alive if lane_rids[r] is None]
+                if working and idle:
+                    slowest = max(working, key=est)
                     for r in idle:
                         lane_rids[r] = lane_rids[slowest]
                         duplicate[r] = True
@@ -606,13 +846,17 @@ class BCDriver:
 
             # ------------------------------------- dispatch + observe
             t_blk = time.perf_counter()
-            out = self.round_fn(jnp.asarray(srcs), jnp.asarray(ders))
-            if len(out) != 4:
+            try:
+                out = self._dispatch_block(srcs, ders)
+            except ReplicaLostError as e:
+                on_replica_loss(e, lane_rids, duplicate)
+                continue
+            bc_blk, ns_dev, roots_dev, levels_dev = out
+            if levels_dev is None:
                 raise ValueError(
                     "straggler scheduling needs a round_fn returning "
                     "(bc, ns, roots, levels); got a legacy 3-tuple"
                 )
-            bc_blk, ns_dev, roots_dev, levels_dev = out
             jax.block_until_ready(bc_blk)
             wall = time.perf_counter() - t_blk
             block_times.append(wall)
@@ -715,4 +959,5 @@ class BCDriver:
             wall_s=time.perf_counter() - t_start,
             block_times=block_times,
             straggler_stats=stats,
+            recovery_stats=dict(self.recovery),
         )

@@ -1,0 +1,331 @@
+"""Deterministic fault injection for the BC driver (the chaos harness).
+
+The paper's scale argument — graphs "too large to fit in the memory of a
+single computational node" — implies runs long and wide enough that
+transient runtime failures, replica (pod/host) loss and torn snapshot
+writes are the *normal* case.  The driver's self-healing round loop
+(:class:`repro.core.driver.BCDriver`: retry/backoff, numeric quarantine,
+elastic re-mesh, generational snapshots) exists to survive them; this
+module makes every one of those failure modes reproducible on demand so
+the recovery paths are testable, debuggable from the CLI, and gated in
+CI (``make chaos-smoke``).
+
+Design: faults are *declared* up front in a seeded :class:`FaultPlan`
+and *injected* by wrappers at exactly two seams — the ``round_fn`` call
+boundary (:class:`ChaosRoundFn`) and the durable-file writes
+(:class:`ChaosFS` via :class:`ChaosCheckpoint` /
+:class:`ChaosCostCache`).  Production code paths are never patched or
+branched; a chaos run is the production run with wrapped callables, so
+whatever survives chaos is exactly what runs clean.
+
+Fault classes (:data:`FAULT_KINDS`), all keyed on deterministic
+counters (dispatch-call index, checkpoint-save index, cache-put index):
+
+  ``transient``  raise :class:`TransientRoundError` for ``count``
+                 consecutive dispatch calls starting at ``at`` — the
+                 driver must retry with backoff and succeed.
+  ``poison``     multiply the block's ``bc``/``ns`` outputs by NaN (or
+                 Inf, ``:inf``) — the driver's numeric guard must
+                 quarantine the block, re-dispatch it, and fall back to
+                 the clean round fn if the poison persists.
+  ``kill``       replica ``:rI`` is lost from call ``at`` on — the
+                 wrapper raises :class:`ReplicaLostError` whenever that
+                 lane is dispatched live (non-padding) columns, exactly
+                 like a device set that fails when used; after the
+                 driver re-meshes, the dead lane receives only padding
+                 and the wrapper stays silent.
+  ``crash``      raise :class:`ChaosCrash` at call ``at`` — a simulated
+                 process death (never retried) for kill-and-resume
+                 tests.
+  ``torn``       tear (truncate) the snapshot file the ``at``-th
+                 checkpoint save just wrote — the next load must fall
+                 back to an older intact generation.
+  ``cache``      garble the autotune cache JSON after its ``at``-th
+                 persisted put — the next run must warm-start empty
+                 with a warning, never traceback.
+
+A plan is constructed programmatically or parsed from the compact CLI
+spec of ``launch/bc.py --chaos``::
+
+    --chaos "seed=7;transient@1x2;poison@3:nan;kill@4:r1;torn@0;cache@0"
+
+entries are ``kind@at[xcount][:arg]`` separated by ``;`` or ``,``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.distributed.fault_tolerance import (
+    ReplicaLostError,
+    TransientRoundError,
+)
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultPlan",
+    "FaultEvent",
+    "ChaosCrash",
+    "ChaosRoundFn",
+    "ChaosFS",
+    "ChaosCheckpoint",
+    "ChaosCostCache",
+]
+
+#: The injectable fault classes — the single source of truth for the
+#: ``--chaos`` spec grammar and the docs drift check (tools/check_docs.py):
+#: "transient" retryable raise | "poison" NaN/Inf block outputs |
+#: "kill" permanent replica loss | "crash" simulated process death |
+#: "torn" truncated snapshot write | "cache" corrupted autotune cache.
+FAULT_KINDS = ("transient", "poison", "kill", "crash", "torn", "cache")
+
+_ENTRY_RE = re.compile(
+    r"^(?P<kind>[a-z]+)@(?P<at>\d+)(?:x(?P<count>\d+))?(?::(?P<arg>[A-Za-z0-9_]+))?$"
+)
+
+
+class ChaosCrash(BaseException):
+    """Simulated process death (kill-and-resume tests).
+
+    Deliberately NOT an ``Exception`` subclass: nothing in the driver —
+    not the transient retry, not the numeric fallback — may swallow it,
+    exactly like a SIGKILL.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One declared fault: ``kind`` fires at counter value ``at`` for
+    ``count`` consecutive ticks; ``arg`` carries the kind-specific
+    payload (poison mode, killed replica index)."""
+
+    kind: str
+    at: int
+    count: int = 1
+    arg: str | None = None
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of {FAULT_KINDS}"
+            )
+        if self.at < 0 or self.count < 1:
+            raise ValueError(f"fault {self.kind!r} needs at >= 0 and count >= 1")
+        if self.kind == "poison" and self.arg not in (None, "nan", "inf"):
+            raise ValueError(f"poison arg must be 'nan' or 'inf', got {self.arg!r}")
+        if self.kind == "kill":
+            if self.arg is None or not re.fullmatch(r"r\d+", self.arg):
+                raise ValueError(
+                    f"kill needs a replica arg like ':r1', got {self.arg!r}"
+                )
+
+    def covers(self, tick: int) -> bool:
+        return self.at <= tick < self.at + self.count
+
+
+class FaultPlan:
+    """Seeded, declarative fault schedule (see module docstring)."""
+
+    def __init__(self, events: list[FaultEvent] | tuple = (), seed: int = 0):
+        self.events = tuple(events)
+        self.seed = int(seed)
+
+    # ------------------------------------------------------------ parse
+    @classmethod
+    def parse(cls, spec: "str | FaultPlan | None") -> "FaultPlan":
+        """Parse a ``--chaos`` spec string (idempotent on FaultPlan/None)."""
+        if spec is None:
+            return cls()
+        if isinstance(spec, FaultPlan):
+            return spec
+        seed = 0
+        events: list[FaultEvent] = []
+        for raw in re.split(r"[;,]", spec):
+            entry = raw.strip()
+            if not entry:
+                continue
+            if entry.startswith("seed="):
+                seed = int(entry[len("seed="):])
+                continue
+            m = _ENTRY_RE.match(entry)
+            if m is None:
+                raise ValueError(
+                    f"bad --chaos entry {entry!r}; expected "
+                    f"'kind@at[xcount][:arg]' with kind in {FAULT_KINDS} "
+                    f"(or 'seed=N')"
+                )
+            events.append(
+                FaultEvent(
+                    kind=m["kind"],
+                    at=int(m["at"]),
+                    count=int(m["count"] or 1),
+                    arg=m["arg"],
+                )
+            )
+        return cls(events, seed=seed)
+
+    def __repr__(self) -> str:
+        parts = [f"seed={self.seed}"] + [
+            f"{e.kind}@{e.at}"
+            + (f"x{e.count}" if e.count != 1 else "")
+            + (f":{e.arg}" if e.arg is not None else "")
+            for e in self.events
+        ]
+        return f"FaultPlan({';'.join(parts)})"
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    # ---------------------------------------------------------- queries
+    def _of(self, kind: str):
+        return (e for e in self.events if e.kind == kind)
+
+    def transient_at(self, call: int) -> bool:
+        return any(e.covers(call) for e in self._of("transient"))
+
+    def poison_at(self, call: int) -> str | None:
+        for e in self._of("poison"):
+            if e.covers(call):
+                return e.arg or "nan"
+        return None
+
+    def crash_at(self, call: int) -> bool:
+        return any(e.covers(call) for e in self._of("crash"))
+
+    def killed_replicas(self, call: int) -> set[int]:
+        """Replicas permanently dead as of dispatch ``call`` (a kill has
+        no end: ``count`` is ignored — loss is loss)."""
+        return {int(e.arg[1:]) for e in self._of("kill") if call >= e.at}
+
+    def torn_save(self, save_idx: int) -> bool:
+        return any(e.covers(save_idx) for e in self._of("torn"))
+
+    def corrupt_cache_put(self, put_idx: int) -> bool:
+        return any(e.covers(put_idx) for e in self._of("cache"))
+
+
+class ChaosRoundFn:
+    """Wrap a driver ``round_fn`` with the plan's dispatch-seam faults.
+
+    Counts every invocation (retries advance the counter too, so a
+    ``transient@KxN`` entry models N consecutive failed attempts) and
+    injects in a fixed order: crash, replica loss, transient raise,
+    output poison.  Replica loss fires only when the dead lane carries
+    live (non-padding) columns — after the driver's re-mesh deals the
+    dead lane padding only, the wrapper stays silent, like hardware
+    that fails when addressed.
+    """
+
+    def __init__(self, round_fn, plan: FaultPlan):
+        self.round_fn = round_fn
+        self.plan = FaultPlan.parse(plan)
+        self.calls = 0
+
+    def __call__(self, sources, derived):
+        import jax.numpy as jnp
+
+        call = self.calls
+        self.calls += 1
+        if self.plan.crash_at(call):
+            raise ChaosCrash(f"chaos: simulated process death at dispatch {call}")
+        src_np = np.asarray(sources)
+        for r in sorted(self.plan.killed_replicas(call)):
+            if r < src_np.shape[0] and bool((src_np[r] >= 0).any()):
+                raise ReplicaLostError(
+                    r, f"chaos: replica {r} lost (dispatch {call})"
+                )
+        if self.plan.transient_at(call):
+            raise TransientRoundError(
+                f"chaos: transient round failure at dispatch {call}"
+            )
+        out = self.round_fn(sources, derived)
+        mode = self.plan.poison_at(call)
+        if mode is not None:
+            bad = jnp.float32(jnp.nan if mode == "nan" else jnp.inf)
+            out = (out[0] * bad, out[1] * bad) + tuple(out[2:])
+        return out
+
+
+class ChaosFS:
+    """The file-write seam: tears/garbles durable files per the plan.
+
+    Holds the per-run save/put counters and the seeded RNG, so the same
+    plan tears the same byte offset every run (reproducible from the
+    CLI).  Wrap concrete writers with :class:`ChaosCheckpoint` /
+    :class:`ChaosCostCache`; both call back into this object after each
+    successful write.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = FaultPlan.parse(plan)
+        self._rng = np.random.default_rng(self.plan.seed)
+        self.checkpoint_saves = 0
+        self.cache_puts = 0
+        self.files_corrupted: list[str] = []
+
+    def tear_file(self, path) -> None:
+        """Truncate ``path`` at a seeded interior offset — the classic
+        torn write (power loss / kill mid-flush)."""
+        path = str(path)
+        with open(path, "rb") as f:
+            data = f.read()
+        cut = max(1, int(len(data) * self._rng.uniform(0.2, 0.8)))
+        with open(path, "wb") as f:
+            f.write(data[:cut])
+        self.files_corrupted.append(path)
+
+    def garble_file(self, path) -> None:
+        """Overwrite ``path`` with seeded garbage bytes (bit rot / a
+        concurrent writer) — unreadable rather than merely short."""
+        path = str(path)
+        with open(path, "wb") as f:
+            f.write(self._rng.bytes(64))
+        self.files_corrupted.append(path)
+
+    def after_checkpoint_save(self, path) -> None:
+        idx = self.checkpoint_saves
+        self.checkpoint_saves += 1
+        if self.plan.torn_save(idx):
+            self.tear_file(path)
+
+    def after_cache_save(self, path) -> None:
+        idx = self.cache_puts
+        self.cache_puts += 1
+        if self.plan.corrupt_cache_put(idx):
+            self.garble_file(path)
+
+
+class ChaosCheckpoint:
+    """BCCheckpoint proxy: delegates everything, tears the snapshot file
+    after the saves the plan names (the *newest* generation — the file
+    the next resume tries first)."""
+
+    def __init__(self, inner, fs: ChaosFS):
+        self._inner = inner
+        self._fs = fs
+
+    def save(self, *args, **kwargs):
+        out = self._inner.save(*args, **kwargs)
+        self._fs.after_checkpoint_save(self._inner.path)
+        return out
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def ChaosCostCache(path, fs: ChaosFS):
+    """A :class:`repro.autotune.CostCache` whose persisted JSON the plan
+    garbles after the puts it names (factory — returns a CostCache
+    subclass instance, so ``isinstance(..., CostCache)`` holds and the
+    autotune planner accepts it unchanged)."""
+    from repro.autotune.cache import CostCache
+
+    class _ChaosCostCache(CostCache):
+        def save(self):
+            super().save()
+            if self.path is not None:
+                fs.after_cache_save(self.path)
+
+    return _ChaosCostCache(path)

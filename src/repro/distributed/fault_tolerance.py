@@ -24,6 +24,7 @@ operator intervention.  The moving parts:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import statistics
 
@@ -34,7 +35,54 @@ __all__ = [
     "RoundLedger",
     "BCCheckpoint",
     "schedule_fingerprint",
+    "TransientRoundError",
+    "ReplicaLostError",
+    "is_transient_error",
 ]
+
+
+class TransientRoundError(RuntimeError):
+    """A round failure worth retrying on the same device set.
+
+    Raised by the chaos harness (:mod:`repro.distributed.chaos`) to model
+    the transient XLA/runtime failures a long-lived service sees; the
+    driver's per-block retry loop (:class:`repro.core.driver.BCDriver`)
+    treats it — and runtime error types named in
+    :data:`TRANSIENT_ERROR_NAMES` — as retryable within the retry budget.
+    Any other exception propagates immediately.
+    """
+
+
+class ReplicaLostError(RuntimeError):
+    """A sub-cluster replica's devices are gone (preemption, host loss).
+
+    Carries the lost ``replica`` index.  Not retryable in place: the
+    driver's multi-ledger loop consults :func:`plan_elastic_remesh`,
+    merges the dead replica's ledger into a survivor's, re-deals its
+    pending rounds and continues on the surviving lanes (the dead lane
+    is dealt only padding from then on).
+    """
+
+    def __init__(self, replica: int, message: str | None = None):
+        super().__init__(message or f"replica {replica} lost")
+        self.replica = int(replica)
+
+
+#: Exception type *names* treated as transient alongside
+#: :class:`TransientRoundError` — matched by name so the check never
+#: imports backend-private modules.  XLA surfaces preemption/rendezvous
+#: hiccups as these; a retry budget bounds the damage when one is
+#: actually permanent.
+TRANSIENT_ERROR_NAMES = ("XlaRuntimeError", "UnavailableError", "InternalError")
+
+
+def is_transient_error(exc: BaseException) -> bool:
+    """True when a round failure should be retried in place."""
+    if isinstance(exc, TransientRoundError):
+        return True
+    if isinstance(exc, ReplicaLostError):
+        return False
+    return type(exc).__name__ in TRANSIENT_ERROR_NAMES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,10 +154,12 @@ class StragglerPolicy:
     itself uses the integrated multi-ledger scheduler
     (``BCDriver(straggler="steal"|"redeal")``, core/driver.py)."""
 
-    def __init__(self, factor: float = 2.0, min_samples: int = 5):
+    def __init__(self, factor: float = 2.0, min_samples: int = 5, window: int = 512):
         self.factor = factor
         self.min_samples = min_samples
-        self.times: list[float] = []
+        # bounded history: a long-lived service observes millions of
+        # rounds and the median only needs the recent regime anyway
+        self.times: collections.deque[float] = collections.deque(maxlen=window)
 
     def observe(self, seconds: float) -> None:
         self.times.append(seconds)
@@ -147,6 +197,20 @@ class RoundLedger:
         """Read-only commit check (the multi-ledger driver consults every
         replica's ledger before committing into one — first commit wins)."""
         return round_id in self._committed
+
+    def merge(self, other: "RoundLedger") -> int:
+        """Absorb (move) another ledger's committed set into this one.
+
+        The replica-loss re-mesh path: the dead replica's commits must
+        stay committed (exactly-once), so a survivor's ledger takes them
+        over and the dead ledger is emptied — the committed *union*
+        across ledgers is unchanged, only the attribution moves.
+        Returns the number of rounds newly committed here.
+        """
+        added = len(other._committed - self._committed)
+        self._committed |= other._committed
+        other._committed = set()
+        return added
 
     def pending(self, total_rounds: int) -> list[int]:
         return [r for r in range(total_rounds) if r not in self._committed]

@@ -46,6 +46,16 @@ micro-bench on a miss and record), persisted across runs via
 ``--autotune-cache PATH``; it also packs rounds by sampled root
 eccentricity so depth-divergent roots stop sharing a batch.
 
+``--chaos PLAN`` injects a deterministic fault plan at the round and
+file-write seams (``kind@at[xcount][:arg]`` entries: ``transient``,
+``poison``, ``kill:rI``, ``crash``, ``torn``, ``cache`` — see
+distributed/chaos.py) so any failure is reproducible from the CLI; the
+driver's self-healing (``--max-retries`` / ``--retry-backoff`` retry
+budget, ``--numeric-guard`` non-finite quarantine, replica-loss re-mesh
+under a straggler policy) recovers and reports what it did.
+``--generations`` keeps that many rotated BCCheckpoint snapshots so a
+torn newest write falls back instead of cold-starting.
+
 The per-device adjacency + state footprint is reported before
 compiling; ``--hbm-gb <GiB>`` additionally arms the fail-fast memory
 guard, turning an over-budget engine into an immediate error with a
@@ -162,6 +172,45 @@ def main() -> None:
         help="path of the persistent measured-cost cache JSON "
         "(default: in-memory for this run only)",
     )
+    ap.add_argument(
+        "--chaos",
+        default=None,
+        help="deterministic fault-injection plan (needs --mesh): "
+        "'kind@at[xcount][:arg]' entries separated by ';', plus 'seed=N' "
+        "— kinds transient | poison[:nan|:inf] | kill:rI | crash | torn "
+        "| cache, e.g. 'seed=7;transient@1x2;poison@3:nan;kill@4:r1'. "
+        "Reproduces any failure from the CLI; recovery is reported "
+        "(see distributed/chaos.py)",
+    )
+    ap.add_argument(
+        "--max-retries",
+        type=int,
+        default=None,
+        help="self-healing retry budget per dispatch block (transient "
+        "errors + quarantined non-finite blocks; default 2)",
+    )
+    ap.add_argument(
+        "--retry-backoff",
+        type=float,
+        default=None,
+        help="base seconds of the exponential backoff between transient "
+        "retries (default 0.05)",
+    )
+    ap.add_argument(
+        "--numeric-guard",
+        action="store_true",
+        help="force the post-block non-finite bc/ns guard on (adds a "
+        "per-block host sync on the static fast path; it is automatic "
+        "wherever the loop already syncs — profile/straggler modes — "
+        "and whenever a fallback path exists)",
+    )
+    ap.add_argument(
+        "--generations",
+        type=int,
+        default=None,
+        help="BCCheckpoint snapshot generations to keep (default 3); "
+        "load falls back to the newest intact one on a torn write",
+    )
     ap.add_argument("--ckpt-dir", default=None, help="round-ledger resume dir")
     ap.add_argument("--out", default=None)
     ap.add_argument("--top", type=int, default=10)
@@ -185,10 +234,17 @@ def main() -> None:
     checkpoint = None
     if args.ckpt_dir:
         os.makedirs(args.ckpt_dir, exist_ok=True)
-        checkpoint = BCCheckpoint(os.path.join(args.ckpt_dir, f"{name}.npz"))
+        ckpt_kw = {} if args.generations is None else {"generations": args.generations}
+        checkpoint = BCCheckpoint(
+            os.path.join(args.ckpt_dir, f"{name}.npz"), **ckpt_kw
+        )
         if checkpoint.exists():
             _, _, committed = checkpoint.load()
-            print(f"resuming: {len(committed)} rounds already committed")
+            gen = checkpoint.loaded_generation
+            print(
+                f"resuming: {len(committed)} rounds already committed"
+                + ("" if not gen else f" (from fallback generation {gen})")
+            )
 
     if args.overlap != "none" and not args.mesh:
         raise SystemExit("--overlap is a distributed schedule; pass --mesh RxC")
@@ -221,6 +277,11 @@ def main() -> None:
         raise SystemExit(
             "--autotune measures distributed round configs; pass --mesh RxC"
         )
+    if args.chaos and not args.mesh:
+        raise SystemExit(
+            "--chaos injects faults at the distributed round seam; "
+            "pass --mesh RxC"
+        )
 
     print(
         f"{name}: n={graph.n} m={graph.num_edges} "
@@ -236,7 +297,14 @@ def main() -> None:
         # the distributed engine's arc-list local compute is the sparse
         # path; dense-block MXU compute is the pallas pair.
         engine_kind = "sparse" if args.engine in ("dense", "sparse") else args.engine
-        bc, schedule = distributed_betweenness_centrality(
+        robust_kw: dict = {}
+        if args.max_retries is not None:
+            robust_kw["max_retries"] = args.max_retries
+        if args.retry_backoff is not None:
+            robust_kw["retry_backoff_s"] = args.retry_backoff
+        if args.numeric_guard:
+            robust_kw["numeric_guard"] = True
+        result = distributed_betweenness_centrality(
             graph,
             mesh,
             replica_axis="pod" if len(mesh_shape) == 3 else None,
@@ -252,8 +320,26 @@ def main() -> None:
             straggler_factor=args.straggler_factor,
             autotune=args.autotune,
             autotune_cache=args.autotune_cache,
+            chaos=args.chaos,
+            full_result=True,
+            **robust_kw,
         )
+        bc, schedule = result.bc, result.schedule
         rounds = len(schedule.rounds)
+        rec = result.recovery_stats or {}
+        if args.chaos or any(
+            v for k, v in rec.items() if k != "resumed_generation" and v
+        ) or rec.get("resumed_generation"):
+            print(
+                "recovery: "
+                f"{rec.get('retries', 0)} retries "
+                f"({rec.get('transient_errors', 0)} transient), "
+                f"{rec.get('quarantined_blocks', 0)} quarantined, "
+                f"{rec.get('fallback_recomputes', 0)} fallback recomputes, "
+                f"{rec.get('remesh_events', 0)} re-mesh events "
+                f"(dead replicas {rec.get('dead_replicas', [])}), "
+                f"resumed generation {rec.get('resumed_generation')}"
+            )
     else:
         res = betweenness_centrality(
             graph,

@@ -63,6 +63,20 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, save_hlo: str | N
         )
         print(f"[tune] {cell.name}: key {tune['graph_key']} -> {source}")
 
+    # Self-healing envelope (BC cells): the retry/backoff budget, the
+    # checkpoint generation depth, and whether replica loss re-meshes —
+    # what a production run of this cell survives without intervention.
+    res = cell.static_meta.get("resilience")
+    if res:
+        print(
+            f"[resilience] {cell.name}: {res['max_retries']} retries "
+            f"(backoff {res['retry_backoff_s']}s), "
+            f"{res['checkpoint_generations']} snapshot generations, "
+            f"replica-loss re-mesh "
+            f"{'on' if res['remesh_on_replica_loss'] else 'off (fr=1)'}; "
+            f"injectable faults: {', '.join(res['fault_kinds'])}"
+        )
+
     with use_mesh(mesh):
         if hasattr(cell.fn, "lower"):  # pre-jitted (BC round fn)
             jitted = cell.fn

@@ -524,6 +524,21 @@ def _build_bc_cell(cfg: BCArch, shape, mesh) -> CellProgram:
         ),
     }
 
+    # [resilience] report: the self-healing envelope a production run of
+    # this cell gets from BCDriver + generational BCCheckpoint (values
+    # from the single-source constants, so the report cannot drift).
+    from repro.checkpoint.checkpointer import DEFAULT_GENERATIONS
+    from repro.core.driver import DEFAULT_MAX_RETRIES, DEFAULT_RETRY_BACKOFF_S
+    from repro.distributed.chaos import FAULT_KINDS
+
+    resilience_meta = {
+        "max_retries": DEFAULT_MAX_RETRIES,
+        "retry_backoff_s": DEFAULT_RETRY_BACKOFF_S,
+        "checkpoint_generations": DEFAULT_GENERATIONS,
+        "remesh_on_replica_loss": fr > 1,
+        "fault_kinds": list(FAULT_KINDS),
+    }
+
     s, k = cfg.batch_size, max(1, cfg.batch_size // 2)
     args_specs = (
         SDS((R, C, max_arcs), jnp.int32),
@@ -546,6 +561,7 @@ def _build_bc_cell(cfg: BCArch, shape, mesh) -> CellProgram:
             "model_flops": model_flops,
             "hbm_footprint_bytes": footprints,
             "tune": tune_meta,
+            "resilience": resilience_meta,
         },
         needs_shardmap_mesh=True,
     )

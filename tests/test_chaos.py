@@ -1,0 +1,452 @@
+"""Chaos-harness coverage: every fault class injected and self-healed.
+
+Four layers:
+
+* :class:`FaultPlan` parsing / query semantics (pure, no jax);
+* forced-fault driver runs on the fake two-lane round fn (the
+  test_straggler.py harness): transient retry + backoff, poison
+  quarantine + fallback recompute, replica kill + elastic re-mesh,
+  crash + generational resume — BC parity with ``brandes_reference``
+  and exactly-once commit counts throughout;
+* durable-state corruption: torn / garbled :class:`BCCheckpoint`
+  generations and autotune cache files must warn and fall back (or
+  cold-start), never traceback; a kill mid-save touches only the
+  ``.tmp.npz``; ``Checkpointer.close()`` joins its writer thread even
+  when a queued write failed;
+* real-mesh fault matrix (8 fake host devices): the distributed entry
+  point under combined plans stays within 1e-6 of the oracle on 2x4
+  and 2x2x2 meshes with recovery telemetry reported.
+"""
+import json
+import logging
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brandes_reference, engine
+from repro.core.driver import BCDriver, traversal_round
+from repro.core.scheduler import build_schedule
+from repro.checkpoint import BCCheckpoint
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.distributed.chaos import (
+    FAULT_KINDS,
+    ChaosCostCache,
+    ChaosCrash,
+    ChaosFS,
+    ChaosRoundFn,
+    FaultPlan,
+)
+from repro.distributed.fault_tolerance import (
+    ReplicaLostError,
+    StragglerPolicy,
+    TransientRoundError,
+    schedule_fingerprint,
+)
+from repro.graphs import disjoint_union, gnp_graph, path_graph, skewed_depth_graph
+
+
+# ------------------------------------------------------------ fault plans
+def test_fault_plan_parse_and_queries():
+    assert set(FAULT_KINDS) == {
+        "transient", "poison", "kill", "crash", "torn", "cache"
+    }
+    plan = FaultPlan.parse(
+        "seed=7; transient@1x2, poison@3:inf; kill@4:r1; torn@0; "
+        "cache@2x2; crash@9"
+    )
+    assert plan.seed == 7 and len(plan.events) == 6 and bool(plan)
+    assert plan.transient_at(1) and plan.transient_at(2)
+    assert not plan.transient_at(0) and not plan.transient_at(3)
+    assert plan.poison_at(3) == "inf" and plan.poison_at(2) is None
+    assert plan.killed_replicas(3) == set()
+    # a kill is permanent: count is ignored, loss is loss
+    assert plan.killed_replicas(4) == {1} == plan.killed_replicas(99)
+    assert plan.crash_at(9) and not plan.crash_at(8)
+    assert plan.torn_save(0) and not plan.torn_save(1)
+    assert plan.corrupt_cache_put(2) and plan.corrupt_cache_put(3)
+    assert not plan.corrupt_cache_put(4)
+    # idempotent on FaultPlan / None
+    assert FaultPlan.parse(plan) is plan
+    assert not FaultPlan.parse(None)
+    # repr round-trips through parse
+    inner = repr(plan)[len("FaultPlan("):-1]
+    again = FaultPlan.parse(inner)
+    assert again.events == plan.events and again.seed == plan.seed
+
+
+@pytest.mark.parametrize(
+    "spec",
+    ["bogus@1", "transient", "transient@-1", "kill@2", "poison@1:huge",
+     "transient@1x0", "kill@2:one"],
+)
+def test_fault_plan_rejects_bad_entries(spec):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(spec)
+
+
+def test_straggler_policy_history_is_bounded():
+    pol = StragglerPolicy(window=16)
+    for i in range(1000):
+        pol.observe(float(i))
+    assert len(pol.times) == 16
+    assert pol.times[0] == 984.0  # oldest observations fell off
+
+
+# ------------------------------------------------ forced-fault driver runs
+@pytest.fixture(scope="module")
+def case():
+    g = skewed_depth_graph(4, 8)  # 8 source rounds at batch_size=8
+    schedule, prep, _, _ = build_schedule(g, batch_size=8)
+    assert len(schedule.rounds) == 8
+    return g, schedule, prep, brandes_reference(g)
+
+
+def _two_lane_round_fn(graph):
+    """Fake two-replica dispatch (see tests/test_straggler.py): each lane
+    runs the real single-device traversal of its round."""
+    adjacency = jnp.asarray(graph.dense_adjacency(np.float32))
+    omega = jnp.zeros(graph.n, jnp.float32)
+    base = jax.jit(
+        lambda s, d: traversal_round(
+            engine.make_dense_operator(adjacency), s, d, omega
+        )
+    )
+
+    def fn(sources, derived):
+        outs = [base(sources[r], derived[r]) for r in range(sources.shape[0])]
+        return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
+
+    return fn
+
+
+def _driver(case, plan=None, **kw):
+    g, schedule, prep, _ = case
+    fn = _two_lane_round_fn(g)
+    round_fn = ChaosRoundFn(fn, FaultPlan.parse(plan)) if plan else fn
+    kw.setdefault("retry_backoff_s", 1e-4)
+    return BCDriver(
+        round_fn, schedule, n=g.n, prep=prep, rounds_per_dispatch=2, **kw
+    )
+
+
+def test_transient_rounds_are_retried(case):
+    result = _driver(case, "transient@1x2").run()
+    np.testing.assert_allclose(result.bc, case[3], rtol=1e-6, atol=1e-6)
+    rec = result.recovery_stats
+    assert rec["transient_errors"] == 2 and rec["retries"] == 2
+    assert result.rounds_run == 8
+
+
+def test_transient_budget_exhausted_raises(case):
+    drv = _driver(case, "transient@0x5", max_retries=1)
+    with pytest.raises(TransientRoundError):
+        drv.run()
+    assert drv.recovery["retries"] == 1
+
+
+def test_poison_block_quarantined_and_recovered(case):
+    result = _driver(case, "poison@1", numeric_guard=True).run()
+    np.testing.assert_allclose(result.bc, case[3], rtol=1e-6, atol=1e-6)
+    rec = result.recovery_stats
+    assert rec["quarantined_blocks"] == 1 and rec["retries"] == 1
+    assert rec["fallback_recomputes"] == 0
+
+
+def test_persistent_poison_falls_back_to_clean_round_fn(case):
+    g, schedule, prep, expected = case
+    clean = _two_lane_round_fn(g)
+    drv = BCDriver(
+        ChaosRoundFn(clean, FaultPlan.parse("poison@1x100")),
+        schedule, n=g.n, prep=prep, rounds_per_dispatch=2,
+        retry_backoff_s=1e-4, fallback_round_fn=clean,
+    )
+    result = drv.run()  # numeric guard auto-on: a fallback was supplied
+    np.testing.assert_allclose(result.bc, expected, rtol=1e-6, atol=1e-6)
+    rec = result.recovery_stats
+    # blocks 1..3 each burn the 2-re-dispatch budget then recompute clean
+    assert rec["quarantined_blocks"] == 9
+    assert rec["fallback_recomputes"] == 3
+    assert result.rounds_run == 8
+
+
+def test_persistent_poison_without_fallback_raises(case):
+    drv = _driver(case, "poison@0x10", numeric_guard=True, max_retries=0)
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        drv.run()
+
+
+@pytest.mark.parametrize("policy", ["steal", "redeal"])
+def test_replica_kill_triggers_remesh_and_parity(case, policy):
+    drv = _driver(case, "kill@1:r1", straggler=policy, prior_round_s=1e-3)
+    result = drv.run()
+    np.testing.assert_allclose(result.bc, case[3], rtol=1e-6, atol=1e-6)
+    rec = result.recovery_stats
+    assert rec["remesh_events"] == 1 and rec["dead_replicas"] == [1]
+    assert result.rounds_run == 8
+    # exactly-once: the committed union is every round, no duplicates
+    committed = sorted(r for led in drv.ledgers for r in led.state())
+    assert committed == list(range(8))
+
+
+def test_all_replicas_dead_reraises(case):
+    drv = _driver(case, "kill@0:r0;kill@0:r1", straggler="steal")
+    with pytest.raises(ReplicaLostError):
+        drv.run()
+    assert drv.recovery["remesh_events"] == 1  # first loss healed, second fatal
+
+
+def test_crash_and_generational_resume(tmp_path, case):
+    g, schedule, prep, expected = case
+    path = str(tmp_path / "bc.npz")
+
+    def driver(plan, ckpt):
+        fn = _two_lane_round_fn(g)
+        round_fn = ChaosRoundFn(fn, FaultPlan.parse(plan)) if plan else fn
+        return BCDriver(
+            round_fn, schedule, n=g.n, prep=prep, rounds_per_dispatch=2,
+            straggler="redeal", checkpoint=ckpt, checkpoint_every=1,
+        )
+
+    with pytest.raises(ChaosCrash):
+        driver("crash@2", BCCheckpoint(path)).run()
+    ckpt = BCCheckpoint(path)
+    assert ckpt.exists()
+    assert (tmp_path / "bc.npz.g1").exists()  # two snapshots rotated
+
+    resumed = driver(None, ckpt).run()
+    np.testing.assert_allclose(resumed.bc, expected, rtol=1e-6, atol=1e-6)
+    assert resumed.rounds_run == 4  # blocks 0 and 1 survived the crash
+    assert resumed.recovery_stats["resumed_generation"] == 0
+
+    third = driver(None, BCCheckpoint(path)).run()
+    assert third.rounds_run == 0
+    np.testing.assert_allclose(third.bc, expected, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------- durable-state corruption
+def test_generation_fallback_after_torn_newest(tmp_path, case, caplog):
+    g, schedule, prep, _ = case
+    fp = schedule_fingerprint(g.n, schedule)
+    ckpt = BCCheckpoint(str(tmp_path / "bc.npz"))
+    bc1 = np.ones(g.n)
+    ckpt.save(bc1, {}, [0], fp)
+    ckpt.save(np.full(g.n, 2.0), {}, [0, 1], fp)
+    ChaosFS(FaultPlan.parse("seed=3")).tear_file(tmp_path / "bc.npz")
+
+    with caplog.at_level(logging.WARNING, logger="repro.checkpoint.checkpointer"):
+        bc, _, committed = ckpt.load(fp)
+    assert ckpt.loaded_generation == 1
+    np.testing.assert_array_equal(bc, bc1)
+    assert committed == [0]
+    assert any("falling back" in r.getMessage() for r in caplog.records)
+
+    # the driver reports the fallback generation in its telemetry
+    drv = BCDriver(
+        _two_lane_round_fn(g), schedule, n=g.n, rounds_per_dispatch=2,
+        checkpoint=ckpt,
+    )
+    assert drv.recovery["resumed_generation"] == 1
+
+
+def test_all_generations_corrupt_cold_start(tmp_path, case, caplog):
+    g, schedule, prep, expected = case
+    fp = schedule_fingerprint(g.n, schedule)
+    ckpt = BCCheckpoint(str(tmp_path / "bc.npz"))
+    ckpt.save(np.ones(g.n), {}, [0], fp)
+    ckpt.save(np.ones(g.n), {}, [0, 1], fp)
+    fs = ChaosFS(FaultPlan.parse("seed=4"))
+    fs.garble_file(tmp_path / "bc.npz")
+    fs.garble_file(tmp_path / "bc.npz.g1")
+
+    with caplog.at_level(logging.WARNING, logger="repro.checkpoint.checkpointer"):
+        bc, ns, committed = ckpt.load(fp)  # never a traceback
+    assert bc is None and ns == {} and committed == []
+    assert ckpt.loaded_generation is None
+    assert any("cold start" in r.getMessage() for r in caplog.records)
+
+    # a full run from the dead checkpoint recomputes everything, exactly
+    result = BCDriver(
+        _two_lane_round_fn(g), schedule, n=g.n, prep=prep,
+        rounds_per_dispatch=2, checkpoint=ckpt,
+    ).run()
+    np.testing.assert_allclose(result.bc, expected, rtol=1e-6, atol=1e-6)
+    assert result.rounds_run == 8
+    assert result.recovery_stats["resumed_generation"] is None
+
+
+def test_fingerprint_mismatch_on_intact_snapshot_still_raises(tmp_path):
+    ckpt = BCCheckpoint(str(tmp_path / "bc.npz"))
+    ckpt.save(np.ones(4), {}, [0], "fp-a")
+    with pytest.raises(ValueError, match="different"):
+        ckpt.load("fp-b")
+
+
+def test_legacy_snapshot_without_manifest_loads(tmp_path):
+    path = tmp_path / "bc.npz"
+    np.savez(
+        path,
+        bc=np.arange(4, dtype=np.float64),
+        ns_roots=np.asarray([0], np.int64),
+        ns_vals=np.asarray([4.0]),
+        committed=np.asarray([0, 2], np.int64),
+        fingerprint=np.asarray("legacy-fp"),
+    )
+    ckpt = BCCheckpoint(str(path))
+    bc, ns, committed = ckpt.load("legacy-fp")
+    np.testing.assert_array_equal(bc, np.arange(4))
+    assert ns == {0: 4.0} and committed == [0, 2]
+    assert ckpt.loaded_generation == 0
+
+
+def test_kill_mid_save_touches_only_the_tmp_file(tmp_path, monkeypatch):
+    ckpt = BCCheckpoint(str(tmp_path / "bc.npz"))
+    ckpt.save(np.ones(4), {}, [0], "fp")
+    before = (tmp_path / "bc.npz").read_bytes()
+
+    real_savez = np.savez
+
+    def dying_savez(path, **arrays):
+        real_savez(path, **arrays)
+        with open(path, "r+b") as f:  # torn flush, then the kill
+            f.truncate(10)
+        raise ChaosCrash("killed mid-save")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(ChaosCrash):
+        ckpt.save(np.full(4, 2.0), {}, [0, 1], "fp")
+    monkeypatch.undo()
+
+    # the committed snapshot and its rotation are untouched; only the
+    # temp file carries the torn write
+    assert (tmp_path / "bc.npz").read_bytes() == before
+    assert not (tmp_path / "bc.npz.g1").exists()
+    assert (tmp_path / "bc.npz.tmp.npz").exists()
+    bc, _, committed = ckpt.load("fp")
+    np.testing.assert_array_equal(bc, np.ones(4))
+    assert committed == [0]
+
+
+def test_checkpointer_close_joins_worker_after_write_error(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path / "ckpt"), async_writes=True)
+
+    def failing_write(*args, **kwargs):
+        raise IOError("disk full")
+
+    monkeypatch.setattr(ck, "_write", failing_write)
+    ck.save(0, {"w": np.ones(3)})
+    with pytest.raises(IOError, match="disk full"):
+        ck.close()  # wait() re-raises, but the worker must still stop
+    assert not ck._worker.is_alive()
+
+
+def test_corrupt_autotune_cache_cold_starts_with_warning(tmp_path, caplog):
+    from repro.autotune.cache import CACHE_VERSION, CostCache, CostRecord
+
+    path = tmp_path / "autotune_cache.json"
+    cache_logger = "repro.autotune.cache"
+
+    path.write_bytes(b"\x00{{{garbage")
+    with caplog.at_level(logging.WARNING, logger=cache_logger):
+        assert CostCache(path).num_records() == 0
+    assert any("unreadable" in r.getMessage() for r in caplog.records)
+
+    caplog.clear()
+    path.write_text(json.dumps({"version": 999, "entries": {}}))
+    with caplog.at_level(logging.WARNING, logger=cache_logger):
+        assert CostCache(path).num_records() == 0
+    assert any("version" in r.getMessage() for r in caplog.records)
+
+    caplog.clear()
+    path.write_text(json.dumps({
+        "version": CACHE_VERSION,
+        "entries": {
+            "g_good": {"cfg": CostRecord(0.5).to_json()},
+            "g_bad": {"cfg": {"nope": 1}},
+        },
+    }))
+    with caplog.at_level(logging.WARNING, logger=cache_logger):
+        cache = CostCache(path)
+    assert cache.num_records() == 1 and "g_good" in cache.entries
+    assert any("malformed" in r.getMessage() for r in caplog.records)
+
+
+def test_chaos_cost_cache_garbles_the_named_put(tmp_path, caplog):
+    from repro.autotune.cache import CostCache, CostRecord
+
+    path = str(tmp_path / "cache.json")
+    fs = ChaosFS(FaultPlan.parse("seed=2;cache@1"))
+    cache = ChaosCostCache(path, fs)
+    assert isinstance(cache, CostCache)  # as_cache() accepts it unchanged
+    cache.put("g", "c0", CostRecord(0.1))  # put 0: intact
+    cache.put("g", "c1", CostRecord(0.2))  # put 1: garbled after write
+    assert fs.cache_puts == 2 and fs.files_corrupted == [path]
+
+    with caplog.at_level(logging.WARNING, logger="repro.autotune.cache"):
+        fresh = CostCache(path)  # warm-start empty, never traceback
+    assert fresh.num_records() == 0
+    assert any("unreadable" in r.getMessage() for r in caplog.records)
+
+
+def test_chaos_fs_tear_is_seed_deterministic(tmp_path):
+    data = bytes(range(256)) * 8
+    (tmp_path / "a").write_bytes(data)
+    (tmp_path / "b").write_bytes(data)
+    ChaosFS(FaultPlan.parse("seed=9")).tear_file(tmp_path / "a")
+    ChaosFS(FaultPlan.parse("seed=9")).tear_file(tmp_path / "b")
+    a = (tmp_path / "a").read_bytes()
+    assert a == (tmp_path / "b").read_bytes()
+    assert 0 < len(a) < len(data)
+
+
+# ------------------------------------------------- real-mesh fault matrix
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")
+def test_chaos_matrix_2x4_mesh():
+    """Grid-only mesh (fr=1): transient + poison healed by retry and the
+    chaos-supplied clean fallback, parity within 1e-6."""
+    from repro.core.distributed import distributed_betweenness_centrality
+    from repro.launch.mesh import make_mesh
+
+    g = gnp_graph(24, 0.2, seed=3)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    result = distributed_betweenness_centrality(
+        g, mesh, batch_size=8,
+        chaos="seed=5;transient@1x2;poison@3:nan",
+        retry_backoff_s=1e-3,
+        full_result=True,
+    )
+    np.testing.assert_allclose(
+        result.bc, brandes_reference(g), rtol=1e-6, atol=1e-6
+    )
+    rec = result.recovery_stats
+    assert rec["transient_errors"] == 2
+    assert rec["quarantined_blocks"] >= 1
+    assert result.rounds_run == len(result.schedule.rounds)  # exactly-once
+    assert rec["chaos"]["dispatch_calls"] > len(result.schedule.rounds)
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")
+def test_chaos_matrix_2x2x2_mesh_replica_kill():
+    """Replicated mesh: a replica kill mid-run re-meshes onto the
+    survivor and still matches the oracle, every round exactly once."""
+    from repro.core.distributed import distributed_betweenness_centrality
+    from repro.launch.mesh import make_mesh
+
+    g = disjoint_union(path_graph(40), gnp_graph(16, 0.3, seed=4))
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    result = distributed_betweenness_centrality(
+        g, mesh, replica_axis="pod", batch_size=8, overlap="expand",
+        straggler="steal",
+        chaos="seed=1;kill@1:r1",
+        retry_backoff_s=1e-3,
+        full_result=True,
+    )
+    np.testing.assert_allclose(
+        result.bc, brandes_reference(g), rtol=1e-6, atol=1e-6
+    )
+    rec = result.recovery_stats
+    assert rec["remesh_events"] == 1 and rec["dead_replicas"] == [1]
+    assert result.rounds_run == len(result.schedule.rounds)  # exactly-once
+    assert rec["chaos"]["plan"].startswith("FaultPlan(")

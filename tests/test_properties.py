@@ -171,3 +171,43 @@ def test_quantization_error_bound(n, seed):
     back = dequantize(quantize(x))
     bound = float(jnp.abs(x).max()) / 127 + 1e-6
     assert float(jnp.abs(back - x).max()) <= bound
+
+
+# ------------------------------------------------------- elastic re-mesh
+@given(
+    st.integers(1, 4),
+    st.sampled_from([1, 2, 4, 8]),
+    st.integers(1, 4),
+    st.data(),
+)
+@settings(**SETTINGS)
+def test_remesh_plan_fits_and_preserves_model_axis(pods, data, model, payload):
+    """plan_elastic_remesh invariants: the planned shape fits in the
+    surviving devices, the model axis (weight layout) is never touched,
+    and the note/reload flags match the branch taken (pod drop keeps
+    replica-local state, data halving reshards from checkpoint)."""
+    from repro.distributed.fault_tolerance import plan_elastic_remesh
+
+    axes = ("pod", "data", "model")
+    shape = (pods, data, model)
+    n = pods * data * model
+    if n < 2:
+        return
+    lost = payload.draw(st.integers(1, n - 1))
+    try:
+        plan = plan_elastic_remesh(shape, axes, lost)
+    except ValueError:
+        return  # an unshrinkable mesh (odd data axis) may refuse
+    prod = 1
+    for s in plan.shape:
+        prod *= s
+    assert prod <= n - lost  # fits in what's left
+    assert plan.axes == axes
+    assert plan.shape[2] == model  # model axis untouched
+    if plan.shape[0] != pods:  # pod drop: replicas hold full state
+        assert "pods" in plan.note
+        assert not plan.reload_from_checkpoint and not plan.reshard_params
+    else:  # data halving: reload + reshard required
+        assert plan.shape[1] < data
+        assert "data axis halved" in plan.note
+        assert plan.reload_from_checkpoint and plan.reshard_params

@@ -1,0 +1,156 @@
+"""Chaos smoke: the fault matrix end-to-end on 8 fake host devices.
+
+``make chaos-smoke`` / the distributed-overlap CI job run this to prove
+the self-healing round loop survives every injectable fault class
+(:data:`repro.distributed.chaos.FAULT_KINDS`) with BC parity against
+the Brandes oracle:
+
+  1. **grid mesh (2x4)** — transient dispatch failures + a NaN-poisoned
+     block: the driver retries with backoff, quarantines the poisoned
+     block and recomputes it via the chaos-supplied clean fallback.
+  2. **replicated mesh (2x2x2)** — a replica killed mid-run: the
+     multi-ledger loop re-meshes onto the survivor and finishes every
+     round exactly once.
+  3. **torn snapshot** — the run's final checkpoint write is truncated;
+     the next run must warn, cold-start (no intact generation), redo the
+     rounds, and still match — corruption costs recompute, never
+     correctness (and never a traceback).
+  4. **corrupted autotune cache** — every persisted cache put is
+     garbled; the next run warm-starts the cache empty with a warning
+     and simply re-measures.
+
+Each leg asserts parity at the repo-standard smoke tolerance (1e-5,
+f32 accumulation) plus the recovery telemetry the fault must produce.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.common import ensure_devices, make_mesh  # noqa: E402
+
+ensure_devices(8)
+
+import numpy as np  # noqa: E402
+
+
+def main() -> int:
+    if not ensure_devices(8):
+        print("chaos-smoke: needs 8 host devices, skipping")
+        return 0
+
+    from repro.autotune import CostCache
+    from repro.checkpoint import BCCheckpoint
+    from repro.core.brandes_ref import brandes_reference
+    from repro.core.distributed import distributed_betweenness_centrality
+    from repro.graphs import disjoint_union, gnp_graph, path_graph, rmat_graph
+
+    def check(tag, result, expected):
+        np.testing.assert_allclose(result.bc, expected, rtol=1e-5, atol=1e-5)
+        err = float(np.abs(result.bc - expected).max())
+        rec = result.recovery_stats
+        print(
+            f"chaos-smoke[{tag}]: parity ok (err {err:.2e}), "
+            f"rounds {result.rounds_run}/{len(result.schedule.rounds)}, "
+            f"recovery {({k: v for k, v in rec.items() if k != 'chaos'})}"
+        )
+        return rec
+
+    # 1. transient + poison on the grid mesh (fr=1): retry + fallback
+    g1 = rmat_graph(6, 4, seed=2)
+    oracle1 = brandes_reference(g1)
+    grid = make_mesh((2, 4), ("data", "model"))
+    rec = check(
+        "transient+poison",
+        distributed_betweenness_centrality(
+            g1, grid, batch_size=16,
+            chaos="seed=5;transient@1x2;poison@3:nan",
+            retry_backoff_s=1e-3, full_result=True,
+        ),
+        oracle1,
+    )
+    assert rec["transient_errors"] == 2, rec
+    assert rec["quarantined_blocks"] >= 1, rec
+
+    # 2. replica kill on the replicated mesh: elastic re-mesh
+    g2 = disjoint_union(path_graph(40), gnp_graph(16, 0.3, seed=4))
+    oracle2 = brandes_reference(g2)
+    pods = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    rec = check(
+        "replica-kill",
+        distributed_betweenness_centrality(
+            g2, pods, replica_axis="pod", batch_size=8, overlap="expand",
+            straggler="steal",
+            chaos="seed=1;kill@1:r1",
+            retry_backoff_s=1e-3, full_result=True,
+        ),
+        oracle2,
+    )
+    assert rec["remesh_events"] == 1 and rec["dead_replicas"] == [1], rec
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # 3. torn snapshot: the corrupted checkpoint costs recompute,
+        # never correctness (and never a traceback)
+        snap = os.path.join(tmp, "bc.npz")
+        rec = check(
+            "torn-write",
+            distributed_betweenness_centrality(
+                g1, grid, batch_size=16,
+                checkpoint=BCCheckpoint(snap),
+                chaos="seed=9;torn@0",
+                full_result=True,
+            ),
+            oracle1,
+        )
+        assert rec["chaos"]["files_corrupted"] == [snap], rec["chaos"]
+        resumed = distributed_betweenness_centrality(
+            g1, grid, batch_size=16,
+            checkpoint=BCCheckpoint(snap),
+            full_result=True,
+        )
+        rec = check("torn-resume", resumed, oracle1)
+        assert rec["resumed_generation"] is None, rec  # cold start, warned
+        assert resumed.rounds_run == len(resumed.schedule.rounds)
+
+        # 4. corrupted autotune cache: warm-start empty + re-measure
+        cache_path = os.path.join(tmp, "cache.json")
+        rec = check(
+            "cache-garble",
+            distributed_betweenness_centrality(
+                g1, grid, batch_size=16, overlap="auto",
+                autotune="measure", autotune_cache=cache_path,
+                chaos="seed=3;cache@0x999",
+                full_result=True,
+            ),
+            oracle1,
+        )
+        assert rec["chaos"]["cache_puts"] > 0, rec["chaos"]
+        assert cache_path in rec["chaos"]["files_corrupted"], rec["chaos"]
+        fresh = CostCache(cache_path)  # warns + starts empty, no traceback
+        assert fresh.num_records() == 0, fresh.stats()
+        rec = check(
+            "cache-remeasure",
+            distributed_betweenness_centrality(
+                g1, grid, batch_size=16, overlap="auto",
+                autotune="measure", autotune_cache=cache_path,
+                full_result=True,
+            ),
+            oracle1,
+        )
+
+    print(
+        "chaos-smoke: all fault classes healed — transient retry, poison "
+        "quarantine + fallback, replica re-mesh, torn-snapshot cold start, "
+        "cache corruption re-measure"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,7 @@ def main() -> int:
     from repro.core.driver import STRAGGLER_POLICIES
     from repro.core.operators import OVERLAP_POLICIES
     from repro.core.scheduler import HEURISTICS_MODES
+    from repro.distributed.chaos import FAULT_KINDS
 
     overlap_choices = tuple(OVERLAP_POLICIES) + ("auto",)  # CLI surface
     required = {
@@ -45,12 +46,14 @@ def main() -> int:
             "heuristics (HEURISTICS_MODES)": HEURISTICS_MODES,
             "straggler (STRAGGLER_POLICIES)": STRAGGLER_POLICIES,
             "autotune (AUTOTUNE_MODES)": AUTOTUNE_MODES,
+            "chaos (FAULT_KINDS)": FAULT_KINDS,
         },
         "ARCHITECTURE.md": {
             "engine_kind (distributed DIST_ENGINE_KINDS)": DIST_ENGINE_KINDS,
             "overlap (OVERLAP_POLICIES + auto)": overlap_choices,
             "straggler (STRAGGLER_POLICIES)": STRAGGLER_POLICIES,
             "autotune (AUTOTUNE_MODES)": AUTOTUNE_MODES,
+            "chaos (FAULT_KINDS)": FAULT_KINDS,
         },
     }
     failures: list[str] = []
