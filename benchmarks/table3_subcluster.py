@@ -23,6 +23,13 @@ stolen/re-dealt and the recovered idle seconds to
 ``BENCH_subcluster.json`` — the machine-readable baseline future PRs
 regress against (CI uploads it next to ``BENCH_overlap.json``).
 
+Part (d), the integrity-overhead benchmark: the same distributed
+workload with ``integrity`` off / audit / checksum — exact parity in
+all three, the per-mode wall and the overhead ratios recorded under
+``"integrity"`` so the cost of the self-verifying rounds (the ABFT
+checksum lane widens every level SpMM by one column) is a tracked
+number instead of folklore.
+
 Part (c), the deal comparison: at a batch width spanning two components
 the legacy vertex-id deal mixes a deep path root with shallow clique
 roots in the same round — the shallow roots burn the depth difference
@@ -52,7 +59,7 @@ from repro.core.distributed import (
     make_distributed_round_fn,
     prior_round_seconds,
 )
-from repro.core.driver import BCDriver, STRAGGLER_POLICIES
+from repro.core.driver import BCDriver, INTEGRITY_MODES, STRAGGLER_POLICIES
 from repro.core.scheduler import build_schedule
 from repro.graphs import rmat_graph, skewed_depth_graph
 from repro.graphs.partition import partition_2d
@@ -172,6 +179,90 @@ def _straggler_bench() -> dict:
     return record
 
 
+def _integrity_bench() -> dict:
+    """(d) measured self-verification overhead, off vs audit vs checksum.
+
+    Same workload and mesh as the straggler benchmark, static deal.  The
+    wall per mode is a loose (machine-speed) metric; parity and the key
+    set are the contract — `audit` must cost only the host-side block
+    audit, `checksum`'s extra column on every level SpMM is the real
+    overhead being tracked.
+    """
+    g = skewed_depth_graph(PAIRS, BLOCK)
+    expected = brandes_reference(g)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    schedule, prep, residual, _ = build_schedule(g, batch_size=BLOCK, heuristics="h0")
+    part = partition_2d(residual, 2, 2)
+    graph_args = distributed_graph_arrays(part, "sparse", OVERLAP)
+    omega = jnp.zeros(part.n_pad, jnp.float32)
+
+    record: dict = {
+        "graph": {
+            "kind": f"skewed_depth_graph({PAIRS}, {BLOCK})",
+            "n": g.n,
+            "m": int(g.num_edges),
+            "rounds": len(schedule.rounds),
+        },
+        "mesh": "2x2x2 (fr=2 replicas of a 2x2 grid)",
+        "overlap": OVERLAP,
+        "modes": {},
+    }
+    walls: dict[str, float] = {}
+    for mode in INTEGRITY_MODES:
+        fn = make_distributed_round_fn(
+            part, mesh, replica_axis="pod", engine_kind="sparse",
+            overlap=OVERLAP, integrity=mode,
+        )
+
+        def block_fn(sources, derived, fn=fn):
+            return fn(*graph_args, omega, sources, derived)
+
+        jax.block_until_ready(
+            block_fn(
+                jnp.full((2, BLOCK), -1, jnp.int32),
+                jnp.full((2, schedule.derived_per_round, 3), -1, jnp.int32),
+            )
+        )
+        result = BCDriver(
+            block_fn,
+            schedule,
+            n=g.n,
+            prep=prep,
+            rounds_per_dispatch=2,
+            integrity=mode,
+            profile=True,
+        ).run()
+        err = float(np.abs(result.bc - expected).max())
+        assert err < 1e-6, f"integrity={mode} diverged from brandes_ref: {err}"
+        integ = result.recovery_stats["integrity"]
+        failures = integ["checksum_failures"] + integ["audit_failures"]
+        assert failures == 0, f"integrity={mode} false positives: {integ}"
+        walls[mode] = result.wall_s
+        record["modes"][mode] = {
+            "wall_s": result.wall_s,
+            "block_wall_s_median": float(np.median(result.block_times)),
+            "max_abs_err_vs_brandes": err,
+            "max_checksum_residual": integ["max_checksum_residual"],
+            "false_positives": failures,
+        }
+        emit(
+            f"table3/integrity_{mode}",
+            result.wall_s * 1e6,
+            f"err={err:.2e};residual={integ['max_checksum_residual']:.2e}",
+        )
+    record["overhead_ratio_audit_vs_off"] = walls["audit"] / max(walls["off"], 1e-9)
+    record["overhead_ratio_checksum_vs_off"] = (
+        walls["checksum"] / max(walls["off"], 1e-9)
+    )
+    emit(
+        "table3/integrity_overhead",
+        0.0,
+        f"audit={record['overhead_ratio_audit_vs_off']:.2f}x;"
+        f"checksum={record['overhead_ratio_checksum_vs_off']:.2f}x",
+    )
+    return record
+
+
 #: deal comparison batch width: TWO components per round, so the
 #: vertex-id deal mixes one deep path with one shallow clique per round
 #: while the eccentricity deal pairs like with like
@@ -232,6 +323,7 @@ def run() -> None:
     _replication_sweep()
     record = _straggler_bench()
     record["deal"] = _deal_bench()
+    record["integrity"] = _integrity_bench()
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
     emit("table3/bench_json", 0.0, f"wrote={BENCH_JSON}")

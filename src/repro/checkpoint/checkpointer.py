@@ -327,6 +327,10 @@ class BCCheckpoint:
         self.generations = max(1, int(generations))
         #: generation index the last load() resumed from (None = cold).
         self.loaded_generation: int | None = None
+        #: recovery-telemetry dict the last load() found in the snapshot
+        #: (None when absent) — the driver resumes its counters from it
+        #: so retry/quarantine/re-mesh history survives kill-and-resume.
+        self.loaded_stats: dict | None = None
 
     def generation_paths(self) -> list[str]:
         """Snapshot paths newest → oldest (``path``, ``path.g1``, …)."""
@@ -387,6 +391,7 @@ class BCCheckpoint:
         triple ``(None, {}, [])``.
         """
         self.loaded_generation = None
+        self.loaded_stats = None
         candidates = [
             (gen, p)
             for gen, p in enumerate(self.generation_paths())
@@ -424,6 +429,11 @@ class BCCheckpoint:
                 ]
             else:  # legacy single-ledger snapshot
                 by_ledger = [[int(r) for r in arrays["committed"]]]
+            if "recovery_stats" in arrays:
+                try:
+                    self.loaded_stats = json.loads(str(arrays["recovery_stats"]))
+                except Exception:  # telemetry is advisory, never fatal
+                    self.loaded_stats = None
             self.loaded_generation = gen
             if gen > 0:
                 log.warning(
@@ -437,10 +447,16 @@ class BCCheckpoint:
         )
         return None, {}, []
 
-    def save(self, bc, ns_by_root: dict, committed, fingerprint: str) -> None:
+    def save(
+        self, bc, ns_by_root: dict, committed, fingerprint: str,
+        *, stats: dict | None = None,
+    ) -> None:
         """``committed``: flat list[int] (one ledger) or list of per-replica
-        lists (multi-ledger).  Writes atomically (tmp + rename) and
-        rotates the previous snapshots one generation older."""
+        lists (multi-ledger).  ``stats`` (optional) is a JSON-serializable
+        recovery-telemetry dict stored under the manifest's hash cover so
+        the driver's counters survive kill-and-resume.  Writes atomically
+        (tmp + rename) and rotates the previous snapshots one generation
+        older."""
         roots = np.asarray(sorted(ns_by_root), np.int64)
         vals = np.asarray([ns_by_root[int(r)] for r in roots], np.float64)
         committed = list(committed)
@@ -463,6 +479,8 @@ class BCCheckpoint:
         }
         for i, lane in enumerate(by_ledger):
             arrays[f"committed_r{i}"] = np.asarray(sorted(lane), np.int64)
+        if stats is not None:
+            arrays["recovery_stats"] = np.asarray(json.dumps(stats))
         arrays["manifest"] = np.asarray(
             json.dumps(
                 {

@@ -68,6 +68,7 @@ from repro.core.driver import (
     BCDriver,
     DEFAULT_MAX_RETRIES,
     DEFAULT_RETRY_BACKOFF_S,
+    normalize_integrity,
     traversal_round,
 )
 from repro.core.operators import (
@@ -100,9 +101,19 @@ __all__ = [
     "prior_round_seconds",
     "estimate_device_footprint",
     "check_device_memory",
+    "WATCHDOG_SAFETY",
+    "WATCHDOG_MIN_DEADLINE_S",
 ]
 
 logger = logging.getLogger(__name__)
+
+#: ``dispatch_deadline_s="auto"`` resolves to
+#: ``max(WATCHDOG_MIN_DEADLINE_S, WATCHDOG_SAFETY × prior_round_seconds)``.
+#: The factor is deliberately generous: the roofline prior models steady
+#: state, while the first dispatch also pays jit compilation, and a false
+#: watchdog trip evicts a healthy replica.
+WATCHDOG_SAFETY = 50.0
+WATCHDOG_MIN_DEADLINE_S = 60.0
 
 #: block-local compute engines of the distributed path: arc-list
 #: gather/segment-sum, fused dense-block Pallas (f32 / bf16 A-stream),
@@ -585,6 +596,7 @@ def make_distributed_round_fn(
     engine_kind: str = "sparse",
     interpret: bool | None = None,
     overlap: str = "none",
+    integrity: str = "off",
 ):
     """Build the sub-cluster-parallel, 2-D-distributed round function.
 
@@ -646,6 +658,16 @@ def make_distributed_round_fn(
     (i32 [R, C, R, max_ring_arcs] from
     :meth:`TwoDPartition.ring_arcs`) instead of the flat arc arrays —
     same arity, per-row-chunk slicing.
+
+    ``integrity`` (:data:`repro.core.driver.INTEGRITY_MODES`) makes each
+    round self-verifying: with ``"audit"`` or ``"checksum"`` the output
+    grows a fifth slot, f32 [fr, 2] — per replica the max ABFT checksum
+    residual over all level steps (``"checksum"`` only; 0 otherwise) and
+    the replica's claimed bc-block sum, which the driver cross-checks
+    against the delivered block at drain time.  ``"checksum"`` requires
+    the fused backward payload: the checksum lane rides the column axis
+    through every exchange, and the split σ/d gather would carry it
+    through only half the backward operands.
     """
     R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
     if (R, C) != (partition.R, partition.C):
@@ -655,9 +677,15 @@ def make_distributed_round_fn(
     if engine_kind not in DIST_ENGINE_KINDS:
         raise ValueError(f"unknown distributed engine {engine_kind!r}")
     overlap = normalize_overlap(overlap)
+    integrity = normalize_integrity(integrity)
     use_pallas = engine_kind != "sparse"  # any fused-kernel engine
     if use_pallas and not fuse_backward_payload:
         raise ValueError("split backward payload is a sparse-engine benchmark mode")
+    if integrity == "checksum" and not fuse_backward_payload:
+        raise ValueError(
+            "integrity='checksum' needs the fused backward payload: the "
+            "checksum lane must travel with every exchanged operand"
+        )
     if overlap != "none" and not fuse_backward_payload:
         raise ValueError(
             "split backward payload is a barrier-schedule benchmark mode; "
@@ -677,12 +705,15 @@ def make_distributed_round_fn(
     )
 
     def round_body(op, omega, sources, derived):
-        bc_owned, ns, roots, levels = traversal_round(
-            op, sources[0], derived[0], omega, num_levels=num_levels
+        out = traversal_round(
+            op, sources[0], derived[0], omega, num_levels=num_levels,
+            integrity=integrity,
         )
         # levels is grid-reduced but *per replica* (reduce_max_grid), the
         # straggler scheduler's cost signal — sharded on the replica axis.
-        return bc_owned[None], ns[None], roots[None], levels[None]
+        # With integrity on, a fifth slot carries the per-replica
+        # [checksum residual, claimed bc sum] pair.
+        return tuple(x[None] for x in out)
 
     if engine_kind == "pallas_sparse":
         # (tiles, tile_rows, tile_cols): [R, C, T, bm, bk]-shaped full
@@ -825,6 +856,8 @@ def make_distributed_round_fn(
         P(*rep, None),
         P(*rep),
     )
+    if integrity != "off":
+        out_specs = out_specs + (P(*rep, None),)
     shmapped = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
@@ -856,6 +889,10 @@ def distributed_betweenness_centrality(
     max_retries: int = DEFAULT_MAX_RETRIES,
     retry_backoff_s: float = DEFAULT_RETRY_BACKOFF_S,
     numeric_guard: bool | None = None,
+    integrity: str = "off",
+    dispatch_deadline_s=None,
+    clock=None,
+    sleeper=None,
     full_result: bool = False,
 ):
     """Run the full distributed BC computation on ``mesh``.
@@ -910,9 +947,27 @@ def distributed_betweenness_centrality(
     ``max_retries`` / ``retry_backoff_s`` / ``numeric_guard`` are the
     driver's self-healing knobs (core/driver.py); recovery telemetry
     lands in ``BCResult.recovery_stats`` (plus a ``"chaos"`` sub-dict
-    with injection counters when a plan was active).  ``full_result``
-    returns that :class:`~repro.core.driver.BCResult` instead of the
-    legacy ``(bc, schedule)`` pair.
+    with injection counters when a plan was active).
+
+    ``integrity`` (:data:`repro.core.driver.INTEGRITY_MODES`) makes every
+    round self-verifying: ``"audit"`` cross-checks each drained block
+    against its in-graph claimed sum plus output-domain invariants
+    (BC non-negativity, level bounds); ``"checksum"`` additionally runs
+    the ABFT column-sum lane through every level SpMM.  A failed audit
+    quarantines and re-dispatches the block (then the clean fallback,
+    then :class:`~repro.distributed.fault_tolerance.IntegrityError`);
+    under ``straggler="steal"`` duplicated tail rounds also get
+    duplicate-vote SDC detection.  ``dispatch_deadline_s`` arms the
+    dispatch watchdog — a float deadline in seconds, or ``"auto"`` for
+    ``max(WATCHDOG_MIN_DEADLINE_S, WATCHDOG_SAFETY × prior round
+    seconds)`` from the roofline/autotune prior; a dispatch exceeding it
+    escalates hang → re-dispatch → replica loss (absorbed by the elastic
+    re-mesh).  ``clock`` / ``sleeper`` are injectable time sources for
+    the watchdog and the retry/stall sleeps (tests; default real time).
+    Detection counters land in ``recovery_stats["integrity"]``.
+
+    ``full_result`` returns the :class:`~repro.core.driver.BCResult`
+    instead of the legacy ``(bc, schedule)`` pair.
     """
     from repro.autotune import as_cache, normalize_autotune, plan_autotune, sample_batch
     from repro.distributed.chaos import (
@@ -990,6 +1045,7 @@ def distributed_betweenness_centrality(
         dense_cells=dense_cells,
     )
 
+    integrity = normalize_integrity(integrity)
     round_fn = make_distributed_round_fn(
         part,
         mesh,
@@ -999,6 +1055,7 @@ def distributed_betweenness_centrality(
         num_levels=num_levels,
         engine_kind=engine_kind,
         overlap=overlap,
+        integrity=integrity,
     )
 
     omega_pad = np.zeros(part.n_pad, np.float32)
@@ -1018,8 +1075,8 @@ def distributed_betweenness_centrality(
 
     straggler = normalize_straggler(straggler)
     prior_round_s = None
-    if straggler != "none":
-        if replica_axis is None:
+    if straggler != "none" or dispatch_deadline_s == "auto":
+        if straggler != "none" and replica_axis is None:
             raise ValueError(
                 "straggler scheduling re-deals rounds between sub-cluster "
                 "replicas; pass replica_axis (a mesh with fr > 1)"
@@ -1031,11 +1088,18 @@ def distributed_betweenness_centrality(
                 plan.level_s_for(overlap) if plan is not None else None
             ),
         )
+    if dispatch_deadline_s == "auto":
+        # generous on purpose: the prior models steady-state rounds, but
+        # the first dispatch pays jit compilation on top
+        dispatch_deadline_s = max(
+            WATCHDOG_MIN_DEADLINE_S, WATCHDOG_SAFETY * float(prior_round_s)
+        )
+        logger.info("dispatch watchdog: auto deadline %.1fs", dispatch_deadline_s)
 
     dispatch_fn = block_fn
     fallback_fn = None
     if chaos_plan:
-        dispatch_fn = ChaosRoundFn(block_fn, chaos_plan)
+        dispatch_fn = ChaosRoundFn(block_fn, chaos_plan, sleeper=sleeper)
         fallback_fn = block_fn  # the unwrapped, known-good path
 
     driver = BCDriver(
@@ -1054,6 +1118,10 @@ def distributed_betweenness_centrality(
         retry_backoff_s=retry_backoff_s,
         numeric_guard=numeric_guard,
         fallback_round_fn=fallback_fn,
+        integrity=integrity,
+        dispatch_deadline_s=dispatch_deadline_s,
+        clock=clock,
+        sleeper=sleeper,
         # the planner's taxonomy for elastic re-mesh on replica loss:
         # replica lanes are 'pod' groups, the grid is data × model
         mesh_shape=(fr, R, C),

@@ -42,6 +42,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import logging
+import time
 from typing import Callable
 
 import numpy as np
@@ -62,6 +63,8 @@ __all__ = [
     "apply_reduction_corrections",
     "STRAGGLER_POLICIES",
     "normalize_straggler",
+    "INTEGRITY_MODES",
+    "normalize_integrity",
     "DEFAULT_MAX_RETRIES",
     "DEFAULT_RETRY_BACKOFF_S",
 ]
@@ -94,6 +97,46 @@ _EWMA_ALPHA = 0.5  # weight of the newest per-round wall observation
 DEFAULT_MAX_RETRIES = 2
 DEFAULT_RETRY_BACKOFF_S = 0.05
 
+#: Round-integrity modes of :class:`BCDriver` (the single source of
+#: truth for ``--integrity`` choices and the docs drift check).
+#: ``"off"`` accumulates round outputs unaudited (the legacy behaviour).
+#: ``"audit"`` makes every round also return an integrity record — a
+#: per-lane bc-sum *claim* computed inside the round — and the driver
+#: audits each block host-side at the per-block sync: claim vs the
+#: recomputed lane sum (in-transit corruption), BC non-negativity, level
+#: and component-size bounds; under ``straggler="steal"`` the
+#: speculative duplicate lanes additionally *vote* — digests compared,
+#: mismatches quarantined and re-dispatched as a tie-breaker.
+#: ``"checksum"`` adds the ABFT ones-checksum lane to every forward and
+#: backward SpMM (operators.*_level_checked), carrying the max relative
+#: column-sum residual in the record, so in-SpMM corruption is caught
+#: the moment it happens — the strongest (and costliest: one extra lane
+#: per product) mode.
+INTEGRITY_MODES = ("off", "audit", "checksum")
+
+#: ABFT residual threshold: healthy f32 reductions land around 1e-6
+#: relative; 1e-3 keeps ~3 orders of magnitude of slack against
+#: accumulation-order noise while still catching any corruption that
+#: could move BC beyond parity tolerance.
+CHECKSUM_TOL = 1e-3
+#: Relative tolerance for the bc-sum claim audit (in-round claim vs the
+#: host-recomputed lane sum — both f32 reductions in different orders).
+CLAIM_RTOL = 1e-4
+#: Relative tolerance for the duplicate-vote digest compare: both lanes
+#: ran the identical deterministic computation, so any real divergence
+#: is corruption.
+VOTE_RTOL = 1e-6
+
+
+def normalize_integrity(mode: str | None) -> str:
+    """Validate an integrity mode string (None means "off")."""
+    mode = "off" if mode is None else mode
+    if mode not in INTEGRITY_MODES:
+        raise ValueError(
+            f"unknown integrity mode {mode!r}; expected one of {INTEGRITY_MODES}"
+        )
+    return mode
+
 
 def normalize_straggler(policy: str | None) -> str:
     """Validate a straggler policy string (None means "none")."""
@@ -113,7 +156,8 @@ def traversal_round(
     omega: jnp.ndarray,  # f32 [n_rows] 1-degree weights (operator's rows)
     *,
     num_levels: int | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    integrity: str = "off",
+) -> tuple[jnp.ndarray, ...]:
     """One BC round against the operator protocol.
 
     Returns
@@ -128,7 +172,17 @@ def traversal_round(
                 0 for an all-padding round.  This is the data-dependent
                 cost signal the straggler scheduler attributes wall time
                 by.
+
+    With ``integrity != "off"`` (see :data:`INTEGRITY_MODES`) a fifth
+    element is returned: ``integ`` f32 [2] = ``[err, claim]`` — the
+    round's max ABFT checksum residual (0 in "audit" mode, where the
+    checked level steps don't run) and the round's own bc-sum claim
+    (``Σ bc_local`` over the whole replica, computed *before* the block
+    leaves the device, so the driver can detect corruption in transit
+    or in the accumulate path).
     """
+    integrity = normalize_integrity(integrity)
+    checksum = integrity == "checksum"
     op = as_operator(operator)
     omega_f = omega.astype(jnp.float32)
     row_ids = op.row_ids()
@@ -137,7 +191,9 @@ def traversal_round(
     src_onehot = (
         (row_ids[:, None] == sources[None, :]) & (sources[None, :] >= 0)
     ).astype(jnp.float32)
-    fwd = engine.forward_counting(op, src_onehot, num_levels=num_levels)
+    fwd = engine.forward_counting(
+        op, src_onehot, num_levels=num_levels, checksum=checksum
+    )
 
     # ------------------------------------------- derived 2-degree columns
     sigma_c, depth_c = derive_two_degree_columns(
@@ -152,9 +208,16 @@ def traversal_round(
     # reduction total when sync_axes is empty (reduce_max_sync is a no-op)
     grid_max = op.reduce_max_grid(jnp.max(depth_all))
     max_depth = op.reduce_max_sync(grid_max)
-    delta = engine.backward_accumulation(
-        op, sigma_all, depth_all, omega_f, max_depth, num_levels=num_levels
+    bwd = engine.backward_accumulation(
+        op,
+        sigma_all,
+        depth_all,
+        omega_f,
+        max_depth,
+        num_levels=num_levels,
+        checksum=checksum,
     )
+    delta, bwd_err = bwd if checksum else (bwd, None)
 
     # --------------------------------------------------------- BC + n_s
     roots = jnp.concatenate([sources, derived[:, 0]])
@@ -168,7 +231,20 @@ def traversal_round(
     # per-column component size  n_s = Σ_{d ≥ 0} (1 + ω)   (paper §3.4.1)
     ns = op.reduce_sum(((depth_all >= 0) * (1.0 + omega_f)[:, None]).sum(axis=0))
     levels = (grid_max + 1).astype(jnp.int32)
-    return bc_local, ns, roots, levels
+    if integrity == "off":
+        return bc_local, ns, roots, levels
+    # [err, claim]: the replica's max ABFT residual (grid-agreed, so it
+    # is replicated like ns) and its own bc-sum claim.  Both are f32
+    # scalars computed before the block crosses the device boundary.
+    claim = op.reduce_sum(jnp.sum(bc_local))
+    if checksum:
+        err = op.reduce_max_grid(jnp.maximum(fwd.check_err, bwd_err))
+    else:
+        err = jnp.float32(0.0)
+    integ = jnp.stack(
+        [jnp.asarray(err, jnp.float32), jnp.asarray(claim, jnp.float32)]
+    )
+    return bc_local, ns, roots, levels, integ
 
 
 def apply_reduction_corrections(
@@ -218,15 +294,22 @@ class BCResult:
     #   set by BCDriver): retries, transient_errors, quarantined_blocks,
     #   fallback_recomputes, remesh_events, dead_replicas,
     #   resumed_generation (BCCheckpoint generation the run resumed
-    #   from; None = cold start / no checkpoint).
+    #   from; None = cold start / no checkpoint), plus the "integrity"
+    #   sub-dict (mode, checksum/audit failures, max residual, duplicate
+    #   votes + verdicts, quarantined rounds, watchdog trips /
+    #   re-dispatches / escalations).
 
 
 def _unpack_block(out):
-    """Accept 3-tuple (legacy) or 4-tuple round_fn outputs."""
+    """Normalize a round_fn output to the 5-tuple
+    ``(bc, ns, roots, levels, integ)`` — legacy 3-tuples (no levels) and
+    4-tuples (no integrity record) get ``None`` in the missing slots."""
+    if len(out) == 5:
+        return tuple(out)
     if len(out) == 4:
-        return out
+        return tuple(out) + (None,)
     bc_blk, ns, roots = out
-    return bc_blk, ns, roots, None
+    return bc_blk, ns, roots, None, None
 
 
 class BCDriver:
@@ -299,6 +382,10 @@ class BCDriver:
         fallback_round_fn: Callable | None = None,
         mesh_shape: tuple[int, ...] | None = None,
         mesh_axes: tuple[str, ...] | None = None,
+        integrity: str = "off",
+        dispatch_deadline_s: float | None = None,
+        clock: Callable[[], float] | None = None,
+        sleeper: Callable[[float], None] | None = None,
     ):
         self.round_fn = round_fn
         self.profile = profile
@@ -351,8 +438,51 @@ class BCDriver:
             "dead_replicas": [],
             "resumed_generation": None,
         }
+        # ---------------------------------------------------- integrity
+        self.integrity = normalize_integrity(integrity)
+        if dispatch_deadline_s is not None and float(dispatch_deadline_s) <= 0:
+            raise ValueError(
+                f"dispatch_deadline_s must be positive, got {dispatch_deadline_s}"
+            )
+        self.dispatch_deadline_s = (
+            None if dispatch_deadline_s is None else float(dispatch_deadline_s)
+        )
+        # injectable time sources: the watchdog measures the dispatch
+        # call window through ``clock`` and the retry backoff sleeps
+        # through ``sleeper``, so chaos/watchdog tests drive both with
+        # fakes instead of burning wall-clock
+        self._clock = clock if clock is not None else time.monotonic
+        self._sleep = sleeper if sleeper is not None else time.sleep
+        self.recovery["integrity"] = {
+            "mode": self.integrity,
+            "checksum_failures": 0,
+            "audit_failures": 0,
+            "max_checksum_residual": 0.0,
+            "votes": 0,
+            "vote_mismatches": 0,
+            "vote_verdicts": [],
+            "quarantined_rounds": 0,
+            "watchdog_trips": 0,
+            "watchdog_redispatches": 0,
+            "watchdog_escalations": 0,
+        }
+        #: rid -> {"owner": digest, "duplicate": digest} for rounds whose
+        #: duplicate vote disagreed; resolved (verdict recorded) when the
+        #: tie-breaker re-dispatch commits cleanly
+        self._pending_votes: dict[int, dict] = {}
         self._finite_check = jax.jit(
             lambda bc, ns: jnp.isfinite(bc).all() & jnp.isfinite(ns).all()
+        )
+        # per-lane bc digests for the claim audit and the duplicate vote:
+        # (lane sums, global min, global max) in one fetch
+        self._block_digest = jax.jit(
+            lambda bc: (
+                bc.reshape(bc.shape[0], -1).sum(axis=1)
+                if bc.ndim > 1
+                else bc.sum()[None],
+                bc.min(),
+                bc.max(),
+            )
         )
 
         from repro.distributed.fault_tolerance import (
@@ -402,6 +532,30 @@ class BCDriver:
                     gen,
                     " (newer snapshots were corrupt)" if gen > 0 else "",
                 )
+            # resume the recovery telemetry the snapshot carried, so a
+            # kill-and-resume keeps its retry/quarantine/re-mesh history
+            # instead of resetting the counters to zero
+            stored = getattr(checkpoint, "loaded_stats", None)
+            if stored:
+                for key in (
+                    "retries",
+                    "transient_errors",
+                    "quarantined_blocks",
+                    "fallback_recomputes",
+                    "remesh_events",
+                ):
+                    self.recovery[key] = int(stored.get(key, 0))
+                sint = stored.get("integrity") or {}
+                ist = self.recovery["integrity"]
+                for key in list(ist):
+                    if key == "mode":
+                        continue
+                    if key == "vote_verdicts":
+                        ist[key] = list(sint.get(key, []))
+                    elif key == "max_checksum_residual":
+                        ist[key] = float(sint.get(key, 0.0))
+                    else:
+                        ist[key] = int(sint.get(key, 0))
         # donated device-side accumulate: bc never round-trips per round
         self._accumulate = jax.jit(lambda acc, x: acc + x, donate_argnums=(0,))
         # drain-time masked accumulate (straggler modes): the commit
@@ -416,23 +570,96 @@ class BCDriver:
         self._masked_scale = jax.jit(_bmask)
 
     # ---------------------------------------------------- self-healing
+    def _stats_state(self) -> dict:
+        """JSON-serializable recovery telemetry for the checkpoint."""
+        out = {
+            k: (list(v) if isinstance(v, list) else v)
+            for k, v in self.recovery.items()
+            if k not in ("resumed_generation", "integrity")
+        }
+        ist = self.recovery["integrity"]
+        out["integrity"] = {
+            k: (list(v) if isinstance(v, list) else v) for k, v in ist.items()
+        }
+        return out
+
+    def _integrity_audit(self, out) -> str | None:
+        """Audit one block's output; return a failure reason or None.
+
+        Host-side, at a point where the loop already syncs (the audit
+        itself fetches the block digest).  Checks, in order: the ABFT
+        checksum residual carried in the integrity record ("checksum"
+        mode), the per-lane bc-sum claim vs the recomputed lane digest,
+        BC non-negativity, and the level / component-size output-domain
+        bounds.  Every check is O(fr + s) host work on already-reduced
+        scalars — the O(n·s) work stayed on device.
+        """
+        bc_blk, ns, roots, levels, integ = out
+        ist = self.recovery["integrity"]
+        sums_dev, mn_dev, mx_dev = self._block_digest(bc_blk)
+        sums = np.asarray(jax.device_get(sums_dev), np.float64).reshape(-1)
+        mn = float(jax.device_get(mn_dev))
+        scale = max(1.0, float(np.abs(sums).max()))
+        if integ is not None:
+            ig = np.asarray(jax.device_get(integ), np.float64).reshape(-1, 2)
+            resid = float(ig[:, 0].max())
+            ist["max_checksum_residual"] = max(
+                ist["max_checksum_residual"], resid
+            )
+            if resid > CHECKSUM_TOL:
+                return (
+                    f"ABFT checksum residual {resid:.3e} exceeds "
+                    f"{CHECKSUM_TOL:g}"
+                )
+            claims = ig[:, 1]
+            if claims.shape[0] == sums.shape[0]:
+                diff = float(np.abs(claims - sums).max())
+                if diff > CLAIM_RTOL * scale:
+                    return (
+                        f"bc-sum claim mismatch: |claim - sum| = {diff:.3e} "
+                        f"(scale {scale:.3e})"
+                    )
+        if mn < -CLAIM_RTOL * scale:
+            return f"negative BC contribution (min {mn:.3e})"
+        if levels is not None:
+            lv = np.asarray(jax.device_get(levels)).reshape(-1)
+            if lv.min() < 0 or lv.max() > self.n + 1:
+                return f"level bound violation (levels {lv.tolist()})"
+        ns_np = np.asarray(jax.device_get(ns), np.float64)
+        ns_max = float(ns_np.max()) if ns_np.size else 0.0
+        if ns_max > self.n * (1.0 + 1e-5) + 1e-6:
+            return f"component size {ns_max:.6g} exceeds n = {self.n}"
+        return None
+
     def _dispatch_block(self, srcs, ders):
         """Run ``round_fn`` on one dispatch block with recovery.
 
         Transient failures (:func:`repro.distributed.fault_tolerance.
         is_transient_error`) are retried in place with exponential
-        backoff, up to ``max_retries`` re-dispatches per block.  Under
-        the numeric guard a block whose bc/ns came back non-finite is
-        *quarantined* — never accumulated — and re-dispatched from the
-        same budget; if the poison persists the block is recomputed via
-        ``fallback_round_fn`` (the caller's known-good dense path) with
-        a fresh budget.  :class:`ReplicaLostError` always propagates:
-        in-place retry cannot resurrect devices — the multi-ledger loop
-        re-meshes instead.  Returns the unpacked 4-tuple.
+        backoff, up to ``max_retries`` re-dispatches per block.  A
+        ``dispatch_deadline_s`` arms the **watchdog**: a dispatch call
+        that returns only after the deadline is treated as a wedged
+        collective — re-dispatched from the retry budget, then escalated
+        as :class:`ReplicaLostError` so the multi-ledger loop re-meshes
+        around the suspect replica (the static loop propagates it — it
+        has no spare lanes to absorb a loss).  Under the numeric guard a
+        block whose bc/ns came back non-finite is *quarantined* — never
+        accumulated — and re-dispatched from the same budget; if the
+        poison persists the block is recomputed via ``fallback_round_fn``
+        (the caller's known-good dense path) with a fresh budget.
+        ``integrity != "off"`` runs :meth:`_integrity_audit` on every
+        block with the identical quarantine → re-dispatch → fallback →
+        raise ladder (terminal error:
+        :class:`repro.distributed.fault_tolerance.IntegrityError`).
+        :class:`ReplicaLostError` from the round_fn always propagates:
+        in-place retry cannot resurrect devices.  Returns the unpacked
+        5-tuple.
         """
-        import time
-
-        from repro.distributed.fault_tolerance import is_transient_error
+        from repro.distributed.fault_tolerance import (
+            IntegrityError,
+            ReplicaLostError,
+            is_transient_error,
+        )
 
         srcs_dev = jnp.asarray(srcs)
         ders_dev = jnp.asarray(ders)
@@ -440,7 +667,13 @@ class BCDriver:
         attempt = 0
         while True:
             try:
+                t0 = self._clock()
                 out = _unpack_block(fn(srcs_dev, ders_dev))
+                if self.dispatch_deadline_s is not None:
+                    # measure to completion of the dispatched values: the
+                    # deadline covers a wedged collective inside the call
+                    jax.block_until_ready(out[0])
+                elapsed = self._clock() - t0
             except Exception as e:
                 if is_transient_error(e) and attempt < self.max_retries:
                     backoff = self.retry_backoff_s * (2.0 ** attempt)
@@ -452,10 +685,34 @@ class BCDriver:
                         type(e).__name__, e, attempt + 1, self.max_retries,
                         backoff,
                     )
-                    time.sleep(backoff)
+                    self._sleep(backoff)
                     attempt += 1
                     continue
                 raise
+            if (
+                self.dispatch_deadline_s is not None
+                and elapsed > self.dispatch_deadline_s
+            ):
+                ist = self.recovery["integrity"]
+                ist["watchdog_trips"] += 1
+                if attempt < self.max_retries:
+                    ist["watchdog_redispatches"] += 1
+                    self.recovery["retries"] += 1
+                    logger.warning(
+                        "dispatch watchdog: block took %.3fs > deadline "
+                        "%.3fs; re-dispatching (%d/%d)",
+                        elapsed, self.dispatch_deadline_s,
+                        attempt + 1, self.max_retries,
+                    )
+                    attempt += 1
+                    continue
+                ist["watchdog_escalations"] += 1
+                raise ReplicaLostError(
+                    -1,
+                    f"dispatch exceeded its {self.dispatch_deadline_s:.3f}s "
+                    f"deadline {attempt + 1} times (last {elapsed:.3f}s); "
+                    f"treating a replica as wedged",
+                )
             if self.numeric_guard and not bool(
                 self._finite_check(out[0], out[1])
             ):
@@ -490,6 +747,46 @@ class BCDriver:
                         else " (no fallback_round_fn supplied)"
                     )
                 )
+            if self.integrity != "off":
+                reason = self._integrity_audit(out)
+                if reason is not None:
+                    ist = self.recovery["integrity"]
+                    if "checksum" in reason:
+                        ist["checksum_failures"] += 1
+                    else:
+                        ist["audit_failures"] += 1
+                    self.recovery["quarantined_blocks"] += 1
+                    if attempt < self.max_retries:
+                        self.recovery["retries"] += 1
+                        logger.warning(
+                            "integrity audit failed (%s); block quarantined, "
+                            "re-dispatching (%d/%d)",
+                            reason, attempt + 1, self.max_retries,
+                        )
+                        attempt += 1
+                        continue
+                    if (
+                        self.fallback_round_fn is not None
+                        and fn is not self.fallback_round_fn
+                    ):
+                        self.recovery["fallback_recomputes"] += 1
+                        logger.warning(
+                            "integrity failure persists after %d "
+                            "re-dispatches (%s); recomputing via the "
+                            "fallback round_fn", self.max_retries, reason,
+                        )
+                        fn = self.fallback_round_fn
+                        attempt = 0
+                        continue
+                    raise IntegrityError(
+                        f"round block failed its integrity audit ({reason}) "
+                        f"through {self.max_retries} re-dispatches"
+                        + (
+                            " and the fallback round_fn"
+                            if self.fallback_round_fn is not None
+                            else " (no fallback_round_fn supplied)"
+                        )
+                    )
             return out
 
     # ------------------------------------------------------- legacy deal
@@ -580,12 +877,13 @@ class BCDriver:
             while inflight:
                 drain_one()
             self.checkpoint.save(
-                self._collect_bc(bc_acc), ns_by_root, drained, self._fingerprint
+                self._collect_bc(bc_acc), ns_by_root, drained, self._fingerprint,
+                stats=self._stats_state(),
             )
 
         for srcs, ders, live in self._blocks():
             t_blk = time.perf_counter()
-            bc_blk, ns, roots, _levels = self._dispatch_block(srcs, ders)
+            bc_blk, ns, roots, _levels, _integ = self._dispatch_block(srcs, ders)
             if block_times is not None:  # profile: sync to time this block
                 jax.block_until_ready(bc_blk)
                 block_times.append(time.perf_counter() - t_blk)
@@ -778,6 +1076,7 @@ class BCDriver:
                 ns_by_root,
                 [led.state() for led in self.ledgers],
                 self._fingerprint,
+                stats=self._stats_state(),
             )
 
         while any(queues):
@@ -849,9 +1148,23 @@ class BCDriver:
             try:
                 out = self._dispatch_block(srcs, ders)
             except ReplicaLostError as e:
+                if int(getattr(e, "replica", -1)) < 0:
+                    # unattributed loss (the watchdog escalated a wedged
+                    # dispatch without knowing *which* lane hung): suspect
+                    # the slowest live lane by EWMA — the one most likely
+                    # to be the straggling/wedged participant
+                    cands = [
+                        r for r in alive if lane_rids[r] is not None
+                    ] or alive
+                    suspect = max(cands, key=est)
+                    e = ReplicaLostError(
+                        suspect,
+                        f"{e}; suspecting replica {suspect} "
+                        f"(slowest EWMA among the dispatched lanes)",
+                    )
                 on_replica_loss(e, lane_rids, duplicate)
                 continue
-            bc_blk, ns_dev, roots_dev, levels_dev = out
+            bc_blk, ns_dev, roots_dev, levels_dev, _integ = out
             if levels_dev is None:
                 raise ValueError(
                     "straggler scheduling needs a round_fn returning "
@@ -896,6 +1209,57 @@ class BCDriver:
                 )
                 stats["idle_s_est"] += wall * idle_frac
 
+            # ---------------------- duplicate vote (free DMR, steal tail)
+            # a speculatively duplicated round ran the identical
+            # deterministic computation on two replica lanes — compare
+            # their bc digests; a mismatch means one lane produced
+            # silently corrupt data, so neither copy can be trusted:
+            # quarantine the round (no commit, both lanes masked to zero)
+            # and re-dispatch it to its owner as the tie-breaker vote.
+            quarantined_rids: set[int] = set()
+            lane_sums = None
+            if self.integrity != "off" and (
+                any(duplicate) or self._pending_votes
+            ):
+                lane_sums = np.asarray(
+                    jax.device_get(self._block_digest(bc_blk)[0]), np.float64
+                ).reshape(-1)
+            if lane_sums is not None and any(duplicate):
+                ist = self.recovery["integrity"]
+                for r in range(fr):
+                    if not duplicate[r]:
+                        continue
+                    rid = lane_rids[r]
+                    owner = next(
+                        o for o in range(fr)
+                        if lane_rids[o] == rid and not duplicate[o]
+                    )
+                    ist["votes"] += 1
+                    vscale = max(
+                        1.0, abs(lane_sums[owner]), abs(lane_sums[r])
+                    )
+                    if (
+                        abs(lane_sums[r] - lane_sums[owner])
+                        > VOTE_RTOL * vscale
+                    ):
+                        ist["vote_mismatches"] += 1
+                        if rid in quarantined_rids:
+                            continue  # already requeued by another copy
+                        ist["quarantined_rounds"] += 1
+                        quarantined_rids.add(rid)
+                        self._pending_votes[rid] = {
+                            "owner": float(lane_sums[owner]),
+                            "duplicate": float(lane_sums[r]),
+                        }
+                        queues[owner].insert(0, rid)
+                        logger.warning(
+                            "duplicate-vote mismatch on round %d "
+                            "(owner lane %d sum %.6g vs duplicate lane %d "
+                            "sum %.6g); round quarantined, re-dispatching "
+                            "as tie-breaker",
+                            rid, owner, lane_sums[owner], r, lane_sums[r],
+                        )
+
             # -------------------------- drain: commit-or-discard + add
             # originals commit before their speculative duplicates, so a
             # backup copy never out-commits the lane that owns the round
@@ -906,7 +1270,7 @@ class BCDriver:
             ns_np = np.asarray(ns_dev, np.float64)
             for r in sorted(range(fr), key=lambda r: duplicate[r]):
                 rid = lane_rids[r]
-                if rid is None:
+                if rid is None or rid in quarantined_rids:
                     continue
                 if self._try_commit(r, rid):
                     mask[r] = 1.0
@@ -919,6 +1283,29 @@ class BCDriver:
                     for root, nv in zip(roots_np[r], ns_np[r]):
                         if root >= 0:
                             ns_by_root[int(root)] = float(nv)
+                    pend = self._pending_votes.pop(rid, None)
+                    if pend is not None and lane_sums is not None:
+                        # tie-breaker verdict: which original lane agreed
+                        # with this clean recompute (i.e. was correct)
+                        tie = float(lane_sums[r])
+
+                        def close(a, b):
+                            return abs(a - b) <= VOTE_RTOL * max(
+                                1.0, abs(a), abs(b)
+                            )
+
+                        matched = (
+                            "owner" if close(tie, pend["owner"])
+                            else "duplicate" if close(tie, pend["duplicate"])
+                            else "neither"
+                        )
+                        self.recovery["integrity"]["vote_verdicts"].append(
+                            {"round": int(rid), "matched": matched}
+                        )
+                        logger.warning(
+                            "duplicate-vote tie-breaker for round %d: "
+                            "the %s lane was correct", rid, matched,
+                        )
                 elif duplicate[r]:
                     stats["duplicates_discarded"] += 1
             mask_dev = jnp.asarray(mask)

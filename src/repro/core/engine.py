@@ -60,6 +60,9 @@ class ForwardState(NamedTuple):
     sigma: jnp.ndarray  # f32 [n, s] shortest-path counts
     depth: jnp.ndarray  # i32 [n, s] discovery level (-1 = unreached)
     max_depth: jnp.ndarray  # i32 [] deepest level discovered
+    # f32 [] max ABFT checksum residual over all levels (checksum=True
+    # runs only; None otherwise — see operators.forward_level_checked)
+    check_err: jnp.ndarray | None = None
 
 
 def make_dense_operator(adjacency: jnp.ndarray) -> DenseOperator:
@@ -76,6 +79,8 @@ def forward_counting(
     operator: TraversalOperator | Operator,
     src_onehot: jnp.ndarray,
     num_levels: int | None = None,
+    *,
+    checksum: bool = False,
 ) -> ForwardState:
     """Multi-source shortest-path counting (Alg. 2 analogue).
 
@@ -88,40 +93,61 @@ def forward_counting(
                   int  → ``lax.fori_loop`` with that static trip count
                   (dry-run / roofline path, so XLA records
                   ``known_trip_count``; extra levels are no-ops).
+      checksum:   run the ABFT-checked level steps and carry the running
+                  max column-sum residual in ``ForwardState.check_err``
+                  (state shapes are unchanged — the lane is transient
+                  inside each level).
     """
     op = as_operator(operator)
     if op.n_rows < 0:
         op.n_rows = src_onehot.shape[0]
     sigma0 = src_onehot.astype(jnp.float32)
     depth0 = jnp.where(src_onehot > 0, 0, -1).astype(jnp.int32)
+    err0 = jnp.float32(0.0)
 
     if num_levels is None:
         cap = op.level_cap()
 
         def cond(carry):
-            _, _, lvl, alive = carry
-            return alive & (lvl <= cap)
+            return carry[3] & (carry[2] <= cap)
 
         def body(carry):
-            sigma, depth, lvl, _ = carry
-            sigma, depth, local_alive = op.forward_level(lvl, sigma, depth)
-            return sigma, depth, lvl + 1, op.reduce_any(local_alive)
+            sigma, depth, lvl, _, err = carry
+            if checksum:
+                sigma, depth, local_alive, lerr = op.forward_level_checked(
+                    lvl, sigma, depth
+                )
+                err = jnp.maximum(err, lerr)
+            else:
+                sigma, depth, local_alive = op.forward_level(lvl, sigma, depth)
+            return sigma, depth, lvl + 1, op.reduce_any(local_alive), err
 
-        sigma, depth, lvl, _ = jax.lax.while_loop(
-            cond, body, (sigma0, depth0, jnp.int32(1), jnp.bool_(True))
+        sigma, depth, lvl, _, err = jax.lax.while_loop(
+            cond, body, (sigma0, depth0, jnp.int32(1), jnp.bool_(True), err0)
         )
         max_depth = lvl - 2  # last level that discovered anything
     else:
 
         def fbody(k, carry):
-            sigma, depth = carry
-            sigma, depth, _ = op.forward_level(k + 1, sigma, depth)
-            return sigma, depth
+            sigma, depth, err = carry
+            if checksum:
+                sigma, depth, _, lerr = op.forward_level_checked(k + 1, sigma, depth)
+                err = jnp.maximum(err, lerr)
+            else:
+                sigma, depth, _ = op.forward_level(k + 1, sigma, depth)
+            return sigma, depth, err
 
-        sigma, depth = jax.lax.fori_loop(0, num_levels, fbody, (sigma0, depth0))
+        sigma, depth, err = jax.lax.fori_loop(
+            0, num_levels, fbody, (sigma0, depth0, err0)
+        )
         max_depth = op.reduce_max(jnp.max(depth))
 
-    return ForwardState(sigma=sigma, depth=depth, max_depth=max_depth.astype(jnp.int32))
+    return ForwardState(
+        sigma=sigma,
+        depth=depth,
+        max_depth=max_depth.astype(jnp.int32),
+        check_err=err if checksum else None,
+    )
 
 
 def backward_accumulation(
@@ -131,6 +157,8 @@ def backward_accumulation(
     omega: jnp.ndarray,
     max_depth: jnp.ndarray | int,
     num_levels: int | None = None,
+    *,
+    checksum: bool = False,
 ) -> jnp.ndarray:
     """Dependency accumulation (Alg. 4/5 analogue, checking successors).
 
@@ -141,30 +169,48 @@ def backward_accumulation(
     columns of different depths are handled by masking (this is what makes
     the 2-degree "Dynamic Merging of Frontiers" implicit — see
     heuristics/two_degree.py).
+
+    With ``checksum=True`` every level runs the ABFT-checked step and the
+    return value is the pair ``(δ, err)`` — ``err`` the f32 max relative
+    column-sum residual across the sweep.
     """
     op = as_operator(operator)
     omega_f = omega.astype(jnp.float32)
     delta0 = jnp.zeros_like(sigma)
+    err0 = jnp.float32(0.0)
 
     if num_levels is None:
 
         def cond(carry):
-            _, lvl = carry
-            return lvl >= 1
+            return carry[1] >= 1
 
         def body(carry):
-            delta, lvl = carry
-            delta = op.backward_level(lvl, sigma, depth, omega_f, delta)
-            return delta, lvl - 1
+            delta, lvl, err = carry
+            if checksum:
+                delta, lerr = op.backward_level_checked(
+                    lvl, sigma, depth, omega_f, delta
+                )
+                err = jnp.maximum(err, lerr)
+            else:
+                delta = op.backward_level(lvl, sigma, depth, omega_f, delta)
+            return delta, lvl - 1, err
 
         start = jnp.asarray(max_depth, jnp.int32) - 1
-        delta, _ = jax.lax.while_loop(cond, body, (delta0, start))
+        delta, _, err = jax.lax.while_loop(cond, body, (delta0, start, err0))
     else:
 
-        def fbody(k, delta):
+        def fbody(k, carry):
+            delta, err = carry
             lvl = num_levels - 1 - k  # static bound; masked no-ops when deep
-            return op.backward_level(lvl, sigma, depth, omega_f, delta)
+            if checksum:
+                delta, lerr = op.backward_level_checked(
+                    lvl, sigma, depth, omega_f, delta
+                )
+                err = jnp.maximum(err, lerr)
+            else:
+                delta = op.backward_level(lvl, sigma, depth, omega_f, delta)
+            return delta, err
 
-        delta = jax.lax.fori_loop(0, num_levels - 1, fbody, delta0)
+        delta, err = jax.lax.fori_loop(0, num_levels - 1, fbody, (delta0, err0))
 
-    return delta
+    return (delta, err) if checksum else delta

@@ -142,6 +142,43 @@ def _backward_level(op: "TraversalOperator", lvl, sigma, depth, omega, delta):
     return delta + jnp.where(depth == lvl, sigma * t, 0.0)
 
 
+def _forward_level_checked(op: "TraversalOperator", lvl, sigma, depth):
+    """:func:`_forward_level` with a transient ABFT ones-checksum lane.
+
+    The lane is appended to the masked frontier just before the SpMM and
+    stripped right after — it never enters the loop carry, so σ/d stay
+    [n, s] everywhere and liveness / max-depth are unpolluted.  Returns
+    the usual triple plus the relative column-sum residual of this
+    level's product (f32 scalar, row-local — no extra collectives).
+    """
+    from repro.kernels.ops import checksum_append, checksum_residual
+
+    frontier = sigma * (depth == lvl - 1)
+    t = op.apply(checksum_append(frontier))
+    err = checksum_residual(t)
+    contrib = t[:, :-1]
+    newly = (contrib > 0) & (depth < 0)
+    depth = jnp.where(newly, lvl, depth)
+    sigma = sigma + jnp.where(newly, contrib, 0.0)
+    return sigma, depth, newly.any(), err
+
+
+def _backward_level_checked(op: "TraversalOperator", lvl, sigma, depth, omega, delta):
+    """:func:`_backward_level` with a transient ABFT ones-checksum lane.
+
+    Same transient-lane contract as :func:`_forward_level_checked`:
+    the lane rides only the ``A @ g`` product; δ stays [n, s].
+    """
+    from repro.kernels.ops import checksum_append, checksum_residual
+
+    omega_col = omega.astype(jnp.float32)[:, None]
+    safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+    g = jnp.where(depth == lvl + 1, (1.0 + delta + omega_col) / safe_sigma, 0.0)
+    t = op.apply_backward(checksum_append(g))
+    err = checksum_residual(t)
+    return delta + jnp.where(depth == lvl, sigma * t[:, :-1], 0.0), err
+
+
 class TraversalOperator:
     """Protocol base: single-device semantics, no collectives."""
 
@@ -165,6 +202,20 @@ class TraversalOperator:
     def backward_level(self, lvl, sigma, depth, omega, delta):
         """Running δ -> δ' for one dependency level (ω is f32 [n_rows])."""
         return _backward_level(self, lvl, sigma, depth, omega, delta)
+
+    def forward_level_checked(self, lvl, sigma, depth):
+        """:meth:`forward_level` + the level's ABFT checksum residual.
+
+        Returns ``(σ', d', local_alive, err)`` where ``err`` is the
+        relative column-sum residual of the checksum-extended SpMM (see
+        :func:`repro.kernels.ops.checksum_residual`).  The lane is
+        transient — state shapes are identical to the unchecked step.
+        """
+        return _forward_level_checked(self, lvl, sigma, depth)
+
+    def backward_level_checked(self, lvl, sigma, depth, omega, delta):
+        """:meth:`backward_level` + the level's ABFT checksum residual."""
+        return _backward_level_checked(self, lvl, sigma, depth, omega, delta)
 
     # ------------------------------------------- collective agreements
     def reduce_any(self, alive: jnp.ndarray) -> jnp.ndarray:
@@ -313,6 +364,47 @@ class PallasDenseOperator(TraversalOperator):
             lvl,
             interpret=self.interpret,
         )
+
+    # The fused square kernels never expose the raw product t, so the
+    # checked steps route through the *partial* kernels instead, with the
+    # checksum lane encoded as one extra in-kernel operand column: the
+    # kernel recomputes frontier/g from (σ, d, δ, ω), so the lane's
+    # operands are chosen to make the recompute land on the column sum —
+    # forward σ_c = Σ_j σ_j·[d_j = lvl-1], d_c = lvl-1; backward σ_c = 1,
+    # d_c = lvl+1, δ_c = Σ_j g_j - 1 - ω (then g_c = (1+δ_c+ω)/1 = Σ_j g_j).
+
+    def forward_level_checked(self, lvl, sigma, depth):
+        from repro.kernels import ops as kops
+
+        fsum = (sigma * (depth == lvl - 1)).sum(axis=1, keepdims=True)
+        sg = jnp.concatenate([sigma, fsum], axis=1)
+        dp = jnp.concatenate([depth, jnp.full_like(depth[:, :1], lvl - 1)], axis=1)
+        t = kops.frontier_spmm_partial(
+            self.adjacency, sg, dp, lvl, interpret=self.interpret
+        )
+        err = kops.checksum_residual(t)
+        contrib = t[:, :-1]
+        newly = (contrib > 0) & (depth < 0)
+        depth2 = jnp.where(newly, lvl, depth)
+        sigma2 = sigma + jnp.where(newly, contrib, 0.0)
+        return sigma2, depth2, newly.any(), err
+
+    def backward_level_checked(self, lvl, sigma, depth, omega, delta):
+        from repro.kernels import ops as kops
+
+        om = omega.astype(jnp.float32)
+        safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+        g = jnp.where(depth == lvl + 1, (1.0 + delta + om[:, None]) / safe_sigma, 0.0)
+        sg = jnp.concatenate([sigma, jnp.ones_like(sigma[:, :1])], axis=1)
+        dp = jnp.concatenate([depth, jnp.full_like(depth[:, :1], lvl + 1)], axis=1)
+        dl = jnp.concatenate(
+            [delta, g.sum(axis=1, keepdims=True) - 1.0 - om[:, None]], axis=1
+        )
+        t = kops.dependency_spmm_partial(
+            self.adjacency, sg, dp, dl, om, lvl, interpret=self.interpret
+        )
+        err = kops.checksum_residual(t)
+        return delta + jnp.where(depth == lvl, sigma * t[:, :-1], 0.0), err
 
 
 class DistributedOperator(TraversalOperator):
@@ -677,6 +769,72 @@ class DistributedPallasOperator(DistributedOperator):
             )
         t = self._fold_partial(partial)
         return delta + jnp.where(depth == lvl, sigma * t, 0.0)
+
+    # Checked level steps: same extend-operand trick as the single-device
+    # Pallas operator (the kernels recompute frontier/g in VMEM, so the
+    # checksum lane is encoded in the operands), threaded through the
+    # identical expand/ring + fold structure — the lane column survives
+    # all_gather / ppermute / psum_scatter because each is linear per
+    # column, so one residual on the folded t audits the whole pipeline.
+    # The sparse and hybrid subclasses inherit these via the block hooks.
+
+    def forward_level_checked(self, lvl, sigma, depth):
+        from repro.kernels import ops as kops
+
+        fsum = (sigma * (depth == lvl - 1)).sum(axis=1, keepdims=True)
+        sg = jnp.concatenate([sigma, fsum], axis=1)
+        dp = jnp.concatenate([depth, jnp.full_like(depth[:, :1], lvl - 1)], axis=1)
+        if self.overlap == "none":
+            partial = self._partial_forward(
+                self._full_block(), self._expand(sg), self._expand(dp), lvl
+            )
+        else:
+            partial = self._ring_steps(
+                (sg, dp),
+                lambda blk, hand, acc: self._partial_forward(
+                    blk, hand[0], hand[1], lvl, acc=acc
+                ),
+            )
+        t = self._fold_partial(partial)
+        err = kops.checksum_residual(t)
+        contrib = t[:, :-1]
+        newly = (contrib > 0) & (depth < 0)
+        depth2 = jnp.where(newly, lvl, depth)
+        sigma2 = sigma + jnp.where(newly, contrib, 0.0)
+        return sigma2, depth2, newly.any(), err
+
+    def backward_level_checked(self, lvl, sigma, depth, omega, delta):
+        from repro.kernels import ops as kops
+
+        omega_f = omega.astype(jnp.float32)
+        safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+        g = jnp.where(
+            depth == lvl + 1, (1.0 + delta + omega_f[:, None]) / safe_sigma, 0.0
+        )
+        sg = jnp.concatenate([sigma, jnp.ones_like(sigma[:, :1])], axis=1)
+        dp = jnp.concatenate([depth, jnp.full_like(depth[:, :1], lvl + 1)], axis=1)
+        dl = jnp.concatenate(
+            [delta, g.sum(axis=1, keepdims=True) - 1.0 - omega_f[:, None]], axis=1
+        )
+        if self.overlap == "none":
+            partial = self._partial_backward(
+                self._full_block(),
+                self._expand(sg),
+                self._expand(dp),
+                self._expand(dl),
+                self._expand(omega_f),
+                lvl,
+            )
+        else:
+            partial = self._ring_steps(
+                (sg, dp, dl, omega_f),
+                lambda blk, hand, acc: self._partial_backward(
+                    blk, hand[0], hand[1], hand[2], hand[3], lvl, acc=acc
+                ),
+            )
+        t = self._fold_partial(partial)
+        err = kops.checksum_residual(t)
+        return delta + jnp.where(depth == lvl, sigma * t[:, :-1], 0.0), err
 
 
 class DistributedPallasSparseOperator(DistributedPallasOperator):

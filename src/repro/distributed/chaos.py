@@ -43,11 +43,25 @@ counters (dispatch-call index, checkpoint-save index, cache-put index):
   ``cache``      garble the autotune cache JSON after its ``at``-th
                  persisted put — the next run must warm-start empty
                  with a warning, never traceback.
+  ``flip``       *finite* corruption of the block the ``at``-th dispatch
+                 returned (silent data corruption: a bit flip or bad
+                 reduction that the numeric guard cannot see).  Arg
+                 ``:rI`` scales lane I's bc (``2x+1``); ``:neg`` negates
+                 it (``-(x+1)``); ``:dI`` is the *deep* variant — lane
+                 I's bc is scaled (``2x``) AND the in-round bc-sum claim
+                 is recomputed to match, so only the duplicate-vote
+                 compare can catch it.  The driver's ``integrity`` audits
+                 must detect, quarantine and re-dispatch.
+  ``stall``      sleep ``:MS`` milliseconds (default 50) inside the
+                 ``at``-th dispatch call, through the driver-shared
+                 injectable sleeper — a wedged collective / hung
+                 participant.  Past ``dispatch_deadline_s`` the driver's
+                 watchdog must re-dispatch, then escalate to a re-mesh.
 
 A plan is constructed programmatically or parsed from the compact CLI
 spec of ``launch/bc.py --chaos``::
 
-    --chaos "seed=7;transient@1x2;poison@3:nan;kill@4:r1;torn@0;cache@0"
+    --chaos "seed=7;transient@1x2;poison@3:nan;kill@4:r1;flip@5;stall@6:200"
 
 entries are ``kind@at[xcount][:arg]`` separated by ``;`` or ``,``.
 """
@@ -78,8 +92,15 @@ __all__ = [
 #: ``--chaos`` spec grammar and the docs drift check (tools/check_docs.py):
 #: "transient" retryable raise | "poison" NaN/Inf block outputs |
 #: "kill" permanent replica loss | "crash" simulated process death |
-#: "torn" truncated snapshot write | "cache" corrupted autotune cache.
-FAULT_KINDS = ("transient", "poison", "kill", "crash", "torn", "cache")
+#: "torn" truncated snapshot write | "cache" corrupted autotune cache |
+#: "flip" finite (silent) corruption of a round output |
+#: "stall" delay a dispatch past its watchdog deadline.
+FAULT_KINDS = (
+    "transient", "poison", "kill", "crash", "torn", "cache", "flip", "stall"
+)
+
+#: Default injected stall, milliseconds (``stall@K`` with no ``:MS`` arg).
+DEFAULT_STALL_MS = 50.0
 
 _ENTRY_RE = re.compile(
     r"^(?P<kind>[a-z]+)@(?P<at>\d+)(?:x(?P<count>\d+))?(?::(?P<arg>[A-Za-z0-9_]+))?$"
@@ -119,6 +140,19 @@ class FaultEvent:
             if self.arg is None or not re.fullmatch(r"r\d+", self.arg):
                 raise ValueError(
                     f"kill needs a replica arg like ':r1', got {self.arg!r}"
+                )
+        if self.kind == "flip":
+            if self.arg is not None and not re.fullmatch(
+                r"r\d+|d\d+|neg", self.arg
+            ):
+                raise ValueError(
+                    f"flip arg must be ':rI' (scale lane I), ':dI' (deep: "
+                    f"claim fixed up too) or ':neg', got {self.arg!r}"
+                )
+        if self.kind == "stall":
+            if self.arg is not None and not re.fullmatch(r"\d+", self.arg):
+                raise ValueError(
+                    f"stall arg is a delay in milliseconds, got {self.arg!r}"
                 )
 
     def covers(self, tick: int) -> bool:
@@ -199,6 +233,26 @@ class FaultPlan:
         no end: ``count`` is ignored — loss is loss)."""
         return {int(e.arg[1:]) for e in self._of("kill") if call >= e.at}
 
+    def flip_at(self, call: int) -> tuple[str, int] | None:
+        """(mode, lane) of the finite corruption injected after dispatch
+        ``call`` returned — mode "scale" (``:rI``, the default lane 0),
+        "neg" (``:neg``), or "deep" (``:dI`` — the claim is fixed up so
+        only duplicate voting catches it) — or None."""
+        for e in self._of("flip"):
+            if e.covers(call):
+                arg = e.arg or "r0"
+                if arg == "neg":
+                    return ("neg", 0)
+                return ("deep" if arg[0] == "d" else "scale", int(arg[1:]))
+        return None
+
+    def stall_ms(self, call: int) -> float | None:
+        """Milliseconds to stall dispatch ``call`` (None = no stall)."""
+        for e in self._of("stall"):
+            if e.covers(call):
+                return float(e.arg) if e.arg is not None else DEFAULT_STALL_MS
+        return None
+
     def torn_save(self, save_idx: int) -> bool:
         return any(e.covers(save_idx) for e in self._of("torn"))
 
@@ -211,17 +265,22 @@ class ChaosRoundFn:
 
     Counts every invocation (retries advance the counter too, so a
     ``transient@KxN`` entry models N consecutive failed attempts) and
-    injects in a fixed order: crash, replica loss, transient raise,
-    output poison.  Replica loss fires only when the dead lane carries
-    live (non-padding) columns — after the driver's re-mesh deals the
-    dead lane padding only, the wrapper stays silent, like hardware
-    that fails when addressed.
+    injects in a fixed order: crash, replica loss, stall (a sleep
+    through the injectable ``sleeper``, before the wrapped call),
+    transient raise, then — after the call — output poison and the
+    finite ``flip`` corruption.  Replica loss fires only when the dead
+    lane carries live (non-padding) columns — after the driver's
+    re-mesh deals the dead lane padding only, the wrapper stays silent,
+    like hardware that fails when addressed.
     """
 
-    def __init__(self, round_fn, plan: FaultPlan):
+    def __init__(self, round_fn, plan: FaultPlan, sleeper=None):
+        import time
+
         self.round_fn = round_fn
         self.plan = FaultPlan.parse(plan)
         self.calls = 0
+        self._sleep = sleeper if sleeper is not None else time.sleep
 
     def __call__(self, sources, derived):
         import jax.numpy as jnp
@@ -236,6 +295,9 @@ class ChaosRoundFn:
                 raise ReplicaLostError(
                     r, f"chaos: replica {r} lost (dispatch {call})"
                 )
+        ms = self.plan.stall_ms(call)
+        if ms is not None:
+            self._sleep(ms / 1000.0)
         if self.plan.transient_at(call):
             raise TransientRoundError(
                 f"chaos: transient round failure at dispatch {call}"
@@ -245,6 +307,49 @@ class ChaosRoundFn:
         if mode is not None:
             bad = jnp.float32(jnp.nan if mode == "nan" else jnp.inf)
             out = (out[0] * bad, out[1] * bad) + tuple(out[2:])
+        flip = self.plan.flip_at(call)
+        if flip is not None:
+            out = self._apply_flip(out, *flip)
+        return out
+
+    @staticmethod
+    def _apply_flip(out, mode: str, lane: int):
+        """Finitely corrupt lane ``lane`` of the block's bc output.
+
+        "scale" → ``2x + 1`` (sum and values move — the claim audit or
+        the ABFT residual catches it); "neg" → ``-(x + 1)`` (guaranteed
+        negative values — the non-negativity audit's showcase); "deep"
+        → ``2x`` AND the integrity record's claim is recomputed from the
+        corrupted block, modeling corruption *upstream* of the claim —
+        invisible to the block audits, detectable only by comparing
+        duplicate lanes.
+        """
+        import jax.numpy as jnp
+
+        bc = out[0]
+        lanes = bc.shape[0] if bc.ndim > 1 else 1
+        if lane >= lanes:
+            return out
+        if mode == "neg":
+            def upd(x):
+                return -(x + 1.0)
+        elif mode == "deep":
+            def upd(x):
+                return 2.0 * x
+        else:
+            def upd(x):
+                return 2.0 * x + 1.0
+        bc = bc.at[lane].set(upd(bc[lane])) if bc.ndim > 1 else upd(bc)
+        out = (bc,) + tuple(out[1:])
+        if mode == "deep" and len(out) >= 5 and out[4] is not None:
+            integ = out[4]
+            claim = jnp.sum(bc[lane]) if bc.ndim > 1 else jnp.sum(bc)
+            integ = (
+                integ.at[lane, 1].set(claim)
+                if integ.ndim > 1
+                else integ.at[1].set(claim)
+            )
+            out = out[:4] + (integ,) + tuple(out[5:])
         return out
 
 

@@ -37,8 +37,21 @@ __all__ = [
     "schedule_fingerprint",
     "TransientRoundError",
     "ReplicaLostError",
+    "IntegrityError",
     "is_transient_error",
 ]
+
+
+class IntegrityError(RuntimeError):
+    """A round output failed its integrity audit beyond recovery.
+
+    Raised by the driver when a block keeps failing the ABFT checksum /
+    claim / output-domain audits (``integrity="audit"|"checksum"``) after
+    the re-dispatch budget and the clean-fallback recompute are both
+    exhausted — finite-but-wrong data that would otherwise silently enter
+    the BC accumulator.  Never retryable: by construction every retry
+    path was already tried.
+    """
 
 
 class TransientRoundError(RuntimeError):

@@ -39,6 +39,8 @@ __all__ = [
     "frontier_spmm_sparse",
     "dependency_spmm_sparse",
     "segment_bag",
+    "checksum_append",
+    "checksum_residual",
     "on_tpu",
 ]
 
@@ -85,6 +87,34 @@ def _pad_cols(bs: int, *pairs):
     return tuple(
         None if a is None else _pad_to(a, 1, bs, fill=f) for a, f in pairs
     )
+
+
+def checksum_append(x: jnp.ndarray) -> jnp.ndarray:
+    """Append the ABFT ones-checksum lane to a batched [n, s] operand.
+
+    The extra column is the row-wise sum of the real lanes, so after any
+    linear map ``t = A @ x`` (including the distributed expand / ring /
+    fold pipeline — all_gather, per-block partials and psum_scatter are
+    linear per column) the output's last column must equal the sum of
+    its real columns.  The lane rides the existing s-axis padding
+    machinery of the SpMM wrappers; :func:`checksum_residual` verifies
+    the invariant on the product.
+    """
+    return jnp.concatenate([x, x.sum(axis=1, keepdims=True)], axis=1)
+
+
+def checksum_residual(t: jnp.ndarray) -> jnp.ndarray:
+    """Relative ABFT residual of a checksum-extended SpMM product.
+
+    ``t`` is [n, s+1] with the ones-checksum lane last.  Returns the f32
+    scalar ``max_i |t[i, -1] - Σ_j t[i, j]| / (1 + Σ_j |t[i, j]|)`` —
+    ~1e-6 for a healthy f32 reduction, orders of magnitude larger when a
+    flipped bit or a bad partial fold broke the column-sum invariant.
+    """
+    real = t[:, :-1]
+    resid = jnp.abs(t[:, -1] - real.sum(axis=1))
+    scale = 1.0 + jnp.abs(real).sum(axis=1)
+    return jnp.max(resid / scale).astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "bm", "bk", "bs"))

@@ -48,13 +48,28 @@ eccentricity so depth-divergent roots stop sharing a batch.
 
 ``--chaos PLAN`` injects a deterministic fault plan at the round and
 file-write seams (``kind@at[xcount][:arg]`` entries: ``transient``,
-``poison``, ``kill:rI``, ``crash``, ``torn``, ``cache`` — see
+``poison``, ``kill:rI``, ``crash``, ``torn``, ``cache``, ``flip``
+(finite silent corruption), ``stall`` (delay a dispatch) — see
 distributed/chaos.py) so any failure is reproducible from the CLI; the
 driver's self-healing (``--max-retries`` / ``--retry-backoff`` retry
 budget, ``--numeric-guard`` non-finite quarantine, replica-loss re-mesh
 under a straggler policy) recovers and reports what it did.
 ``--generations`` keeps that many rotated BCCheckpoint snapshots so a
 torn newest write falls back instead of cold-starting.
+
+``--integrity`` makes every round self-verifying (needs ``--mesh``):
+``audit`` cross-checks each drained block against its in-graph claimed
+sum plus output-domain invariants; ``checksum`` additionally threads an
+ABFT column-sum lane through every level SpMM, catching silent data
+corruption (e.g. ``--chaos 'flip@K'``) that is finite and so invisible
+to the numeric guard.  A failed audit quarantines and re-dispatches the
+block; under ``--straggler steal`` duplicated tail rounds are also
+compared lane-vs-lane (duplicate-vote SDC detection) with a tie-breaker
+re-dispatch on mismatch.  ``--dispatch-deadline SECONDS|auto`` arms the
+dispatch watchdog: a block exceeding its deadline (``auto`` derives one
+from the roofline/autotune round prior) is re-dispatched and, when the
+retry budget is spent, escalated to a replica loss that the elastic
+re-mesh absorbs — a wedged replica can no longer hang the job.
 
 The per-device adjacency + state footprint is reported before
 compiling; ``--hbm-gb <GiB>`` additionally arms the fail-fast memory
@@ -76,7 +91,7 @@ import numpy as np
 from repro.autotune import AUTOTUNE_MODES
 from repro.core import betweenness_centrality
 from repro.core.bc import ENGINE_KINDS
-from repro.core.driver import STRAGGLER_POLICIES
+from repro.core.driver import INTEGRITY_MODES, STRAGGLER_POLICIES
 from repro.core.operators import OVERLAP_POLICIES
 from repro.core.scheduler import HEURISTICS_MODES
 from repro.core.distributed import (
@@ -178,9 +193,31 @@ def main() -> None:
         help="deterministic fault-injection plan (needs --mesh): "
         "'kind@at[xcount][:arg]' entries separated by ';', plus 'seed=N' "
         "— kinds transient | poison[:nan|:inf] | kill:rI | crash | torn "
-        "| cache, e.g. 'seed=7;transient@1x2;poison@3:nan;kill@4:r1'. "
+        "| cache | flip[:rI|:dI|:neg] (finite silent corruption; pair "
+        "with --integrity) | stall[:MS] (delay a dispatch; pair with "
+        "--dispatch-deadline), e.g. "
+        "'seed=7;transient@1x2;poison@3:nan;kill@4:r1;flip@5'. "
         "Reproduces any failure from the CLI; recovery is reported "
         "(see distributed/chaos.py)",
+    )
+    ap.add_argument(
+        "--integrity",
+        default="off",
+        choices=list(INTEGRITY_MODES),
+        help="self-verifying rounds (needs --mesh): 'audit' cross-checks "
+        "each drained block against its claimed sum + output-domain "
+        "invariants; 'checksum' adds the ABFT column-sum lane through "
+        "every level SpMM (catches finite silent corruption the "
+        "numeric guard cannot see).  Failed blocks are quarantined and "
+        "re-dispatched; detection counters are reported",
+    )
+    ap.add_argument(
+        "--dispatch-deadline",
+        default=None,
+        help="dispatch watchdog deadline in seconds, or 'auto' to derive "
+        "one from the roofline/autotune round prior (needs --mesh).  A "
+        "block exceeding it is re-dispatched, then escalated to a "
+        "replica loss the elastic re-mesh absorbs",
     )
     ap.add_argument(
         "--max-retries",
@@ -282,6 +319,24 @@ def main() -> None:
             "--chaos injects faults at the distributed round seam; "
             "pass --mesh RxC"
         )
+    if args.integrity != "off" and not args.mesh:
+        raise SystemExit(
+            "--integrity audits the distributed round loop; pass --mesh RxC"
+        )
+    deadline = None
+    if args.dispatch_deadline is not None:
+        if not args.mesh:
+            raise SystemExit(
+                "--dispatch-deadline arms the distributed dispatch "
+                "watchdog; pass --mesh RxC"
+            )
+        if args.dispatch_deadline == "auto":
+            deadline = "auto"
+        else:
+            try:
+                deadline = float(args.dispatch_deadline)
+            except ValueError:
+                raise SystemExit("--dispatch-deadline takes seconds or 'auto'")
 
     print(
         f"{name}: n={graph.n} m={graph.num_edges} "
@@ -304,6 +359,10 @@ def main() -> None:
             robust_kw["retry_backoff_s"] = args.retry_backoff
         if args.numeric_guard:
             robust_kw["numeric_guard"] = True
+        if args.integrity != "off":
+            robust_kw["integrity"] = args.integrity
+        if deadline is not None:
+            robust_kw["dispatch_deadline_s"] = deadline
         result = distributed_betweenness_centrality(
             graph,
             mesh,
@@ -327,9 +386,20 @@ def main() -> None:
         bc, schedule = result.bc, result.schedule
         rounds = len(schedule.rounds)
         rec = result.recovery_stats or {}
+        integ = rec.get("integrity") or {}
+        # the integrity sub-dict is informational even when healthy (its
+        # "mode" string and checksum residual are always truthy under
+        # integrity=checksum) — only its detection counters are events
+        integ_events = {
+            k: v
+            for k, v in integ.items()
+            if k not in ("mode", "max_checksum_residual") and v
+        }
         if args.chaos or any(
-            v for k, v in rec.items() if k != "resumed_generation" and v
-        ) or rec.get("resumed_generation"):
+            v
+            for k, v in rec.items()
+            if k not in ("resumed_generation", "integrity") and v
+        ) or integ_events or rec.get("resumed_generation"):
             print(
                 "recovery: "
                 f"{rec.get('retries', 0)} retries "
@@ -339,6 +409,19 @@ def main() -> None:
                 f"{rec.get('remesh_events', 0)} re-mesh events "
                 f"(dead replicas {rec.get('dead_replicas', [])}), "
                 f"resumed generation {rec.get('resumed_generation')}"
+            )
+        if integ and integ.get("mode", "off") != "off":
+            print(
+                f"integrity[{integ['mode']}]: "
+                f"{integ.get('checksum_failures', 0)} checksum + "
+                f"{integ.get('audit_failures', 0)} audit failures, "
+                f"{integ.get('vote_mismatches', 0)}/{integ.get('votes', 0)} "
+                f"duplicate-vote mismatches, "
+                f"{integ.get('quarantined_rounds', 0)} quarantined rounds, "
+                f"watchdog {integ.get('watchdog_trips', 0)} trips / "
+                f"{integ.get('watchdog_escalations', 0)} escalations, "
+                f"max checksum residual "
+                f"{integ.get('max_checksum_residual', 0.0):.2e}"
             )
     else:
         res = betweenness_centrality(

@@ -8,6 +8,12 @@ Four layers:
   quarantine + fallback recompute, replica kill + elastic re-mesh,
   crash + generational resume — BC parity with ``brandes_reference``
   and exactly-once commit counts throughout;
+* self-verifying rounds: finite ``flip`` corruption caught by the
+  ABFT/claim audits (and, for the audit-evading deep flip, by the
+  duplicate vote on steal-duplicated tail rounds); ``stall`` past the
+  dispatch deadline tripped by the watchdog on an injectable fake
+  clock, escalating re-dispatch → replica loss; detection counters
+  surviving kill-and-resume;
 * durable-state corruption: torn / garbled :class:`BCCheckpoint`
   generations and autotune cache files must warn and fall back (or
   cold-start), never traceback; a kill mid-save touches only the
@@ -51,7 +57,8 @@ from repro.graphs import disjoint_union, gnp_graph, path_graph, skewed_depth_gra
 # ------------------------------------------------------------ fault plans
 def test_fault_plan_parse_and_queries():
     assert set(FAULT_KINDS) == {
-        "transient", "poison", "kill", "crash", "torn", "cache"
+        "transient", "poison", "kill", "crash", "torn", "cache",
+        "flip", "stall",
     }
     plan = FaultPlan.parse(
         "seed=7; transient@1x2, poison@3:inf; kill@4:r1; torn@0; "
@@ -77,10 +84,30 @@ def test_fault_plan_parse_and_queries():
     assert again.events == plan.events and again.seed == plan.seed
 
 
+def test_fault_plan_flip_and_stall_queries():
+    plan = FaultPlan.parse(
+        "flip@1; flip@2:r1; flip@3:d0; flip@4:neg; stall@5x2; stall@7:120"
+    )
+    assert plan.flip_at(0) is None
+    assert plan.flip_at(1) == ("scale", 0)  # bare flip: lane 0, sum moves
+    assert plan.flip_at(2) == ("scale", 1)
+    assert plan.flip_at(3) == ("deep", 0)  # claim recomputed: SDC-style
+    assert plan.flip_at(4) == ("neg", 0)
+    assert plan.stall_ms(4) is None
+    from repro.distributed.chaos import DEFAULT_STALL_MS
+
+    assert plan.stall_ms(5) == plan.stall_ms(6) == DEFAULT_STALL_MS
+    assert plan.stall_ms(7) == 120.0
+    # repr round-trips through parse with the new kinds present
+    inner = repr(plan)[len("FaultPlan("):-1]
+    again = FaultPlan.parse(inner)
+    assert again.events == plan.events
+
+
 @pytest.mark.parametrize(
     "spec",
     ["bogus@1", "transient", "transient@-1", "kill@2", "poison@1:huge",
-     "transient@1x0", "kill@2:one"],
+     "transient@1x0", "kill@2:one", "flip@1:x3", "flip@1:rr", "stall@2:fast"],
 )
 def test_fault_plan_rejects_bad_entries(spec):
     with pytest.raises(ValueError):
@@ -104,31 +131,54 @@ def case():
     return g, schedule, prep, brandes_reference(g)
 
 
-def _two_lane_round_fn(graph):
+def _two_lane_round_fn(graph, integrity="off"):
     """Fake two-replica dispatch (see tests/test_straggler.py): each lane
     runs the real single-device traversal of its round."""
     adjacency = jnp.asarray(graph.dense_adjacency(np.float32))
     omega = jnp.zeros(graph.n, jnp.float32)
     base = jax.jit(
         lambda s, d: traversal_round(
-            engine.make_dense_operator(adjacency), s, d, omega
+            engine.make_dense_operator(adjacency), s, d, omega,
+            integrity=integrity,
         )
     )
 
     def fn(sources, derived):
         outs = [base(sources[r], derived[r]) for r in range(sources.shape[0])]
-        return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))
+        return tuple(
+            jnp.stack([o[i] for o in outs]) for i in range(len(outs[0]))
+        )
 
     return fn
 
 
-def _driver(case, plan=None, **kw):
+class FakeClock:
+    """Deterministic time source for the watchdog: time only advances
+    when something sleeps through it (the chaos stall or retry backoff),
+    so a stalled dispatch is the *only* thing that can exceed a deadline."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, seconds):
+        self.t += seconds
+
+
+def _driver(case, plan=None, sleeper=None, **kw):
     g, schedule, prep, _ = case
-    fn = _two_lane_round_fn(g)
-    round_fn = ChaosRoundFn(fn, FaultPlan.parse(plan)) if plan else fn
+    fn = _two_lane_round_fn(g, integrity=kw.get("integrity", "off"))
+    round_fn = (
+        ChaosRoundFn(fn, FaultPlan.parse(plan), sleeper=sleeper)
+        if plan
+        else fn
+    )
     kw.setdefault("retry_backoff_s", 1e-4)
     return BCDriver(
-        round_fn, schedule, n=g.n, prep=prep, rounds_per_dispatch=2, **kw
+        round_fn, schedule, n=g.n, prep=prep, rounds_per_dispatch=2,
+        sleeper=sleeper, **kw
     )
 
 
@@ -196,6 +246,142 @@ def test_all_replicas_dead_reraises(case):
     with pytest.raises(ReplicaLostError):
         drv.run()
     assert drv.recovery["remesh_events"] == 1  # first loss healed, second fatal
+
+
+# --------------------------------------- self-verifying rounds (integrity)
+@pytest.mark.parametrize("mode", ["audit", "checksum"])
+@pytest.mark.parametrize("spec", ["flip@1", "flip@1:neg", "flip@1:r1"])
+def test_flip_detected_quarantined_and_redispatched(case, mode, spec):
+    """A finite silent corruption is invisible to the numeric guard but
+    must be caught by the block audit, quarantined and recomputed."""
+    result = _driver(case, spec, integrity=mode).run()
+    np.testing.assert_allclose(result.bc, case[3], rtol=1e-6, atol=1e-6)
+    rec = result.recovery_stats
+    integ = rec["integrity"]
+    assert integ["mode"] == mode
+    assert integ["checksum_failures"] + integ["audit_failures"] >= 1
+    assert rec["quarantined_blocks"] >= 1
+    assert result.rounds_run == 8  # exactly-once despite the re-dispatch
+
+
+def test_flip_unnoticed_without_integrity(case):
+    """Control: the same corruption with integrity off silently lands in
+    the accumulator — this is exactly the gap the audits close."""
+    result = _driver(case, "flip@1").run()
+    assert not np.allclose(result.bc, case[3], rtol=1e-6, atol=1e-6)
+    integ = result.recovery_stats["integrity"]
+    assert integ["mode"] == "off"
+    assert integ["audit_failures"] == 0  # nothing looked, nothing found
+
+
+def test_healthy_checksum_run_reports_tiny_residual(case):
+    result = _driver(case, integrity="checksum").run()
+    np.testing.assert_allclose(result.bc, case[3], rtol=1e-6, atol=1e-6)
+    integ = result.recovery_stats["integrity"]
+    assert integ["checksum_failures"] == 0 and integ["audit_failures"] == 0
+    assert 0.0 <= integ["max_checksum_residual"] < 1e-4
+
+
+def test_deep_flip_caught_by_duplicate_vote():
+    """A 'deep' flip also forges the block's claimed sum, so every block
+    audit passes — only comparing the duplicated tail lanes catches it."""
+    g = gnp_graph(20, 0.25, seed=5)
+    schedule, prep, _, _ = build_schedule(g, batch_size=4)
+    assert len(schedule.rounds) == 5  # odd deal: the tail gets duplicated
+    expected = brandes_reference(g)
+    fn = _two_lane_round_fn(g, integrity="checksum")
+    drv = BCDriver(
+        ChaosRoundFn(fn, FaultPlan.parse("flip@2:d1")),
+        schedule, n=g.n, prep=prep, rounds_per_dispatch=2,
+        straggler="steal", prior_round_s=1e-3, retry_backoff_s=1e-4,
+        integrity="checksum",
+    )
+    result = drv.run()
+    np.testing.assert_allclose(result.bc, expected, rtol=1e-6, atol=1e-6)
+    integ = result.recovery_stats["integrity"]
+    assert integ["votes"] >= 2 and integ["vote_mismatches"] >= 1
+    assert integ["quarantined_rounds"] >= 1
+    assert any(v["matched"] == "owner" for v in integ["vote_verdicts"])
+    # the block audits really were blind to it
+    assert integ["checksum_failures"] == 0 and integ["audit_failures"] == 0
+    committed = sorted(r for led in drv.ledgers for r in led.state())
+    assert committed == list(range(5))
+
+
+# ------------------------------------------------------ dispatch watchdog
+def test_watchdog_static_escalates_to_replica_lost(case):
+    """Without a replica pool to absorb the loss, a wedged dispatch ends
+    the run with ReplicaLostError instead of hanging forever."""
+    clk = FakeClock()
+    drv = _driver(
+        case, "stall@0x3:50", sleeper=clk.sleep,
+        clock=clk, dispatch_deadline_s=0.02, max_retries=2,
+    )
+    with pytest.raises(ReplicaLostError):
+        drv.run()
+    integ = drv.recovery["integrity"]
+    assert integ["watchdog_trips"] == 3
+    assert integ["watchdog_redispatches"] == 2
+    assert integ["watchdog_escalations"] == 1
+
+
+def test_watchdog_stall_escalates_into_remesh_and_parity(case):
+    """Under a straggler policy the watchdog's escalation is absorbed by
+    the elastic re-mesh: the survivor re-deals the rounds, result exact."""
+    clk = FakeClock()
+    drv = _driver(
+        case, "stall@0x3:50", sleeper=clk.sleep,
+        clock=clk, dispatch_deadline_s=0.02, max_retries=2,
+        straggler="steal", prior_round_s=1e-3, integrity="audit",
+    )
+    result = drv.run()
+    np.testing.assert_allclose(result.bc, case[3], rtol=1e-6, atol=1e-6)
+    rec = result.recovery_stats
+    integ = rec["integrity"]
+    assert integ["watchdog_trips"] == 3
+    assert integ["watchdog_escalations"] == 1
+    assert rec["remesh_events"] == 1
+    assert result.rounds_run == 8
+    committed = sorted(r for led in drv.ledgers for r in led.state())
+    assert committed == list(range(8))
+
+
+def test_watchdog_ignores_fast_dispatches(case):
+    clk = FakeClock()
+    result = _driver(
+        case, sleeper=clk.sleep, clock=clk, dispatch_deadline_s=10.0,
+        integrity="audit",
+    ).run()
+    np.testing.assert_allclose(result.bc, case[3], rtol=1e-6, atol=1e-6)
+    integ = result.recovery_stats["integrity"]
+    assert integ["watchdog_trips"] == 0
+
+
+def test_integrity_stats_survive_crash_and_resume(tmp_path, case):
+    """Detection counters are part of the durable story: after a crash
+    the resumed run still reports the pre-crash detections."""
+    g, schedule, prep, expected = case
+    path = str(tmp_path / "bc.npz")
+
+    def driver(plan, ckpt):
+        fn = _two_lane_round_fn(g, integrity="audit")
+        round_fn = ChaosRoundFn(fn, FaultPlan.parse(plan)) if plan else fn
+        return BCDriver(
+            round_fn, schedule, n=g.n, prep=prep, rounds_per_dispatch=2,
+            straggler="redeal", checkpoint=ckpt, checkpoint_every=1,
+            integrity="audit", retry_backoff_s=1e-4,
+        )
+
+    # flip@1 is detected and recomputed (call 2); the crash lands later
+    with pytest.raises(ChaosCrash):
+        driver("flip@1;crash@4", BCCheckpoint(path)).run()
+
+    resumed = driver(None, BCCheckpoint(path)).run()
+    np.testing.assert_allclose(resumed.bc, expected, rtol=1e-6, atol=1e-6)
+    rec = resumed.recovery_stats
+    assert rec["integrity"]["audit_failures"] == 1  # remembered, not re-hit
+    assert rec["quarantined_blocks"] == 1
+    assert resumed.rounds_run < 8  # some blocks survived the crash
 
 
 def test_crash_and_generational_resume(tmp_path, case):
@@ -450,3 +636,100 @@ def test_chaos_matrix_2x2x2_mesh_replica_kill():
     assert rec["remesh_events"] == 1 and rec["dead_replicas"] == [1]
     assert result.rounds_run == len(result.schedule.rounds)  # exactly-once
     assert rec["chaos"]["plan"].startswith("FaultPlan(")
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")
+@pytest.mark.parametrize("engine_kind,overlap", [
+    ("sparse", "none"), ("pallas", "expand"),
+])
+def test_flip_matrix_2x4_mesh(engine_kind, overlap):
+    """Grid-only mesh: an injected bit-flip-style corruption is detected
+    by the checksum/claim audits on every engine x overlap, the block is
+    recomputed and the result matches the oracle to 1e-6."""
+    from repro.core.distributed import distributed_betweenness_centrality
+    from repro.launch.mesh import make_mesh
+
+    g = gnp_graph(24, 0.2, seed=3)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    result = distributed_betweenness_centrality(
+        g, mesh, batch_size=8, engine_kind=engine_kind, overlap=overlap,
+        integrity="checksum",
+        chaos="seed=5;flip@1",
+        retry_backoff_s=1e-3,
+        full_result=True,
+    )
+    np.testing.assert_allclose(
+        result.bc, brandes_reference(g), rtol=1e-6, atol=1e-6
+    )
+    integ = result.recovery_stats["integrity"]
+    assert integ["checksum_failures"] + integ["audit_failures"] >= 1
+    assert result.recovery_stats["quarantined_blocks"] >= 1
+    assert result.rounds_run == len(result.schedule.rounds)  # exactly-once
+    assert integ["max_checksum_residual"] < 1e-3  # the ABFT lane is healthy
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")
+def test_flip_matrix_2x2x2_mesh_duplicate_vote():
+    """Replicated mesh under steal: a deep flip on the duplicated tail
+    lane is caught by the duplicate vote and settled by the tie-breaker."""
+    from repro.core.distributed import distributed_betweenness_centrality
+    from repro.launch.mesh import make_mesh
+
+    g = disjoint_union(path_graph(40), gnp_graph(16, 0.3, seed=4))
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    result = distributed_betweenness_centrality(
+        g, mesh, replica_axis="pod", batch_size=8, straggler="steal",
+        integrity="checksum",
+        chaos="seed=1;flip@3:d1",
+        retry_backoff_s=1e-3,
+        full_result=True,
+    )
+    np.testing.assert_allclose(
+        result.bc, brandes_reference(g), rtol=1e-6, atol=1e-6
+    )
+    integ = result.recovery_stats["integrity"]
+    assert integ["votes"] >= 1
+    assert result.rounds_run == len(result.schedule.rounds)  # exactly-once
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")
+def test_stall_matrix_2x2x2_mesh_watchdog_remesh():
+    """Replicated mesh: a dispatch stalled past its deadline is tripped,
+    re-dispatched, escalated to replica loss and absorbed by the
+    re-mesh — the run finishes exact instead of hanging."""
+    from repro.core.distributed import distributed_betweenness_centrality
+    from repro.launch.mesh import make_mesh
+
+    g = gnp_graph(20, 0.25, seed=5)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    result = distributed_betweenness_centrality(
+        g, mesh, replica_axis="pod", batch_size=4, straggler="steal",
+        integrity="audit",
+        chaos="seed=13;stall@0x3:200",
+        dispatch_deadline_s=0.05, max_retries=2, retry_backoff_s=1e-3,
+        full_result=True,
+    )
+    np.testing.assert_allclose(
+        result.bc, brandes_reference(g), rtol=1e-6, atol=1e-6
+    )
+    rec = result.recovery_stats
+    integ = rec["integrity"]
+    assert integ["watchdog_trips"] >= 3
+    assert integ["watchdog_escalations"] >= 1
+    assert rec["remesh_events"] >= 1
+    assert result.rounds_run == len(result.schedule.rounds)  # exactly-once
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")
+def test_checksum_rejects_split_backward_payload():
+    from repro.core.distributed import make_distributed_round_fn
+    from repro.graphs.partition import partition_2d
+    from repro.launch.mesh import make_mesh
+
+    g = gnp_graph(16, 0.3, seed=0)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    part = partition_2d(g, 2, 4)
+    with pytest.raises(ValueError, match="checksum lane"):
+        make_distributed_round_fn(
+            part, mesh, fuse_backward_payload=False, integrity="checksum"
+        )

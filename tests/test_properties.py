@@ -95,6 +95,68 @@ def test_star_graph_closed_form(k):
     np.testing.assert_allclose(bc[1:], 0.0, atol=1e-9)
 
 
+# -------------------------------------------------- traversal invariants
+@given(random_graph(), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_sigma_conservation(graph, num_sources):
+    """σ-flow conservation: for every non-root reached vertex v,
+    σ_v = Σ σ_u over neighbors u one level above — path counts are
+    created only at the root and otherwise sum along BFS layers."""
+    from repro.core import engine
+
+    adjacency = jnp.asarray(graph.dense_adjacency(np.float32))
+    k = min(num_sources, graph.n)
+    src = jnp.eye(graph.n, dtype=jnp.float32)[:, :k]
+    fwd = engine.forward_counting(engine.make_dense_operator(adjacency), src)
+    sigma = np.asarray(fwd.sigma)
+    depth = np.asarray(fwd.depth)
+    adj = np.asarray(adjacency) > 0
+    for s in range(k):
+        for v in range(graph.n):
+            if depth[v, s] >= 1:
+                preds = adj[v] & (depth[:, s] == depth[v, s] - 1)
+                np.testing.assert_allclose(
+                    sigma[v, s], sigma[preds, s].sum(), rtol=1e-5
+                )
+
+
+@given(random_graph(), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_checksum_lane_invariant(graph, num_sources):
+    """The ABFT ones-lane invariant: healthy traversals keep the relative
+    column-sum residual at float-noise level through both sweeps, and a
+    corrupted SpMM output pushes it past the driver's detection
+    threshold — the property the integrity='checksum' mode audits."""
+    from repro.core import engine
+    from repro.core.driver import CHECKSUM_TOL
+    from repro.core.operators import DenseOperator
+
+    adjacency = jnp.asarray(graph.dense_adjacency(np.float32))
+    k = min(num_sources, graph.n)
+    src = jnp.eye(graph.n, dtype=jnp.float32)[:, :k]
+    omega = jnp.zeros(graph.n, jnp.float32)
+
+    op = engine.make_dense_operator(adjacency)
+    fwd = engine.forward_counting(op, src, checksum=True)
+    assert fwd.check_err is not None and float(fwd.check_err) < CHECKSUM_TOL
+    _, bwd_err = engine.backward_accumulation(
+        op, fwd.sigma, fwd.depth, omega, fwd.max_depth, checksum=True
+    )
+    assert float(bwd_err) < CHECKSUM_TOL
+
+    class CorruptOperator(DenseOperator):
+        # a silent single-entry hit on every SpMM product, additive so
+        # the checksum lane (computed from the same product) cannot
+        # track it
+        def apply(self, x):
+            return super().apply(x).at[0, 0].add(64.0)
+
+    bad = engine.forward_counting(
+        CorruptOperator(adjacency), src, checksum=True
+    )
+    assert float(bad.check_err) > CHECKSUM_TOL
+
+
 # ----------------------------------------------------------- scheduler/graph
 @given(random_graph(), st.integers(1, 16), st.sampled_from(["h0", "h1", "h2", "h3"]))
 @settings(**SETTINGS)

@@ -18,6 +18,14 @@ the Brandes oracle:
   4. **corrupted autotune cache** — every persisted cache put is
      garbled; the next run warm-starts the cache empty with a warning
      and simply re-measures.
+  5. **silent data corruption (flip)** — a finite corruption of one
+     dispatch's block output, invisible to the numeric guard; the
+     ``integrity="checksum"`` audits catch it, quarantine the block and
+     recompute it.
+  6. **wedged dispatch (stall)** — a dispatch delayed past its
+     ``dispatch_deadline_s``; the watchdog trips, re-dispatches, then
+     escalates to a replica loss the elastic re-mesh absorbs — the run
+     finishes instead of hanging.
 
 Each leg asserts parity at the repo-standard smoke tolerance (1e-5,
 f32 accumulation) plus the recovery telemetry the fault must produce.
@@ -144,10 +152,46 @@ def main() -> int:
             oracle1,
         )
 
+    # 5. silent data corruption on the grid mesh: finite flip caught by
+    # the checksum/claim audits, quarantined and recomputed
+    rec = check(
+        "flip-integrity",
+        distributed_betweenness_centrality(
+            g1, grid, batch_size=16, engine_kind="pallas", overlap="expand",
+            integrity="checksum",
+            chaos="seed=11;flip@1",
+            retry_backoff_s=1e-3, full_result=True,
+        ),
+        oracle1,
+    )
+    integ = rec["integrity"]
+    assert integ["checksum_failures"] + integ["audit_failures"] >= 1, integ
+    assert rec["quarantined_blocks"] >= 1, rec
+    assert integ["max_checksum_residual"] < 1e-3, integ
+
+    # 6. wedged dispatch on the replicated mesh: watchdog trip ->
+    # re-dispatch -> escalation -> re-mesh, no hang
+    rec = check(
+        "stall-watchdog",
+        distributed_betweenness_centrality(
+            g2, pods, replica_axis="pod", batch_size=8, straggler="steal",
+            integrity="audit",
+            chaos="seed=13;stall@0x3:200",
+            dispatch_deadline_s=0.05, max_retries=2,
+            retry_backoff_s=1e-3, full_result=True,
+        ),
+        oracle2,
+    )
+    integ = rec["integrity"]
+    assert integ["watchdog_trips"] >= 3, integ
+    assert integ["watchdog_escalations"] >= 1, integ
+    assert rec["remesh_events"] >= 1, rec
+
     print(
         "chaos-smoke: all fault classes healed — transient retry, poison "
         "quarantine + fallback, replica re-mesh, torn-snapshot cold start, "
-        "cache corruption re-measure"
+        "cache corruption re-measure, flip integrity quarantine, stall "
+        "watchdog escalation"
     )
     return 0
 

@@ -3,7 +3,8 @@
 README.md and ARCHITECTURE.md document the engine × overlap × heuristics
 × straggler configuration matrix.  Those lists have single sources of
 truth in code (`ENGINE_KINDS`, `DIST_ENGINE_KINDS`, `OVERLAP_POLICIES`,
-`HEURISTICS_MODES`, `STRAGGLER_POLICIES`, `AUTOTUNE_MODES`); this check
+`HEURISTICS_MODES`, `STRAGGLER_POLICIES`, `AUTOTUNE_MODES`,
+`FAULT_KINDS`, `INTEGRITY_MODES`); this check
 fails CI when a
 constant gains a value the docs never mention — the failure mode where a
 new engine/policy ships undocumented.  (The reverse — docs mentioning a
@@ -32,7 +33,7 @@ def main() -> int:
     from repro.autotune import AUTOTUNE_MODES
     from repro.core.bc import ENGINE_KINDS
     from repro.core.distributed import DIST_ENGINE_KINDS
-    from repro.core.driver import STRAGGLER_POLICIES
+    from repro.core.driver import INTEGRITY_MODES, STRAGGLER_POLICIES
     from repro.core.operators import OVERLAP_POLICIES
     from repro.core.scheduler import HEURISTICS_MODES
     from repro.distributed.chaos import FAULT_KINDS
@@ -47,6 +48,7 @@ def main() -> int:
             "straggler (STRAGGLER_POLICIES)": STRAGGLER_POLICIES,
             "autotune (AUTOTUNE_MODES)": AUTOTUNE_MODES,
             "chaos (FAULT_KINDS)": FAULT_KINDS,
+            "integrity (INTEGRITY_MODES)": INTEGRITY_MODES,
         },
         "ARCHITECTURE.md": {
             "engine_kind (distributed DIST_ENGINE_KINDS)": DIST_ENGINE_KINDS,
@@ -54,6 +56,7 @@ def main() -> int:
             "straggler (STRAGGLER_POLICIES)": STRAGGLER_POLICIES,
             "autotune (AUTOTUNE_MODES)": AUTOTUNE_MODES,
             "chaos (FAULT_KINDS)": FAULT_KINDS,
+            "integrity (INTEGRITY_MODES)": INTEGRITY_MODES,
         },
     }
     failures: list[str] = []
