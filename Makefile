@@ -52,6 +52,16 @@ autotune-smoke:
 chaos-smoke:
 	PYTHONPATH=src:. python tools/chaos_smoke.py
 
+# Snapshot-serving smoke: the sampled-BC serving front end end to end
+# on 8 fake host devices (tools/serve_smoke.py) — a background
+# refresher runs block-budgeted slices over a shared BCCheckpoint while
+# a foreground loop queries the snapshot store; asserts full query
+# accounting (hit/stale/miss), monotone atomic generation swaps,
+# final-generation parity vs the Brandes oracle and the
+# committed-snapshot resume path.
+serve-smoke:
+	PYTHONPATH=src:. python tools/serve_smoke.py
+
 # Documentation health: the quickstart must execute, and the engine /
 # overlap / heuristics / straggler / autotune choice lists in README.md
 # + ARCHITECTURE.md must match the source-of-truth constants.

@@ -30,6 +30,7 @@ __all__ = [
     "betweenness_centrality",
     "make_round_fn",
     "apply_reduction_corrections",
+    "apply_sampling_rescale",
     "ENGINE_KINDS",
 ]
 
@@ -99,9 +100,14 @@ def betweenness_centrality(
     checkpoint=None,
     overlap: str = "none",
     straggler: str = "none",
+    sampling: str = "off",
+    sample_frac: float | None = None,
+    sample_k: int | None = None,
+    sample_seed: int = 0,
+    stop_rule=None,
 ) -> BCResult:
-    """Exact BC of an undirected, unweighted graph (paper conventions:
-    unnormalized, both traversal directions counted).
+    """Exact or source-sampled BC of an undirected, unweighted graph
+    (paper conventions: unnormalized, both traversal directions counted).
 
     Args:
       graph:       input graph.
@@ -123,7 +129,31 @@ def betweenness_centrality(
       straggler:   sub-cluster scheduling policy, accepted for protocol
                    uniformity; a single device has no replicas to steal
                    from or re-deal to, so only "none" is valid here.
+      sampling:    :data:`repro.serving.SAMPLING_MODES` — "off" (exact),
+                   "fixed" (seeded k-root subset, result rescaled by
+                   N/k) or "adaptive" (additionally stops dispatching
+                   once top-k ranks stabilize; see
+                   :class:`repro.serving.AdaptiveStopRule`).  Sampling
+                   requires ``heuristics="h0"`` (per-root additivity).
+      sample_frac / sample_k: sample size as a fraction of — or count
+                   within — the eligible roots (at most one of the two;
+                   ``sample_frac=1.0`` reproduces the unsampled schedule
+                   exactly).
+      sample_seed: RNG seed of the root draw (same seed ⇒ nested samples
+                   in k).
+      stop_rule:   explicit ``BCDriver`` stop-rule override, e.g.
+                   :class:`repro.serving.BlockBudgetStop` for serving
+                   refresh slices; default under "adaptive" is
+                   ``AdaptiveStopRule()``.  Requires ``sampling != "off"``
+                   — a truncated run is only meaningful as a rescaled
+                   estimate.
     """
+    from repro.serving.sampling import (
+        AdaptiveStopRule,
+        eligible_roots,
+        plan_sampling,
+    )
+
     if normalize_overlap(overlap) != "none":
         raise ValueError(
             "overlap schedules are a distributed-engine feature; "
@@ -134,9 +164,25 @@ def betweenness_centrality(
             "straggler scheduling is a sub-cluster feature; a single "
             "device has no replicas to steal rounds from or re-deal to"
         )
+    plan = plan_sampling(
+        eligible_roots(graph), sampling, sample_frac, sample_k, sample_seed
+    )
+    if plan.mode != "off" and heuristics != "h0":
+        raise ValueError(
+            "sampling requires heuristics='h0': the 1-/2-degree analytic "
+            "corrections are not per-root additive, so a sampled run "
+            "could not be rescaled into an unbiased estimator"
+        )
+    if stop_rule is not None and plan.mode == "off":
+        raise ValueError(
+            "a stop_rule truncates the schedule, which is only meaningful "
+            "as a rescaled estimate; pass sampling='fixed' or 'adaptive'"
+        )
+    if plan.mode == "adaptive" and stop_rule is None:
+        stop_rule = AdaptiveStopRule()
     n = graph.n
     schedule, prep, residual, omega_i = build_schedule(
-        graph, batch_size=batch_size, heuristics=heuristics
+        graph, batch_size=batch_size, heuristics=heuristics, roots=plan.roots
     )
     omega = jnp.asarray(omega_i, jnp.float32)
 
@@ -159,6 +205,35 @@ def betweenness_centrality(
         block_fn = jax.jit(block_fn)
 
     driver = BCDriver(
-        block_fn, schedule, n=n, prep=prep, ledger=ledger, checkpoint=checkpoint
+        block_fn, schedule, n=n, prep=prep, ledger=ledger,
+        checkpoint=checkpoint, stop_rule=stop_rule,
     )
-    return driver.run()
+    result = driver.run()
+    return apply_sampling_rescale(result, plan)
+
+
+def apply_sampling_rescale(result: BCResult, plan) -> BCResult:
+    """Rescale a sampled run's BC by N / roots_accumulated (in place).
+
+    Shared by both entrypoints.  The denominator is what the driver
+    *committed* — an adaptive stop truncates it below ``plan.k``, a full
+    fixed run equals it — so fixed and adaptive share one calibration.
+    Checkpoints always store the raw accumulator (the driver snapshots
+    before this runs), so a resumed run re-applies the then-current
+    scale to the grown prefix — rescale and resume commute.
+    """
+    if plan.mode == "off":
+        return result
+    denom = result.roots_accumulated
+    scale = plan.num_eligible / denom if denom else 1.0
+    if scale != 1.0:
+        result.bc = result.bc * scale
+    result.sampling_stats = {
+        "mode": plan.mode,
+        "seed": plan.seed,
+        "num_eligible": plan.num_eligible,
+        "k_planned": plan.k,
+        "roots_accumulated": denom,
+        "scale": scale,
+    }
+    return result

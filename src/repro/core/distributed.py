@@ -893,6 +893,11 @@ def distributed_betweenness_centrality(
     dispatch_deadline_s=None,
     clock=None,
     sleeper=None,
+    sampling: str = "off",
+    sample_frac: float | None = None,
+    sample_k: int | None = None,
+    sample_seed: int = 0,
+    stop_rule=None,
     full_result: bool = False,
 ):
     """Run the full distributed BC computation on ``mesh``.
@@ -966,6 +971,20 @@ def distributed_betweenness_centrality(
     the watchdog and the retry/stall sleeps (tests; default real time).
     Detection counters land in ``recovery_stats["integrity"]``.
 
+    **Sampling** (``sampling`` — :data:`repro.serving.SAMPLING_MODES`):
+    ``"fixed"`` runs a seeded root subset (``sample_frac`` /
+    ``sample_k``) through the *same* scheduler — eccentricity packing,
+    the replica deal, checkpoints and chaos all apply to the subset
+    unchanged — and rescales the result by N/k; ``"adaptive"``
+    additionally arms the driver's ``stop_rule`` seam (default
+    :class:`repro.serving.AdaptiveStopRule`; override via ``stop_rule``,
+    e.g. :class:`repro.serving.BlockBudgetStop` for serving refresh
+    slices) so dispatch halts once the running accumulator's top-k
+    ranks stabilize, rescaling by the roots actually committed.
+    Requires ``heuristics="h0"`` (per-root additivity).  The expected
+    sampled-run wall (rounds × the straggler prior's per-round seconds)
+    is logged via :func:`repro.roofline.model.sampled_run_seconds`.
+
     ``full_result`` returns the :class:`~repro.core.driver.BCResult`
     instead of the legacy ``(bc, schedule)`` pair.
     """
@@ -986,10 +1005,34 @@ def distributed_betweenness_centrality(
         if checkpoint is not None:
             checkpoint = ChaosCheckpoint(checkpoint, chaos_fs)
 
+    from repro.serving.sampling import (
+        AdaptiveStopRule,
+        eligible_roots,
+        plan_sampling,
+    )
+
+    sample_plan = plan_sampling(
+        eligible_roots(graph), sampling, sample_frac, sample_k, sample_seed
+    )
+    if sample_plan.mode != "off" and heuristics != "h0":
+        raise ValueError(
+            "sampling requires heuristics='h0': the 1-/2-degree analytic "
+            "corrections are not per-root additive, so a sampled run "
+            "could not be rescaled into an unbiased estimator"
+        )
+    if stop_rule is not None and sample_plan.mode == "off":
+        raise ValueError(
+            "a stop_rule truncates the schedule, which is only meaningful "
+            "as a rescaled estimate; pass sampling='fixed' or 'adaptive'"
+        )
+    if sample_plan.mode == "adaptive" and stop_rule is None:
+        stop_rule = AdaptiveStopRule()
+
     autotune = normalize_autotune(autotune)
     schedule, prep, residual, omega_i = build_schedule(
         graph, batch_size=batch_size, heuristics=heuristics,
         root_order="eccentricity" if autotune != "off" else "id",
+        roots=sample_plan.roots,
     )
     R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
     part = partition_2d(residual, R, C)
@@ -1075,7 +1118,11 @@ def distributed_betweenness_centrality(
 
     straggler = normalize_straggler(straggler)
     prior_round_s = None
-    if straggler != "none" or dispatch_deadline_s == "auto":
+    if (
+        straggler != "none"
+        or dispatch_deadline_s == "auto"
+        or sample_plan.mode != "off"
+    ):
         if straggler != "none" and replica_axis is None:
             raise ValueError(
                 "straggler scheduling re-deals rounds between sub-cluster "
@@ -1087,6 +1134,17 @@ def distributed_betweenness_centrality(
             measured_level_s=(
                 plan.level_s_for(overlap) if plan is not None else None
             ),
+        )
+    if sample_plan.mode != "off":
+        from repro.roofline.model import sampled_run_seconds
+
+        logger.info(
+            "sampling[%s]: %d of %d eligible roots in %d rounds "
+            "(seed %d); expected wall ≈ %.3gs at the %.3gs/round prior",
+            sample_plan.mode, sample_plan.k, sample_plan.num_eligible,
+            len(schedule.rounds), sample_plan.seed,
+            sampled_run_seconds(len(schedule.rounds), fr, prior_round_s),
+            prior_round_s,
         )
     if dispatch_deadline_s == "auto":
         # generous on purpose: the prior models steady-state rounds, but
@@ -1122,12 +1180,16 @@ def distributed_betweenness_centrality(
         dispatch_deadline_s=dispatch_deadline_s,
         clock=clock,
         sleeper=sleeper,
+        stop_rule=stop_rule,
         # the planner's taxonomy for elastic re-mesh on replica loss:
         # replica lanes are 'pod' groups, the grid is data × model
         mesh_shape=(fr, R, C),
         mesh_axes=("pod", "data", "model"),
     )
     result = driver.run()
+    from repro.core.bc import apply_sampling_rescale
+
+    result = apply_sampling_rescale(result, sample_plan)
     if chaos_plan:
         result.recovery_stats["chaos"] = {
             "plan": repr(chaos_plan),

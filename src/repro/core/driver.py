@@ -290,6 +290,17 @@ class BCResult:
     straggler_stats: dict | None = None  # multi-ledger scheduler telemetry
     #   (straggler != "none" only): per-replica wall/rounds/levels,
     #   rounds stolen / re-dealt, speculative duplicates, idle estimate.
+    stopped_early: bool = False  # a stop_rule halted dispatch before the
+    #   schedule was exhausted (adaptive sampling / serving refresh
+    #   slices); the bc accumulator holds exactly the committed prefix
+    stop_stats: dict | None = None  # the stop rule's own telemetry
+    #   (rule.stats when it has one): checks, stability history,
+    #   fired_at_block
+    roots_accumulated: int = 0  # root columns (explicit + derived) of
+    #   every committed round, including rounds resumed from a
+    #   checkpoint — the k in the sampled estimator's N/k rescale
+    sampling_stats: dict | None = None  # set by the entrypoints when
+    #   sampling != "off": mode, k planned, eligible count, applied scale
     recovery_stats: dict | None = None  # self-healing telemetry (always
     #   set by BCDriver): retries, transient_errors, quarantined_blocks,
     #   fallback_recomputes, remesh_events, dead_replicas,
@@ -386,9 +397,19 @@ class BCDriver:
         dispatch_deadline_s: float | None = None,
         clock: Callable[[], float] | None = None,
         sleeper: Callable[[float], None] | None = None,
+        stop_rule: Callable[[np.ndarray, int], bool] | None = None,
     ):
         self.round_fn = round_fn
         self.profile = profile
+        #: the early-stop seam (repro.serving): a callable
+        #: ``(bc_running f64 [n], blocks_done) -> bool`` consulted after
+        #: every drained dispatch block — True halts *new* dispatches;
+        #: everything already committed stays committed (checkpoints,
+        #: chaos and the straggler re-deal compose unchanged because the
+        #: consult sits outside the dispatch/commit machinery).  Note the
+        #: consult syncs the accumulator to host each block, so it costs
+        #: the async static pipeline — adaptive sampling opts in.
+        self.stop_rule = stop_rule
         self.schedule = schedule
         self.n = n
         self.prep = prep
@@ -820,6 +841,18 @@ class BCDriver:
             if live:
                 yield srcs, ders, live
 
+    def _count_roots(self, rids) -> int:
+        """Root columns (explicit + derived) across the given round ids —
+        the k of the sampled estimator's N/k rescale, so it must count
+        exactly what the accumulator holds: every *committed* round,
+        including rounds resumed from a checkpoint."""
+        rounds = self.schedule.rounds
+        return sum(
+            int((rounds[rid].sources >= 0).sum())
+            + int((rounds[rid].derived[:, 0] >= 0).sum())
+            for rid in rids
+        )
+
     def _collect_bc(self, bc_acc) -> np.ndarray:
         """Checkpoint-seed + device accumulator, in per-vertex f64 space."""
         bc = self._bc0.copy()
@@ -852,6 +885,8 @@ class BCDriver:
         rounds_run = 0
         fwd_cols = 0
         bwd_cols = 0
+        blocks_done = 0
+        stopped_early = False
         blocks_since_snapshot = 0
         block_times: list[float] | None = [] if self.profile else None
         t_start = time.perf_counter()
@@ -894,12 +929,26 @@ class BCDriver:
             bwd_cols += int((srcs >= 0).sum() + (ders[:, :, 0] >= 0).sum())
             while len(inflight) > self.max_inflight:
                 drain_one()
+            blocks_done += 1
             blocks_since_snapshot += 1
             if self.checkpoint is not None and (
                 blocks_since_snapshot >= self.checkpoint_every
             ):
                 snapshot()
                 blocks_since_snapshot = 0
+            if self.stop_rule is not None:
+                # drain first so the accumulator the rule sees is exactly
+                # the committed prefix (what a checkpoint would hold)
+                while inflight:
+                    drain_one()
+                if self.stop_rule(self._collect_bc(bc_acc), blocks_done):
+                    stopped_early = True
+                    logger.info(
+                        "stop rule fired after %d dispatch blocks "
+                        "(%d rounds committed); halting dispatch",
+                        blocks_done, len(drained),
+                    )
+                    break
         while inflight:
             drain_one()
         if self.checkpoint is not None:
@@ -913,6 +962,9 @@ class BCDriver:
             backward_columns=bwd_cols,
             wall_s=time.perf_counter() - t_start,
             block_times=block_times,
+            stopped_early=stopped_early,
+            stop_stats=getattr(self.stop_rule, "stats", None),
+            roots_accumulated=self._count_roots(drained),
             recovery_stats=dict(self.recovery),
         )
 
@@ -977,6 +1029,7 @@ class BCDriver:
         rounds_run = 0
         fwd_cols = 0
         bwd_cols = 0
+        stopped_early = False
         blocks_since_snapshot = 0
         block_times: list[float] = []
         stats = {
@@ -1321,6 +1374,19 @@ class BCDriver:
             ):
                 snapshot()
                 blocks_since_snapshot = 0
+            # the stop seam: commits already happened at this block's
+            # drain (exactly-once is settled), so halting here leaves a
+            # clean committed prefix for the checkpoint/re-deal to own
+            if self.stop_rule is not None and self.stop_rule(
+                self._collect_bc(bc_acc), len(block_times)
+            ):
+                stopped_early = True
+                logger.info(
+                    "stop rule fired after %d dispatch blocks "
+                    "(%d rounds committed); halting dispatch",
+                    len(block_times), rounds_run,
+                )
+                break
 
         if self.checkpoint is not None:
             snapshot()
@@ -1345,6 +1411,11 @@ class BCDriver:
             backward_columns=bwd_cols,
             wall_s=time.perf_counter() - t_start,
             block_times=block_times,
+            stopped_early=stopped_early,
+            stop_stats=getattr(self.stop_rule, "stats", None),
+            roots_accumulated=self._count_roots(
+                sorted(self._committed_union())
+            ),
             straggler_stats=stats,
             recovery_stats=dict(self.recovery),
         )

@@ -202,6 +202,7 @@ def build_schedule(
     root_order: str = "id",
     ecc_samples: int = 8,
     ecc_seed: int = 0,
+    roots: np.ndarray | None = None,
 ) -> tuple[Schedule, OneDegreeReduction | None, Graph, np.ndarray]:
     """Plan the full BC computation.
 
@@ -222,6 +223,14 @@ def build_schedule(
                   replica deal can balance expected cost).
       ecc_samples / ecc_seed: :func:`estimate_eccentricities` budget and
                   landmark seed (only read under "eccentricity").
+      roots:      optional explicit root subset (vertex ids): only
+                  eligible sources in this set are scheduled — the
+                  source-sampling seam (repro.serving).  Requires
+                  ``heuristics="h0"``: the 1-/2-degree analytic credits
+                  are not separable per root, so a sampled subset could
+                  not be rescaled into an unbiased estimate.  Root
+                  ordering (including eccentricity packing) applies to
+                  the subset unchanged.
 
     Returns (schedule, one_degree_result_or_None, residual_graph, omega).
     """
@@ -235,6 +244,13 @@ def build_schedule(
             f"unknown root_order {root_order!r}; expected one of {ROOT_ORDERS}"
         )
     batch_size = validate_batch_size(batch_size)
+    if roots is not None and heuristics != "h0":
+        raise ValueError(
+            "a root subset (source sampling) requires heuristics='h0': "
+            "the 1-/2-degree analytic corrections are not per-root "
+            f"additive, so a sampled schedule under {heuristics!r} could "
+            "not be rescaled into an unbiased estimator"
+        )
     use_h1 = heuristics in ("h1", "h3", "h1t", "h3t")
     use_h2 = heuristics in ("h2", "h3", "h3t")
     exhaustive = heuristics.endswith("t")  # beyond-paper tree contraction
@@ -247,6 +263,18 @@ def build_schedule(
 
     res_deg = residual.degrees()
     eligible = res_deg >= 1  # traversal-worthy sources
+    if roots is not None:
+        root_ids = np.asarray(roots, np.int64)
+        if root_ids.size and (
+            root_ids.min() < 0 or root_ids.max() >= graph.n
+        ):
+            raise ValueError(
+                f"root subset contains out-of-range vertex ids "
+                f"(n = {graph.n})"
+            )
+        keep = np.zeros(graph.n, bool)
+        keep[root_ids] = True
+        eligible &= keep
     num_leaf_skipped = int(prep.num_removed) if prep is not None else 0
 
     # residual-isolated vertices with removed leaves: analytic component

@@ -100,6 +100,7 @@ from repro.core.distributed import (
 )
 from repro.distributed.fault_tolerance import BCCheckpoint
 from repro.graphs import grid_graph, rmat_graph, road_like_graph
+from repro.serving import SAMPLING_MODES
 
 
 def main() -> None:
@@ -248,6 +249,37 @@ def main() -> None:
         help="BCCheckpoint snapshot generations to keep (default 3); "
         "load falls back to the newest intact one on a torn write",
     )
+    ap.add_argument(
+        "--sampling",
+        default="off",
+        choices=list(SAMPLING_MODES),
+        help="source-sampled approximate BC: 'fixed' runs a seeded "
+        "k-root subset and rescales by N/k; 'adaptive' additionally "
+        "stops dispatching once the top-k rank set stabilizes across "
+        "consecutive blocks.  Needs --heuristics h0 (per-root "
+        "additivity); --sample-frac 1.0 reproduces the exact schedule",
+    )
+    ap.add_argument(
+        "--sample-frac",
+        type=float,
+        default=None,
+        help="sample size as a fraction of the eligible roots "
+        "(mutually exclusive with --sample-k)",
+    )
+    ap.add_argument(
+        "--sample-k",
+        type=int,
+        default=None,
+        help="sample size as a root count (mutually exclusive with "
+        "--sample-frac)",
+    )
+    ap.add_argument(
+        "--sample-seed",
+        type=int,
+        default=0,
+        help="seed of the root draw; the same seed gives nested "
+        "samples as k grows (serving refinement extends evidence)",
+    )
     ap.add_argument("--ckpt-dir", default=None, help="round-ledger resume dir")
     ap.add_argument("--out", default=None)
     ap.add_argument("--top", type=int, default=10)
@@ -338,10 +370,25 @@ def main() -> None:
             except ValueError:
                 raise SystemExit("--dispatch-deadline takes seconds or 'auto'")
 
+    sampling_kw: dict = {}
+    if args.sampling != "off":
+        sampling_kw = {
+            "sampling": args.sampling,
+            "sample_frac": args.sample_frac,
+            "sample_k": args.sample_k,
+            "sample_seed": args.sample_seed,
+        }
+    elif args.sample_frac is not None or args.sample_k is not None:
+        raise SystemExit(
+            "--sample-frac/--sample-k size a sampled run; pass "
+            "--sampling fixed|adaptive"
+        )
+
     print(
         f"{name}: n={graph.n} m={graph.num_edges} "
         f"heuristics={args.heuristics} engine={args.engine} "
-        f"overlap={args.overlap} straggler={args.straggler}"
+        f"overlap={args.overlap} straggler={args.straggler} "
+        f"sampling={args.sampling}"
     )
     t0 = time.time()
     if mesh_shape is not None:
@@ -382,9 +429,11 @@ def main() -> None:
             chaos=args.chaos,
             full_result=True,
             **robust_kw,
+            **sampling_kw,
         )
         bc, schedule = result.bc, result.schedule
         rounds = len(schedule.rounds)
+        samp = result.sampling_stats
         rec = result.recovery_stats or {}
         integ = rec.get("integrity") or {}
         # the integrity sub-dict is informational even when healthy (its
@@ -430,11 +479,20 @@ def main() -> None:
             heuristics=args.heuristics,
             engine_kind=args.engine,
             checkpoint=checkpoint,
+            **sampling_kw,
         )
         bc, rounds = res.bc, res.rounds_run
+        samp = res.sampling_stats
     dt = time.time() - t0
     teps = graph.num_edges * graph.n / max(dt, 1e-9)
     print(f"done in {dt:.2f}s — {rounds} rounds, {teps/1e9:.3f} GTEPS_bc")
+    if samp:
+        print(
+            f"sampling[{samp['mode']}]: "
+            f"{samp['roots_accumulated']}/{samp['num_eligible']} roots "
+            f"(planned k={samp['k_planned']}, seed {samp['seed']}), "
+            f"estimates rescaled x{samp['scale']:.3f}"
+        )
     top = np.argsort(bc)[::-1][: args.top]
     for v in top:
         print(f"  v{int(v):>8d}  BC = {bc[int(v)]:.1f}")

@@ -1,0 +1,82 @@
+"""Serving launcher: batched LM decoding with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b \
+        --reduced --batch 4 --prompt-len 32 --gen 16
+
+Runs prefill then a decode loop — the real serving path the decode
+dry-run cells lower.  ``--reduced`` shrinks the model for CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMArch
+from repro.configs.registry import get_arch
+from repro.launch.train import reduced_lm
+from repro.models import transformer as tf
+
+
+def serve_loop(cfg: LMArch, batch: int, prompt_len: int, gen: int, seed: int = 0):
+    params = tf.init_params(cfg, jax.random.PRNGKey(seed))
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (batch, prompt_len), 0, cfg.vocab
+    )
+    max_seq = prompt_len + gen
+
+    prefill = jax.jit(lambda p, t: tf.prefill(cfg, p, t))
+    decode = jax.jit(
+        lambda p, c, t, pos: tf.decode_step(cfg, p, c, t, pos), donate_argnums=(1,)
+    )
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts)
+    cache = jax.tree.map(
+        lambda c: jnp.pad(
+            c, ((0, 0), (0, 0), (0, max_seq - c.shape[2]), (0, 0), (0, 0))
+        ),
+        cache,
+    )
+    t_prefill = time.time() - t0
+
+    tokens = jnp.argmax(logits, axis=-1)
+    generated = [tokens]
+    t0 = time.time()
+    for i in range(gen - 1):
+        logits, cache = decode(params, cache, tokens, jnp.int32(prompt_len + i))
+        tokens = jnp.argmax(logits, axis=-1)
+        generated.append(tokens)
+    jax.block_until_ready(tokens)
+    t_decode = time.time() - t0
+    out = np.stack([np.asarray(t) for t in generated], axis=1)
+    return out, t_prefill, t_decode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    bundle = get_arch(args.arch)
+    cfg = bundle.arch
+    if args.reduced:
+        cfg = reduced_lm(cfg, layers=2, d_model=256, vocab=2048)
+    out, t_p, t_d = serve_loop(cfg, args.batch, args.prompt_len, args.gen)
+    tok_s = args.batch * (args.gen - 1) / max(t_d, 1e-9)
+    print(f"prefill {t_p:.2f}s; decode {t_d:.2f}s ({tok_s:.1f} tok/s)")
+    print("sample generations (token ids):")
+    for row in out[:2]:
+        print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -42,6 +42,7 @@ __all__ = [
     "device_hbm_footprint",
     "auto_overlap_policy",
     "exchange_operands",
+    "sampled_run_seconds",
     "TILE_OVERHEAD_BYTES",
 ]
 
@@ -153,6 +154,23 @@ def overlap_step_time(compute_s: float, collective_s: float, k: int) -> float:
         return compute_s + collective_s
     lo, hi = sorted((compute_s, collective_s))
     return hi + lo / k
+
+
+def sampled_run_seconds(num_rounds: int, fr: int, round_s: float) -> float:
+    """Wall estimate of a (sampled) run: dispatch blocks × per-round wall.
+
+    The sampled-cost bridge between the per-round prior
+    (:func:`repro.core.distributed.prior_round_seconds`) and the serving
+    layer: a k-root sample schedules ``ceil(k / batch)`` rounds dealt
+    ``fr`` per dispatch block, so its cost is the block count times the
+    same per-round prior the straggler EWMA is seeded from — which is
+    what ``launch/serve_bc.py`` uses to budget refresh slices and what
+    the entrypoints log as the expected sampled-run wall.
+    """
+    if num_rounds <= 0:
+        return 0.0
+    blocks = -(-int(num_rounds) // max(1, int(fr)))  # ceil division
+    return blocks * float(round_s)
 
 
 # ---------------------------------------------------------------------------

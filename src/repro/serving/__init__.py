@@ -1,0 +1,37 @@
+"""Approximate-BC serving: source sampling, adaptive stopping, and the
+versioned snapshot store behind ``launch/serve_bc.py``.
+
+``sampling`` owns the estimator plan (seeded nested root subsets, the
+N/k rescale contract, rank-stability metrics and the ``BCDriver``
+``stop_rule`` seam implementations); ``store`` owns the atomic
+generation-swapped :class:`BCSnapshotStore` that serves top-k and
+per-vertex queries while a background driver refines the estimate.
+"""
+from repro.serving.sampling import (
+    SAMPLING_MODES,
+    AdaptiveStopRule,
+    BlockBudgetStop,
+    SamplePlan,
+    eligible_roots,
+    normalize_sampling,
+    plan_sampling,
+    rank_stability,
+    resolve_sample_size,
+    top_k_indices,
+)
+from repro.serving.store import BCSnapshot, BCSnapshotStore
+
+__all__ = [
+    "SAMPLING_MODES",
+    "AdaptiveStopRule",
+    "BlockBudgetStop",
+    "SamplePlan",
+    "eligible_roots",
+    "normalize_sampling",
+    "plan_sampling",
+    "rank_stability",
+    "resolve_sample_size",
+    "top_k_indices",
+    "BCSnapshot",
+    "BCSnapshotStore",
+]

@@ -1,0 +1,466 @@
+"""Statistical test suite for source-sampled approximate BC.
+
+Three layers prove the estimator (repro/serving/sampling.py + the
+entrypoints' rescale):
+
+* **estimator math** — Brandes' outer loop is per-root additive, so the
+  mean of the rescaled estimator over *all* k-subsets of the eligible
+  roots must equal exact BC (true unbiasedness, enumerated on small
+  graphs); the pipeline's sampled run must equal the oracle's rescaled
+  per-root contribution sum for the planned subset; and
+  ``sample_frac=1.0`` must be *bitwise* the unsampled run — no sampled
+  code path is left at full fraction.
+* **plan / stop-rule properties** (hypothesis) — sample sizes stay in
+  bounds, same-seed samples are nested in k, rank stability is exactly
+  1.0 for unchanged scores and the adaptive stop never fires before
+  ``min_blocks``.
+* **distributed composition** (8 fake host devices) — a full-fraction
+  sampled run matches ``brandes_reference`` within 1e-6 across engines,
+  overlap schedules and meshes, and the stop-rule seam composes with
+  straggler re-deal, ABFT checksums and chaos without breaking
+  exactly-once commits.
+"""
+import itertools
+import os
+
+import numpy as np
+import pytest
+
+try:  # hypothesis widens the deterministic sweeps below when available
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    def hyp(*strategies):
+        def deco(fn):
+            return settings(
+                max_examples=25,
+                deadline=None,
+                suppress_health_check=[
+                    HealthCheck.too_slow, HealthCheck.data_too_large
+                ],
+            )(given(*strategies)(fn))
+
+        return deco
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the container ships without it; CI installs it
+
+    def hyp(*strategies):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    class st:  # strategy expressions must still evaluate at import
+        integers = floats = sampled_from = data = staticmethod(
+            lambda *a, **k: None
+        )
+
+    HAVE_HYPOTHESIS = False
+
+import jax
+
+from repro.core import betweenness_centrality, brandes_reference
+from repro.core.brandes_ref import single_source_dependencies
+from repro.core.distributed import (
+    DIST_ENGINE_KINDS,
+    distributed_betweenness_centrality,
+)
+from repro.core.operators import OVERLAP_POLICIES
+from repro.graphs import disjoint_union, gnp_graph, path_graph, rmat_graph
+from repro.serving.sampling import (
+    AdaptiveStopRule,
+    BlockBudgetStop,
+    eligible_roots,
+    plan_sampling,
+    rank_stability,
+    resolve_sample_size,
+    top_k_indices,
+)
+
+needs8 = pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 host devices")
+
+
+def _per_root_contributions(graph):
+    """[n, n] matrix: row s = source s's dependency contribution."""
+    adj = graph.adjacency_lists()
+    out = np.zeros((graph.n, graph.n))
+    for s in range(graph.n):
+        delta, _, _ = single_source_dependencies(adj, graph.n, s)
+        delta[s] = 0.0
+        out[s] = delta
+    return out
+
+
+# ----------------------------------------------------- plan properties
+def _check_sample_size_bounds(n, frac):
+    k = resolve_sample_size(n, sample_frac=frac)
+    assert 1 <= k <= n
+    assert resolve_sample_size(n, sample_frac=1.0) == n
+    assert resolve_sample_size(n) == n  # no size given: the full pool
+
+
+def test_resolve_sample_size_stays_in_bounds():
+    for n in (1, 2, 7, 64, 500):
+        for frac in (1e-6, 0.01, 0.25, 0.5, 0.999, 1.0):
+            _check_sample_size_bounds(n, frac)
+
+
+@hyp(st.integers(1, 500), st.floats(1e-6, 1.0))
+def test_resolve_sample_size_stays_in_bounds_fuzzed(n, frac):
+    _check_sample_size_bounds(n, frac)
+
+
+def test_resolve_sample_size_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        resolve_sample_size(10, sample_frac=0.5, sample_k=3)  # both
+    with pytest.raises(ValueError):
+        resolve_sample_size(10, sample_k=0)
+    with pytest.raises(ValueError):
+        resolve_sample_size(10, sample_k=11)
+    with pytest.raises(ValueError):
+        resolve_sample_size(10, sample_frac=0.0)
+    with pytest.raises(ValueError):
+        resolve_sample_size(10, sample_frac=1.5)
+    with pytest.raises(ValueError):
+        plan_sampling(np.arange(8), "bogus")
+    with pytest.raises(ValueError):
+        plan_sampling(np.array([], np.int64), "fixed", sample_frac=0.5)
+
+
+def _check_nesting(n, k1, k2, seed):
+    """k' > k ⇒ sample_k ⊂ sample_k' — a grown sample strictly extends
+    the evidence a serving snapshot already accumulated."""
+    eligible = np.arange(n, dtype=np.int64) * 3 + 1  # arbitrary ids
+    p1 = plan_sampling(eligible, "fixed", sample_k=k1, seed=seed)
+    p2 = plan_sampling(eligible, "fixed", sample_k=k2, seed=seed)
+    small = p1.roots
+    big = eligible if p2.roots is None else p2.roots
+    assert small is not None and small.size == k1
+    assert np.setdiff1d(small, big).size == 0  # subset
+    assert np.array_equal(small, np.unique(small))  # sorted unique
+    assert np.setdiff1d(small, eligible).size == 0  # drawn from the pool
+
+
+def test_same_seed_samples_are_nested_in_k():
+    for n, seed in itertools.product((2, 9, 40, 200), (0, 1, 7, 991)):
+        for k1 in {1, n // 3, n - 1} - {0}:
+            for k2 in {k1 + 1, (k1 + n) // 2 + 1, n}:
+                if k1 < k2 <= n:
+                    _check_nesting(n, k1, k2, seed)
+
+
+@hyp(st.integers(2, 200), st.data(), st.integers(0, 10_000))
+def test_same_seed_samples_are_nested_in_k_fuzzed(n, data, seed):
+    k1 = data.draw(st.integers(1, n - 1))
+    k2 = data.draw(st.integers(k1 + 1, n))
+    _check_nesting(n, k1, k2, seed)
+
+
+def test_full_fraction_plan_is_the_identity():
+    """sample_frac=1.0 leaves no sampled code path: roots is None, so
+    the scheduler input is identical to the unsampled call."""
+    eligible = np.arange(17, dtype=np.int64)
+    for mode in ("fixed", "adaptive"):
+        plan = plan_sampling(eligible, mode, sample_frac=1.0)
+        assert plan.roots is None and plan.k == 17 and plan.scale == 1.0
+    # adaptive with no explicit size defaults to the full pool too
+    plan = plan_sampling(eligible, "adaptive")
+    assert plan.roots is None and plan.k == 17
+
+
+# ------------------------------------------------------- estimator math
+def test_estimator_unbiased_over_all_k_subsets():
+    """Mean over ALL k-subsets S of (N/k)·Σ_{s∈S} contribution_s equals
+    exact BC — enumerated, not sampled, so this is exact unbiasedness
+    of the estimator the pipeline implements."""
+    g = gnp_graph(9, 0.35, seed=2)
+    contrib = _per_root_contributions(g)
+    eligible = eligible_roots(g)
+    n_elig = eligible.size
+    exact = brandes_reference(g)
+    for k in (1, 3):
+        subsets = list(itertools.combinations(eligible.tolist(), k))
+        est = np.zeros(g.n)
+        for sub in subsets:
+            est += (n_elig / k) * contrib[list(sub)].sum(axis=0)
+        est /= len(subsets)
+        np.testing.assert_allclose(est, exact, rtol=1e-9, atol=1e-9)
+
+
+def test_estimator_unbiased_singletons_64_vertices():
+    """k=1 unbiasedness on a 64-vertex graph: the mean over all
+    1-subsets is N · mean_s contribution_s = exact BC."""
+    g = gnp_graph(64, 0.08, seed=5)
+    contrib = _per_root_contributions(g)
+    eligible = eligible_roots(g)
+    est = contrib[eligible].mean(axis=0) * eligible.size
+    np.testing.assert_allclose(est, brandes_reference(g), rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("k,seed", [(5, 0), (10, 3), (17, 7)])
+def test_pipeline_matches_rescaled_oracle(k, seed):
+    """The sampled pipeline (plan → restricted schedule → rescale) must
+    equal the oracle's rescaled contribution sum for the same subset."""
+    g = gnp_graph(40, 0.15, seed=2)
+    res = betweenness_centrality(
+        g, batch_size=4, heuristics="h0", engine_kind="sparse",
+        sampling="fixed", sample_k=k, sample_seed=seed,
+    )
+    plan = plan_sampling(eligible_roots(g), "fixed", None, k, seed)
+    oracle = plan.scale * brandes_reference(g, sources=plan.roots)
+    np.testing.assert_allclose(res.bc, oracle, rtol=1e-5, atol=1e-4)
+    stats = res.sampling_stats
+    assert stats["roots_accumulated"] == k
+    assert stats["scale"] == pytest.approx(plan.scale)
+    assert not res.stopped_early
+
+
+def test_full_fraction_is_bitwise_the_unsampled_run():
+    """Rescaling invariance: sample_frac=1.0 reproduces the unsampled
+    schedule exactly — same rounds, same accumulation order, bitwise
+    equal scores (no rescale drift: scale is exactly 1.0)."""
+    g = gnp_graph(32, 0.15, seed=4)
+    off = betweenness_centrality(g, batch_size=8, heuristics="h0")
+    full = betweenness_centrality(
+        g, batch_size=8, heuristics="h0", sampling="fixed", sample_frac=1.0
+    )
+    assert np.array_equal(off.bc, full.bc)  # bitwise, not allclose
+    assert full.sampling_stats["scale"] == 1.0
+    assert full.rounds_run == off.rounds_run
+
+
+def test_sampling_validation():
+    g = gnp_graph(12, 0.3, seed=0)
+    with pytest.raises(ValueError):  # corrections are not root-additive
+        betweenness_centrality(g, heuristics="h1", sampling="fixed",
+                               sample_frac=0.5)
+    with pytest.raises(ValueError):  # truncation needs the rescale
+        betweenness_centrality(g, stop_rule=BlockBudgetStop(1))
+    with pytest.raises(ValueError):
+        betweenness_centrality(g, sampling="fixed", sample_frac=0.5,
+                               sample_k=3)
+
+
+# ------------------------------------------------- rank stability metric
+def _check_stability_identity(n, seed, method):
+    """Unchanged (or merely rescaled) scores are exactly 1.0-stable —
+    watching the raw accumulator is equivalent to watching BC_hat."""
+    rng = np.random.default_rng(seed)
+    x = rng.random(n)
+    assert rank_stability(x, x.copy(), k=10, method=method) == 1.0
+    assert rank_stability(x, 2.5 * x, k=10, method=method) == 1.0
+
+
+@pytest.mark.parametrize("method", ["jaccard", "kendall"])
+def test_rank_stability_identity_and_scale_invariance(method):
+    for n, seed in itertools.product((2, 5, 10, 11, 64), range(6)):
+        _check_stability_identity(n, seed, method)
+
+
+@hyp(
+    st.integers(2, 64),
+    st.integers(0, 10_000),
+    st.sampled_from(["jaccard", "kendall"]),
+)
+def test_rank_stability_identity_fuzzed(n, seed, method):
+    _check_stability_identity(n, seed, method)
+
+
+def test_rank_stability_detects_divergence():
+    a = np.zeros(20)
+    b = np.zeros(20)
+    a[:5] = [5, 4, 3, 2, 1]
+    b[10:15] = [5, 4, 3, 2, 1]
+    assert rank_stability(a, b, k=5) == 0.0  # disjoint top-5 sets
+    swapped = a.copy()
+    swapped[0], swapped[1] = a[1], a[0]
+    # same set, different internal order: jaccard blind, kendall not
+    assert rank_stability(a, swapped, k=5, method="jaccard") == 1.0
+    assert rank_stability(a, swapped, k=5, method="kendall") < 1.0
+    with pytest.raises(ValueError):
+        rank_stability(a, b, method="spearman")
+
+
+def test_top_k_ties_break_deterministically():
+    scores = np.array([1.0, 3.0, 3.0, 2.0])
+    assert top_k_indices(scores, 3).tolist() == [1, 2, 3]
+
+
+# ------------------------------------------------------ stop-rule seam
+def _check_stop_respects_min_blocks(window, min_blocks):
+    """Even a perfectly frozen accumulator cannot stop the run before
+    min_blocks dispatch blocks — and once frozen, every stability check
+    is exactly 1.0 (monotone stability of an unchanging accumulator)."""
+    rule = AdaptiveStopRule(top_k=4, window=window, min_blocks=min_blocks)
+    bc = np.arange(16, dtype=np.float64)
+    fired_at = None
+    for block in range(1, 40):
+        if rule(bc, block):
+            fired_at = block
+            break
+    assert fired_at == max(min_blocks, window + 1)
+    assert rule.stats["fired_at_block"] == fired_at
+    assert all(s == 1.0 for s in rule.stats["stability"])
+
+
+def test_adaptive_stop_never_fires_before_min_blocks():
+    for window, min_blocks in itertools.product(range(1, 9), range(1, 9)):
+        _check_stop_respects_min_blocks(window, min_blocks)
+
+
+@hyp(st.integers(1, 8), st.integers(1, 8))
+def test_adaptive_stop_never_fires_before_min_blocks_fuzzed(window, min_blocks):
+    _check_stop_respects_min_blocks(window, min_blocks)
+
+
+def test_adaptive_stop_defers_while_ranks_move():
+    """A top-k that keeps changing defers the stop indefinitely."""
+    rule = AdaptiveStopRule(top_k=3, window=2, min_blocks=1)
+    n = 24
+    for block in range(1, 21):
+        bc = np.zeros(n)
+        bc[(3 * block) % n] = 10.0  # rotating top vertex
+        bc[(3 * block + 1) % n] = 5.0
+        assert not rule(bc, block)
+    assert rule.stats["fired_at_block"] is None
+    assert all(s < 1.0 for s in rule.stats["stability"])
+
+
+def test_block_budget_stop_fires_exactly_at_budget():
+    rule = BlockBudgetStop(3)
+    bc = np.zeros(4)
+    assert [rule(bc, b) for b in (1, 2, 3, 4)] == [False, False, True, True]
+    assert rule.stats["fired_at_block"] == 3
+    with pytest.raises(ValueError):
+        BlockBudgetStop(0)
+
+
+def test_adaptive_acceptance_rmat_8_8():
+    """The headline acceptance: adaptive mode on seeded rmat(8,8)
+    reaches top-10 Jaccard ≥ 0.9 vs exact BC while dispatching < 50%
+    of the schedule's rounds."""
+    g = rmat_graph(8, 8, seed=3)
+    exact = brandes_reference(g)
+    rule = AdaptiveStopRule(top_k=10, window=3, min_blocks=3)
+    res = betweenness_centrality(
+        g, batch_size=8, heuristics="h0", engine_kind="sparse",
+        sampling="adaptive", stop_rule=rule,
+    )
+    assert res.stopped_early
+    total_rounds = len(res.schedule.rounds)
+    assert res.rounds_run < 0.5 * total_rounds, (res.rounds_run, total_rounds)
+    jac = rank_stability(exact, res.bc, k=10, method="jaccard")
+    assert jac >= 0.9, jac
+    stats = res.sampling_stats
+    assert stats["scale"] > 1.0  # a truncated run really was rescaled
+    assert stats["roots_accumulated"] < stats["num_eligible"]
+    assert res.stop_stats["fired_at_block"] is not None
+
+
+def test_checkpoint_resume_composes_with_sampling(tmp_path):
+    """Rescale and resume commute: the checkpoint stores the *raw*
+    accumulator, so a run killed mid-sample resumes and finishes with
+    the same estimate an uninterrupted run produces."""
+    from repro.distributed.fault_tolerance import BCCheckpoint
+
+    g = gnp_graph(36, 0.15, seed=6)
+    kw = dict(
+        batch_size=4, heuristics="h0", engine_kind="sparse",
+        sampling="fixed", sample_k=12, sample_seed=5,
+    )
+    ckpt = BCCheckpoint(os.path.join(tmp_path, "s.npz"))
+    partial = betweenness_centrality(
+        g, checkpoint=ckpt, stop_rule=BlockBudgetStop(1), **kw
+    )
+    assert partial.stopped_early
+    assert 0 < partial.sampling_stats["roots_accumulated"] < 12
+    resumed = betweenness_centrality(g, checkpoint=ckpt, **kw)
+    assert not resumed.stopped_early
+    assert resumed.sampling_stats["roots_accumulated"] == 12
+    assert resumed.sampling_stats["scale"] == pytest.approx(
+        resumed.sampling_stats["num_eligible"] / 12
+    )
+    uninterrupted = betweenness_centrality(g, **kw)
+    np.testing.assert_allclose(resumed.bc, uninterrupted.bc,
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------- distributed composition (8 dev)
+FULL_SAMPLE_MATRIX = [
+    (kind, overlap, (2, 4))
+    for kind in DIST_ENGINE_KINDS
+    for overlap in OVERLAP_POLICIES
+] + [("sparse", overlap, (4, 2)) for overlap in OVERLAP_POLICIES]
+
+
+@needs8
+@pytest.mark.parametrize("engine_kind,overlap,grid", FULL_SAMPLE_MATRIX)
+def test_full_sample_distributed_parity(engine_kind, overlap, grid):
+    """sampling="fixed", sample_frac=1.0 must match brandes_reference
+    within 1e-6 for every distributed engine × overlap schedule × grid
+    orientation — the sampled plumbing adds nothing at full fraction."""
+    from repro.launch.mesh import make_mesh
+
+    g = gnp_graph(26, 0.15, seed=0)
+    mesh = make_mesh(grid, ("data", "model"))
+    bc, _ = distributed_betweenness_centrality(
+        g, mesh, batch_size=8, engine_kind=engine_kind, overlap=overlap,
+        sampling="fixed", sample_frac=1.0,
+    )
+    np.testing.assert_allclose(bc, brandes_reference(g), rtol=1e-6, atol=1e-6)
+
+
+class _NeverStop:
+    """Inert stop rule: exercises the seam without truncating."""
+
+    stats = {"rule": "never"}
+
+    def __call__(self, bc, blocks_done):
+        return False
+
+
+@needs8
+def test_subcluster_sampled_redeal_checksum_chaos():
+    """The stop-rule seam composes with the whole fault stack: a
+    full-fraction sampled run under straggler="redeal" +
+    integrity="checksum" + transient chaos still commits every round
+    exactly once and matches the oracle within 1e-6."""
+    from repro.launch.mesh import make_mesh
+
+    g = disjoint_union(path_graph(40), gnp_graph(16, 0.3, seed=4))
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    result = distributed_betweenness_centrality(
+        g, mesh, replica_axis="pod", batch_size=8,
+        straggler="redeal", integrity="checksum",
+        chaos="seed=5;transient@1x2", retry_backoff_s=1e-3,
+        sampling="fixed", sample_frac=1.0, stop_rule=_NeverStop(),
+        full_result=True,
+    )
+    np.testing.assert_allclose(
+        result.bc, brandes_reference(g), rtol=1e-6, atol=1e-6
+    )
+    assert result.rounds_run == len(result.schedule.rounds)  # exactly-once
+    assert not result.stopped_early
+    assert result.sampling_stats["scale"] == 1.0
+    assert result.recovery_stats["transient_errors"] == 2
+    assert result.recovery_stats["integrity"]["mode"] == "checksum"
+
+
+@needs8
+def test_subcluster_straggler_loop_honors_stop_rule():
+    """The straggler (re-deal) loop consults the same stop seam: a
+    block budget truncates the replicated run and the estimate is
+    rescaled by the roots actually committed."""
+    from repro.launch.mesh import make_mesh
+
+    g = gnp_graph(25, 0.15, seed=2)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    result = distributed_betweenness_centrality(
+        g, mesh, replica_axis="pod", batch_size=4, straggler="redeal",
+        sampling="fixed", sample_frac=1.0, stop_rule=BlockBudgetStop(2),
+        full_result=True,
+    )
+    assert result.stopped_early
+    stats = result.sampling_stats
+    assert 0 < stats["roots_accumulated"] < stats["num_eligible"]
+    assert stats["scale"] == pytest.approx(
+        stats["num_eligible"] / stats["roots_accumulated"]
+    )
+    assert np.all(np.isfinite(result.bc)) and np.all(result.bc >= -1e-9)

@@ -1,0 +1,198 @@
+"""Snapshot store + serving front end: atomicity, accounting, refresh.
+
+* the store's single-reference swap is atomic under a racing reader —
+  a grabbed snapshot is internally consistent forever and generations
+  only move forward;
+* every query is exactly one of hit / stale_hit / miss
+  (``queries == hits + stale_hits + misses`` is an invariant);
+* republishing from a growing checkpoint can only improve the served
+  top-k (rank error vs exact is non-increasing across generations on a
+  seeded rmat graph, ending exact);
+* a killed background refresher's replacement republishes the last
+  *committed* generation at startup and finishes the remaining rounds
+  instead of recomputing (kill-and-resume through BCCheckpoint).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import betweenness_centrality, brandes_reference
+from repro.distributed.fault_tolerance import BCCheckpoint
+from repro.graphs import gnp_graph, rmat_graph
+from repro.launch.serve_bc import run_serving
+from repro.serving import BCSnapshotStore, BlockBudgetStop
+from repro.serving.sampling import eligible_roots, rank_stability, top_k_indices
+
+
+# ------------------------------------------------------------ the store
+def test_query_accounting_is_exhaustive():
+    store = BCSnapshotStore()
+    assert store.top_k(3) is None  # cold: miss
+    assert store.score(0) is None  # also a miss
+    gen = store.publish(np.array([1.0, 3.0, 2.0]), {"tag": "a"})
+    assert gen == 1 and store.generation == 1
+    snap, top = store.top_k(2)
+    assert snap.generation == 1 and [v for v, _ in top] == [1, 2]
+    snap, val = store.score(1)
+    assert val == 3.0
+    store.begin_refresh()
+    assert store.refreshing
+    store.top_k(1)  # served, but stale
+    store.end_refresh()
+    store.top_k(1)
+    st = store.stats
+    assert st == {
+        "queries": 6, "hits": 3, "misses": 2, "stale_hits": 1, "publishes": 1,
+    }
+    assert st["queries"] == st["hits"] + st["stale_hits"] + st["misses"]
+
+
+def test_snapshots_are_isolated_from_caller_mutation():
+    store = BCSnapshotStore()
+    bc = np.array([1.0, 2.0])
+    store.publish(bc)
+    bc[0] = 99.0  # caller keeps mutating its buffer
+    assert store.snapshot().bc[0] == 1.0
+
+
+def test_atomic_swap_under_racing_reader():
+    """Writer publishes bc ≡ generation; a racing reader must always see
+    a self-consistent snapshot (all entries equal, and equal to the
+    snapshot's generation number) and a non-decreasing generation."""
+    store = BCSnapshotStore()
+    n, gens = 512, 300
+    stop = threading.Event()
+    bad: list[str] = []
+
+    def reader():
+        last = 0
+        while not stop.is_set():
+            res = store.top_k(4)
+            if res is None:
+                continue
+            snap, top = res
+            vals = {score for _, score in top}
+            if len(vals) != 1 or vals != {float(snap.generation)}:
+                bad.append(f"torn snapshot: gen={snap.generation} {vals}")
+            if snap.generation < last:
+                bad.append(f"generation regressed {last}->{snap.generation}")
+            last = snap.generation
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for g in range(gens):
+        store.publish(np.full(n, float(g + 1)))
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not bad, bad[:5]
+    assert store.generation == gens
+    st = store.stats
+    assert st["queries"] == st["hits"] + st["stale_hits"] + st["misses"]
+
+
+def test_publish_from_checkpoint_rescales_raw_accumulator(tmp_path):
+    """The checkpoint stores the raw accumulator; the store recomputes
+    the N/k rescale from the committed per-root ledger at publish."""
+    ckpt = BCCheckpoint(os.path.join(tmp_path, "c.npz"))
+    assert BCSnapshotStore().publish_from_checkpoint(ckpt) is None  # cold
+    raw = np.array([2.0, 0.5, 1.0])
+    ckpt.save(raw, {3: 4.0, 7: 2.0}, [0, 1], "fp")
+    store = BCSnapshotStore()
+    gen = store.publish_from_checkpoint(ckpt, num_eligible=8)
+    assert gen == 1
+    snap = store.snapshot()
+    np.testing.assert_allclose(snap.bc, raw * 4.0)  # N/k = 8/2
+    assert snap.meta["roots_accumulated"] == 2
+    assert snap.meta["scale"] == 4.0
+    assert snap.meta["committed_rounds"] == 2
+    # without num_eligible the raw accumulator is served unscaled
+    store2 = BCSnapshotStore()
+    store2.publish_from_checkpoint(ckpt)
+    np.testing.assert_allclose(store2.snapshot().bc, raw)
+
+
+# ------------------------------------------------- refresh generations
+def test_generation_rank_error_non_increasing(tmp_path):
+    """Each refresh slice extends the committed prefix, so the served
+    top-10's rank error vs exact can only shrink — and the last
+    generation (full schedule) is exact."""
+    g = rmat_graph(7, 8, seed=1)
+    exact = brandes_reference(g)
+    ckpt = BCCheckpoint(os.path.join(tmp_path, "g.npz"))
+    store = BCSnapshotStore()
+    n_elig = eligible_roots(g).size
+    jaccards = []
+    for _ in range(40):
+        res = betweenness_centrality(
+            g, batch_size=8, heuristics="h0", engine_kind="sparse",
+            checkpoint=ckpt, sampling="fixed", sample_frac=1.0,
+            stop_rule=BlockBudgetStop(2),
+        )
+        store.publish_from_checkpoint(ckpt, num_eligible=n_elig)
+        jaccards.append(rank_stability(exact, store.snapshot().bc, k=10))
+        if not res.stopped_early:
+            break
+    assert len(jaccards) > 2  # really was refined across generations
+    assert store.generation == len(jaccards)
+    assert all(b >= a for a, b in zip(jaccards, jaccards[1:])), jaccards
+    assert jaccards[-1] == 1.0
+    np.testing.assert_allclose(store.snapshot().bc, exact,
+                               rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------ the serving front end
+def test_run_serving_single_device(tmp_path):
+    g = gnp_graph(40, 0.15, seed=2)
+    out = run_serving(
+        g, None, ckpt_path=os.path.join(tmp_path, "s.npz"),
+        batch_size=4, sampling="fixed", sample_frac=1.0,
+        refresh_blocks=2, generations=4, queries=6, top_k=5,
+    )
+    st = out["stats"]
+    assert st["queries"] == st["hits"] + st["stale_hits"] + st["misses"]
+    assert st["misses"] >= 1 and st["hits"] >= 1
+    gens = [h["generation"] for h in out["history"]]
+    assert gens == sorted(gens) and out["generations_published"] >= 2
+    assert not out["refresh_runs"][-1]["stopped_early"]  # last slice final
+    exact = brandes_reference(g)
+    np.testing.assert_allclose(out["final_bc"], exact, rtol=1e-5, atol=1e-4)
+    assert out["final_top_k"] == [int(v) for v in top_k_indices(exact, 5)]
+
+
+def test_run_serving_rejects_unsampled():
+    g = gnp_graph(12, 0.3, seed=0)
+    with pytest.raises(ValueError):
+        run_serving(g, None, ckpt_path="/tmp/unused.npz", sampling="off")
+
+
+def test_killed_refresher_resumes_from_committed_generation(tmp_path):
+    """A refresher killed mid-sample leaves a committed checkpoint; its
+    replacement serves that generation immediately (no cold miss) and
+    runs only the remaining rounds."""
+    g = gnp_graph(40, 0.15, seed=2)
+    ckpt_path = os.path.join(tmp_path, "s.npz")
+    kw = dict(batch_size=4, heuristics="h0", engine_kind="sparse",
+              sampling="fixed", sample_frac=1.0)
+    # the "killed" refresher: two committed blocks, then gone
+    partial = betweenness_centrality(
+        g, checkpoint=BCCheckpoint(ckpt_path),
+        stop_rule=BlockBudgetStop(2), **kw,
+    )
+    assert partial.stopped_early
+    out = run_serving(
+        g, None, ckpt_path=ckpt_path, batch_size=4,
+        sampling="fixed", sample_frac=1.0,
+        refresh_blocks=2, generations=3, queries=4, top_k=5,
+    )
+    st = out["stats"]
+    assert st["misses"] == 0  # startup republish served the cold query
+    assert any(h["meta"].get("resumed") for h in out["history"][:1])
+    total_rounds = -(-eligible_roots(g).size // 4)
+    resumed_rounds = sum(r["rounds_run"] for r in out["refresh_runs"])
+    assert resumed_rounds == total_rounds - partial.rounds_run  # no recompute
+    np.testing.assert_allclose(out["final_bc"], brandes_reference(g),
+                               rtol=1e-5, atol=1e-4)

@@ -37,6 +37,7 @@ def main() -> int:
     from repro.core.operators import OVERLAP_POLICIES
     from repro.core.scheduler import HEURISTICS_MODES
     from repro.distributed.chaos import FAULT_KINDS
+    from repro.serving import SAMPLING_MODES
 
     overlap_choices = tuple(OVERLAP_POLICIES) + ("auto",)  # CLI surface
     required = {
@@ -49,6 +50,7 @@ def main() -> int:
             "autotune (AUTOTUNE_MODES)": AUTOTUNE_MODES,
             "chaos (FAULT_KINDS)": FAULT_KINDS,
             "integrity (INTEGRITY_MODES)": INTEGRITY_MODES,
+            "sampling (SAMPLING_MODES)": SAMPLING_MODES,
         },
         "ARCHITECTURE.md": {
             "engine_kind (distributed DIST_ENGINE_KINDS)": DIST_ENGINE_KINDS,
@@ -57,6 +59,7 @@ def main() -> int:
             "autotune (AUTOTUNE_MODES)": AUTOTUNE_MODES,
             "chaos (FAULT_KINDS)": FAULT_KINDS,
             "integrity (INTEGRITY_MODES)": INTEGRITY_MODES,
+            "sampling (SAMPLING_MODES)": SAMPLING_MODES,
         },
     }
     failures: list[str] = []

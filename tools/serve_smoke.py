@@ -1,0 +1,112 @@
+"""Serving smoke: snapshot-served BC query loop vs exact on fake devices.
+
+``make serve-smoke`` / the distributed-overlap CI job run this to prove
+the sampled-BC serving stack end to end on 8 fake host devices:
+
+  1. **serve** — :func:`repro.launch.serve_bc.run_serving` on a 2x4 mesh
+     with ``sampling="fixed", sample_frac=1.0``: a background refresher
+     runs the exact schedule in block-budgeted slices over a shared
+     BCCheckpoint while the foreground query loop polls ``top_k``.
+  2. **accounting** — every query is exactly one of hit / stale_hit /
+     miss; the cold query before any generation exists must miss, and
+     the settled query after the refresher joins must hit.
+  3. **parity** — the final generation is the full schedule, so its BC
+     must match the Brandes oracle within 1e-6-scale f32 tolerance, and
+     the served top-10 must equal the exact top-10.
+  4. **resume** — a second ``run_serving`` over the same checkpoint
+     republishes the committed snapshot at startup (no miss, no new
+     rounds) — the killed-refresher replacement path.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.common import ensure_devices, make_mesh  # noqa: E402
+
+ensure_devices(8)
+
+import numpy as np  # noqa: E402
+
+
+def main() -> int:
+    if not ensure_devices(8):
+        print("serve_smoke: needs 8 devices, have fewer — skipping")
+        return 0
+
+    from repro.core.brandes_ref import brandes_reference
+    from repro.graphs import rmat_graph
+    from repro.launch.serve_bc import run_serving
+    from repro.serving.sampling import top_k_indices
+
+    graph = rmat_graph(7, 8, seed=3)
+    mesh = make_mesh((2, 4))
+    exact = brandes_reference(graph)
+    exact_top = set(int(v) for v in top_k_indices(exact, 10))
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt = os.path.join(tmp, "serve.npz")
+        out = run_serving(
+            graph,
+            mesh,
+            ckpt_path=ckpt,
+            batch_size=16,
+            sampling="fixed",
+            sample_frac=1.0,
+            refresh_blocks=2,
+            generations=3,
+            queries=8,
+            top_k=10,
+        )
+
+        st = out["stats"]
+        assert st["queries"] == st["hits"] + st["stale_hits"] + st["misses"], st
+        assert st["misses"] >= 1, f"cold query should miss: {st}"
+        assert st["hits"] >= 1, f"settled query should hit: {st}"
+        assert st["stale_hits"] >= 1, f"mid-refresh queries should be stale: {st}"
+        gens = [h["generation"] for h in out["history"]]
+        assert gens == sorted(gens), f"generations regressed: {gens}"
+        assert out["generations_published"] >= 2, out["generations_published"]
+
+        err = float(np.abs(out["final_bc"] - exact).max())
+        assert err < 1e-4, f"final-generation parity vs Brandes: {err}"
+        served_top = set(out["final_top_k"])
+        assert served_top == exact_top, (served_top, exact_top)
+
+        # killed-refresher replacement: resumes (and serves) the
+        # committed snapshot without recomputing any rounds
+        out2 = run_serving(
+            graph,
+            mesh,
+            ckpt_path=ckpt,
+            batch_size=16,
+            sampling="fixed",
+            sample_frac=1.0,
+            generations=1,
+            queries=3,
+            top_k=10,
+        )
+        assert out2["stats"]["misses"] == 0, out2["stats"]
+        assert sum(r["rounds_run"] for r in out2["refresh_runs"]) == 0, (
+            out2["refresh_runs"]
+        )
+        assert set(out2["final_top_k"]) == exact_top
+
+    print(
+        f"serve_smoke OK: {st['queries']} queries "
+        f"({st['hits']} hit / {st['stale_hits']} stale / "
+        f"{st['misses']} miss) across {out['generations_published']} "
+        f"generations; final parity {err:.2e}; resume served "
+        f"{out2['stats']['queries']} queries with 0 recomputed rounds"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
