@@ -62,6 +62,20 @@ chaos-smoke:
 serve-smoke:
 	PYTHONPATH=src:. python tools/serve_smoke.py
 
+# Weighted-traversal smoke: bucketed (delta-stepping) BC vs the
+# Dijkstra oracle on 8 fake host devices (tools/weighted_smoke.py) —
+# single-device + distributed engines on a dyadic-weighted graph, plus
+# the unit-weight bitwise reduction to the unweighted engine.
+weighted-smoke:
+	PYTHONPATH=src:. python tools/weighted_smoke.py
+
+# CI shard map drift gate: every tests/test_*.py on disk must belong to
+# exactly one shard in tools/ci_shards.py (the sharded CI matrix runs
+# `--files <shard>` lists; a file in no shard would silently never run
+# in the sharded job).
+shard-check:
+	python tools/ci_shards.py --check
+
 # Documentation health: the quickstart must execute, and the engine /
 # overlap / heuristics / straggler / autotune choice lists in README.md
 # + ARCHITECTURE.md must match the source-of-truth constants.
@@ -69,4 +83,5 @@ docs-check:
 	PYTHONPATH=src python examples/quickstart.py
 	python tools/check_docs.py
 
-.PHONY: verify test lint bench bench-smoke bench-check autotune-smoke chaos-smoke docs-check
+.PHONY: verify test lint bench bench-smoke bench-check autotune-smoke \
+	chaos-smoke serve-smoke weighted-smoke shard-check docs-check

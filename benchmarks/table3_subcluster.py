@@ -372,6 +372,53 @@ def _sampling_bench() -> dict:
     return record
 
 
+def _weighted_bench() -> dict:
+    """(f) weighted (bucketed) traversal: wall + parity per engine.
+
+    Dyadic weights keep every shortest distance an exact f32 sum, so the
+    Dijkstra-oracle parity is deterministic per jax version; ``delta``
+    is :func:`auto_delta`'s derivation — a pure function of the graph,
+    gated exactly by tools/check_bench.py.  Walls are machine-speed
+    (loose gate); the bucket loop's cost relative to the level loop is
+    the number being tracked.
+    """
+    import time
+
+    from repro.core.operators import auto_delta
+
+    g = rmat_graph(6, 4, seed=5, weights="dyadic")
+    exact = brandes_reference(g)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    delta = auto_delta(g)
+    record: dict = {
+        "graph": {"kind": "rmat_graph(6, 4, seed=5, weights='dyadic')",
+                  "n": g.n, "m": int(g.num_edges), "weights": "dyadic"},
+        "mesh": "2x4",
+        "batch_size": 16,
+        "delta": delta,
+        "engines": {},
+    }
+    for engine_kind in ("sparse", "pallas"):
+        t0 = time.perf_counter()
+        bc, schedule = distributed_betweenness_centrality(
+            g, mesh, engine_kind=engine_kind, weighted=True, batch_size=16
+        )
+        sec = time.perf_counter() - t0
+        err = float(np.abs(np.asarray(bc) - exact).max())
+        assert err < 1e-4, f"weighted {engine_kind} diverged: {err}"
+        record["engines"][engine_kind] = {
+            "wall_s": sec,
+            "rounds": len(schedule.rounds),
+            "max_abs_err_vs_brandes": err,
+        }
+        emit(
+            f"table3/weighted_{engine_kind}",
+            sec * 1e6,
+            f"delta={delta:.4g};rounds={len(schedule.rounds)};err={err:.2e}",
+        )
+    return record
+
+
 def run() -> None:
     if not ensure_devices(8):
         emit("table3/skipped", 0.0, "needs 8 host devices")
@@ -381,6 +428,7 @@ def run() -> None:
     record["deal"] = _deal_bench()
     record["integrity"] = _integrity_bench()
     record["sampling"] = _sampling_bench()
+    record["weighted"] = _weighted_bench()
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
     emit("table3/bench_json", 0.0, f"wrote={BENCH_JSON}")

@@ -21,9 +21,22 @@ from repro.core.driver import (
     normalize_straggler,
     traversal_round,
 )
-from repro.core.operators import PallasDenseOperator, normalize_overlap
+from repro.core.operators import (
+    PallasDenseOperator,
+    WeightedDenseOperator,
+    WeightedSparseOperator,
+    auto_delta,
+    normalize_overlap,
+)
 from repro.core.scheduler import build_schedule
 from repro.graphs.graph import Graph
+
+# heuristics usable under weighted traversal: the 1-degree reduction (and
+# its tree-contraction variant) is purely combinatorial — every path
+# to/through a pendant subtree crosses its anchor whatever the edge
+# weights — but the 2-degree derivation (h2/h3/h3t) rewrites *levels*
+# (lvl_c = min(lvl_a, lvl_b) + 1), which assumes unit edge lengths.
+WEIGHTED_HEURISTICS = ("h0", "h1", "h1t")
 
 __all__ = [
     "BCResult",
@@ -89,6 +102,26 @@ def _make_operator_fn(graph_residual, n, engine_kind):
     raise ValueError(f"unknown engine {engine_kind!r}")
 
 
+def _make_weighted_operator_fn(graph_residual, n, engine_kind, delta):
+    """Weighted operator factory (bucketed traversal, all engine kinds).
+
+    "sparse" keeps the arc-list layout; "dense"/"pallas"/"pallas_bf16"
+    share the dense float32 weight-matrix operator — the weighted bucket
+    steps are XLA contractions (no fused Pallas bucket kernels yet; see
+    operators.py), and weights stay float32 even under pallas_bf16
+    because distances feed exact equality masks.
+    """
+    if engine_kind == "sparse":
+        src_p, dst_p, _ = graph_residual.padded_arcs(multiple=8)
+        w_p = graph_residual.padded_arc_weights(multiple=8)
+        src_j, dst_j, w_j = jnp.asarray(src_p), jnp.asarray(dst_p), jnp.asarray(w_p)
+        return lambda: WeightedSparseOperator(src_j, dst_j, w_j, n, delta)
+    if engine_kind in ("dense", "pallas", "pallas_bf16"):
+        weights = jnp.asarray(graph_residual.dense_weights(np.float32))
+        return lambda: WeightedDenseOperator(weights, delta)
+    raise ValueError(f"unknown engine {engine_kind!r}")
+
+
 def betweenness_centrality(
     graph: Graph,
     batch_size: int = 32,
@@ -105,14 +138,24 @@ def betweenness_centrality(
     sample_k: int | None = None,
     sample_seed: int = 0,
     stop_rule=None,
+    weighted: bool = False,
+    delta: float | None = None,
 ) -> BCResult:
-    """Exact or source-sampled BC of an undirected, unweighted graph
+    """Exact or source-sampled BC of an undirected graph
     (paper conventions: unnormalized, both traversal directions counted).
 
     Args:
       graph:       input graph.
       batch_size:  concurrent sources per round (multi-source width).
       heuristics:  "h0" | "h1" | "h2" | "h3" (paper Fig. 12 naming).
+      weighted:    run the bucketed (delta-stepping) weighted traversal;
+                   requires ``graph.w`` (``Graph.from_edges(weights=)``)
+                   and restricts ``heuristics`` to
+                   :data:`WEIGHTED_HEURISTICS`.  False on a weighted
+                   graph ignores the weights (unit-distance BC).
+      delta:       bucket width Δ for the weighted traversal; None derives
+                   it from the edge-weight statistics
+                   (:func:`repro.core.operators.auto_delta`).
       engine_kind: "dense" (n×n matmul) | "sparse" (segment-sum) |
                    "pallas" / "pallas_bf16" (fused level kernels).
       num_levels:  optional static level bound (compile-friendly); must be
@@ -180,15 +223,46 @@ def betweenness_centrality(
         )
     if plan.mode == "adaptive" and stop_rule is None:
         stop_rule = AdaptiveStopRule()
+    if weighted:
+        if graph.w is None:
+            raise ValueError(
+                "weighted=True needs edge weights: build the graph with "
+                "Graph.from_edges(..., weights=) or a weighted generator "
+                "(graphs.generators WEIGHT_MODES)"
+            )
+        if heuristics not in WEIGHTED_HEURISTICS:
+            raise ValueError(
+                f"heuristics={heuristics!r} is level-based (2-degree "
+                f"derivation assumes unit edge lengths); weighted runs "
+                f"accept {WEIGHTED_HEURISTICS}"
+            )
+        if num_levels is not None:
+            raise ValueError(
+                "num_levels is a static level bound for the level-"
+                "synchronous engine; the weighted bucket loop's trip "
+                "count is data-dependent"
+            )
+        if delta is None:
+            delta = auto_delta(graph)
+        if not (float(delta) > 0 and np.isfinite(delta)):
+            raise ValueError(f"delta must be positive and finite, got {delta}")
+    elif delta is not None:
+        raise ValueError("delta is only meaningful with weighted=True")
     n = graph.n
     schedule, prep, residual, omega_i = build_schedule(
         graph, batch_size=batch_size, heuristics=heuristics, roots=plan.roots
     )
     omega = jnp.asarray(omega_i, jnp.float32)
 
-    operator_fn, fused_adjacency, interpret = _make_operator_fn(
-        residual, n, engine_kind
-    )
+    if weighted:
+        operator_fn = _make_weighted_operator_fn(
+            residual, n, engine_kind, float(delta)
+        )
+        fused_adjacency, interpret = None, None
+    else:
+        operator_fn, fused_adjacency, interpret = _make_operator_fn(
+            residual, n, engine_kind
+        )
     round_fn = make_round_fn(
         operator_fn,
         n,

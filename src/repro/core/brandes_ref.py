@@ -4,16 +4,26 @@ This is the correctness oracle for every other implementation in the
 repository: the JAX single-device engine, the 2-D distributed engine and
 all heuristic paths must match it to float tolerance.  O(nm); use on
 small/medium graphs only.
+
+Weighted graphs (``graph.w`` set) use the Dijkstra variant: the BFS
+queue becomes a binary heap, the predecessor test becomes
+``dist[w] == dist[v] + w_vw`` and the dependency sweep walks vertices in
+descending settled-distance order (Brandes 2001, §4).
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 
 import numpy as np
 
 from repro.graphs.graph import Graph
 
-__all__ = ["brandes_reference", "single_source_dependencies"]
+__all__ = [
+    "brandes_reference",
+    "single_source_dependencies",
+    "single_source_dependencies_weighted",
+]
 
 
 def single_source_dependencies(
@@ -46,17 +56,63 @@ def single_source_dependencies(
     return delta, sigma, depth
 
 
+def single_source_dependencies_weighted(
+    wadj: list[tuple[np.ndarray, np.ndarray]], n: int, s: int, dtype=np.float64
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One weighted Brandes round from source ``s`` (Dijkstra forward).
+
+    Returns (delta [n], sigma [n], dist [n]); dist is +inf off-component.
+    """
+    sigma = np.zeros(n, dtype=dtype)
+    dist = np.full(n, np.inf, dtype=dtype)
+    sigma[s] = 1.0
+    dist[s] = 0.0
+    settled = np.zeros(n, dtype=bool)
+    order: list[int] = []
+    heap: list[tuple[float, int]] = [(0.0, s)]
+    while heap:
+        dv, v = heapq.heappop(heap)
+        if settled[v] or dv > dist[v]:
+            continue
+        settled[v] = True
+        order.append(v)
+        nbrs, ws = wadj[v]
+        for w, wt in zip(nbrs, ws):
+            cand = dist[v] + float(wt)
+            if cand < dist[w]:
+                dist[w] = cand
+                sigma[w] = sigma[v]
+                heapq.heappush(heap, (cand, int(w)))
+            elif cand == dist[w] and not settled[w]:
+                sigma[w] += sigma[v]
+    delta = np.zeros(n, dtype=dtype)
+    for w in reversed(order):
+        nbrs, ws = wadj[w]
+        for v, wt in zip(nbrs, ws):
+            if dist[v] + float(wt) == dist[w] and sigma[w] > 0:
+                delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w])
+    return delta, sigma, dist
+
+
 def brandes_reference(
     graph: Graph, sources: np.ndarray | None = None, dtype=np.float64
 ) -> np.ndarray:
     """Exact betweenness centrality scores (unnormalized, ordered-pair
     convention: for undirected graphs every unordered pair contributes to
-    both directions, as in the paper's Formula (1))."""
+    both directions, as in the paper's Formula (1)).  Weighted graphs
+    dispatch to the Dijkstra round automatically."""
     n = graph.n
-    adj = graph.adjacency_lists()
     bc = np.zeros(n, dtype=dtype)
     if sources is None:
         sources = np.arange(n)
+    if graph.w is not None:
+        wadj = graph.weighted_adjacency_lists()
+        for s in sources:
+            delta, _, _ = single_source_dependencies_weighted(wadj, n, int(s), dtype=dtype)
+            delta[int(s)] = 0.0
+            bc += delta
+        return bc
+    adj = graph.adjacency_lists()
     for s in sources:
         delta, _, _ = single_source_dependencies(adj, n, int(s), dtype=dtype)
         delta[int(s)] = 0.0

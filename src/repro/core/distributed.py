@@ -76,6 +76,9 @@ from repro.core.operators import (
     DistributedPallasHybridOperator,
     DistributedPallasOperator,
     DistributedPallasSparseOperator,
+    DistributedWeightedDenseOperator,
+    DistributedWeightedOperator,
+    auto_delta,
     normalize_overlap,
 )
 from repro.core.scheduler import Schedule, build_schedule
@@ -99,6 +102,7 @@ __all__ = [
     "hybrid_cell_choice",
     "level_time_estimates",
     "prior_round_seconds",
+    "weighted_prior_levels",
     "estimate_device_footprint",
     "check_device_memory",
     "WATCHDOG_SAFETY",
@@ -176,6 +180,7 @@ def distributed_graph_arrays(
     tile: tuple[int, int] | None = None,
     dense_cells: np.ndarray | None = None,
     hybrid_threshold: float = 1.0,
+    weights: np.ndarray | None = None,
 ) -> tuple[jnp.ndarray, ...]:
     """Device arrays for the graph operands of a distributed round fn.
 
@@ -194,17 +199,32 @@ def distributed_graph_arrays(
     largest lane-friendly divisor of ``chunk`` ≤ 128); ``dense_cells``
     overrides the hybrid per-cell choice (default: resolved from the
     roofline threshold via :func:`hybrid_cell_choice`).
+
+    ``weights`` (f32 [num_arcs], graph arc order) swaps the 0/1 operand
+    values for edge weights — the bucketed-traversal operand set.  The
+    weighted layouts are always the barrier (non-ring) forms regardless
+    of ``overlap`` (weighted rounds run barrier collectives; overlap
+    only governs replica loop lockstep): sparse grows a third f32
+    [R, C, max_arcs] arc-weight array; the dense engines carry f32
+    weight blocks even under ``"pallas_bf16"`` (the σ/δ equality masks
+    need exact distances, so weights never downcast).
     """
     if engine_kind == "sparse":
+        if weights is not None:
+            return (
+                jnp.asarray(partition.src_local),
+                jnp.asarray(partition.dst_local),
+                jnp.asarray(partition.arc_weights(weights)),
+            )
         if normalize_overlap(overlap) != "none":
             ring_src, ring_dst = partition.ring_arcs()
             return (jnp.asarray(ring_src), jnp.asarray(ring_dst))
         return (jnp.asarray(partition.src_local), jnp.asarray(partition.dst_local))
     if engine_kind in ("pallas_sparse", "pallas_hybrid"):
-        ring = normalize_overlap(overlap) != "none"
+        ring = weights is None and normalize_overlap(overlap) != "none"
         bm, bk = tile if tile is not None else (None, None)
         if engine_kind == "pallas_sparse":
-            layout = partition.blocked_sparse(bm, bk, ring=ring)
+            layout = partition.blocked_sparse(bm, bk, ring=ring, weights=weights)
             lead: tuple = ()
         else:
             if dense_cells is None:
@@ -212,7 +232,7 @@ def distributed_graph_arrays(
                     partition, bm, bk, threshold=hybrid_threshold
                 )
             hybrid = partition.blocked_hybrid(
-                bm, bk, dense_cells=dense_cells, ring=ring
+                bm, bk, dense_cells=dense_cells, ring=ring, weights=weights
             )
             layout = hybrid.sparse
             lead = (jnp.asarray(hybrid.blocks),)
@@ -231,6 +251,8 @@ def distributed_graph_arrays(
         if engine_kind == "pallas_hybrid":
             return lead + tiles + (jnp.asarray(dense_cells.astype(np.int32)),)
         return tiles
+    if weights is not None:
+        return (jnp.asarray(partition.dense_blocks(np.float32, weights=weights)),)
     dt = jnp.bfloat16 if engine_kind == "pallas_bf16" else jnp.float32
     return (jnp.asarray(partition.dense_blocks(np.float32), dt),)
 
@@ -455,6 +477,7 @@ def prior_round_seconds(
     dense_cells: np.ndarray | None = None,
     hw=V5E,
     measured_level_s: float | None = None,
+    prior_levels: int | None = None,
 ) -> float:
     """Per-round wall estimate — the straggler EWMA's prior.
 
@@ -467,9 +490,15 @@ def prior_round_seconds(
     :data:`PRIOR_LEVELS` nominal levels.  Gives the scheduler a
     before-any-observation time scale (paper-motivated: round wall is
     data-dependent and unknown until traversal).
+
+    ``prior_levels`` overrides the nominal level count — weighted runs
+    substitute the expected *bucket* count of the bucketed traversal
+    (≈ depth·w̄/Δ), since a round's trip unit is a distance bucket, not
+    a BFS level (:func:`weighted_prior_levels`).
     """
+    levels = PRIOR_LEVELS if prior_levels is None else int(prior_levels)
     if measured_level_s is not None:
-        return float(measured_level_s) * PRIOR_LEVELS
+        return float(measured_level_s) * levels
     compute_s, expand_s, fold_s = level_time_estimates(
         partition, engine_kind, batch_size,
         bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells, hw=hw,
@@ -477,7 +506,21 @@ def prior_round_seconds(
     _, estimates = auto_overlap_policy(
         compute_s, expand_s, fold_s, partition.R, partition.C, hw=hw
     )
-    return estimates[normalize_overlap(overlap)] * PRIOR_LEVELS
+    return estimates[normalize_overlap(overlap)] * levels
+
+
+def weighted_prior_levels(w: np.ndarray, delta: float) -> int:
+    """Expected bucket count standing in for :data:`PRIOR_LEVELS`.
+
+    A weighted round's trip unit is a width-Δ distance bucket; at the
+    nominal :data:`PRIOR_LEVELS` hop depth the traversal spans roughly
+    ``PRIOR_LEVELS · w̄`` distance, i.e. ``⌈PRIOR_LEVELS · w̄ / Δ⌉``
+    buckets (never less than the unweighted constant — a wide Δ merges
+    buckets but each still costs at least a level's collectives).
+    """
+    w = np.asarray(w, np.float64)
+    w_mean = float(w.mean()) if w.size else 1.0
+    return max(PRIOR_LEVELS, int(np.ceil(PRIOR_LEVELS * w_mean / float(delta))))
 
 
 def resolve_overlap(
@@ -597,6 +640,8 @@ def make_distributed_round_fn(
     interpret: bool | None = None,
     overlap: str = "none",
     integrity: str = "off",
+    weighted: bool = False,
+    delta: float | None = None,
 ):
     """Build the sub-cluster-parallel, 2-D-distributed round function.
 
@@ -668,6 +713,21 @@ def make_distributed_round_fn(
     the fused backward payload: the checksum lane rides the column axis
     through every exchange, and the split σ/d gather would carry it
     through only half the backward operands.
+
+    ``weighted=True`` (with a positive ``delta`` bucket width) swaps the
+    level-synchronous round for the bucketed weighted traversal.  The
+    operand layouts are the barrier (non-ring) forms from
+    :func:`distributed_graph_arrays` with ``weights=``: the sparse
+    engine's signature grows a third f32 arc-weight array; the dense
+    Pallas engines take one f32 weight-block operand; the BCSR/hybrid
+    tile layouts keep their unweighted arity and are densified per
+    device cell inside the shard_map body (fused weighted tile kernels
+    are the documented follow-up — weighted compute is XLA contractions
+    either way).  Collectives run the barrier schedule regardless of
+    ``overlap``, which only keeps sub-cluster replicas in bucket-loop
+    lockstep (``sync_axes``); ``num_levels`` (static trip counts) and
+    ``integrity="checksum"`` (a level-synchronous ABFT lane) are
+    rejected.
     """
     R, C, fr = _grid_axes(mesh, row_axis, col_axis, replica_axis)
     if (R, C) != (partition.R, partition.C):
@@ -691,6 +751,26 @@ def make_distributed_round_fn(
             "split backward payload is a barrier-schedule benchmark mode; "
             "it cannot be combined with a ring overlap policy"
         )
+    if weighted:
+        if delta is None or not (float(delta) > 0):
+            raise ValueError(
+                f"weighted rounds need a positive bucket width delta, got {delta}"
+            )
+        if num_levels is not None:
+            raise ValueError(
+                "num_levels is a static level bound for the level-synchronous "
+                "engine; the weighted bucket loop's trip count is data-dependent"
+            )
+        if integrity == "checksum":
+            raise ValueError(
+                "integrity='checksum' is a level-synchronous ABFT lane; "
+                "weighted rounds support integrity='audit'"
+            )
+        if not fuse_backward_payload:
+            raise ValueError(
+                "split backward payload is an unweighted sparse-engine "
+                "benchmark mode"
+            )
     if use_pallas and interpret is None:
         from repro.kernels.ops import on_tpu
 
@@ -715,7 +795,85 @@ def make_distributed_round_fn(
         # [checksum residual, claimed bc sum] pair.
         return tuple(x[None] for x in out)
 
-    if engine_kind == "pallas_sparse":
+    if weighted:
+        from repro.kernels.blocked_spmm import tiles_to_dense
+
+        delta_f = float(delta)
+
+        def weighted_dense_op(block):
+            return DistributedWeightedDenseOperator(
+                block,
+                delta=delta_f,
+                chunk=chunk,
+                R=R,
+                C=C,
+                row_axis=row_axis,
+                col_axis=col_axis,
+                sync_axes=sync_axes,
+            )
+
+        if engine_kind == "sparse":
+
+            def body(src_local, dst_local, w_local, omega, sources, derived):
+                op = DistributedWeightedOperator(
+                    src_local[0, 0],
+                    dst_local[0, 0],
+                    w_local[0, 0],
+                    delta=delta_f,
+                    chunk=chunk,
+                    R=R,
+                    C=C,
+                    row_axis=row_axis,
+                    col_axis=col_axis,
+                    sync_axes=sync_axes,
+                )
+                return round_body(op, omega, sources, derived)
+
+            graph_specs = (
+                P(row_axis, col_axis, None),
+                P(row_axis, col_axis, None),
+                P(row_axis, col_axis, None),
+            )
+        elif engine_kind == "pallas_sparse":
+            # weighted BCSR: ship the (weighted) tile layout, densify the
+            # local cell in-body — same operands/specs as unweighted, but
+            # the compute runs the dense weight-block bucket operator
+            def body(tiles, trows, tcols, omega, sources, derived):
+                block = tiles_to_dense(
+                    tiles[0, 0], trows[0, 0], tcols[0, 0], C * chunk, R * chunk
+                )
+                return round_body(weighted_dense_op(block), omega, sources, derived)
+
+            graph_specs = (
+                P(row_axis, col_axis, None, None, None),
+                P(row_axis, col_axis, None),
+                P(row_axis, col_axis, None),
+            )
+        elif engine_kind == "pallas_hybrid":
+
+            def body(blocks, tiles, trows, tcols, dcell, omega, sources, derived):
+                from_tiles = tiles_to_dense(
+                    tiles[0, 0], trows[0, 0], tcols[0, 0], C * chunk, R * chunk
+                )
+                block = jnp.where(dcell[0, 0] != 0, blocks[0, 0], from_tiles)
+                return round_body(weighted_dense_op(block), omega, sources, derived)
+
+            graph_specs = (
+                P(row_axis, col_axis, None, None),
+                P(row_axis, col_axis, None, None, None),
+                P(row_axis, col_axis, None),
+                P(row_axis, col_axis, None),
+                P(row_axis, col_axis),
+            )
+        else:  # pallas / pallas_bf16: one f32 weight-block operand
+
+            def body(blocks, omega, sources, derived):
+                return round_body(
+                    weighted_dense_op(blocks[0, 0]), omega, sources, derived
+                )
+
+            graph_specs = (P(row_axis, col_axis, None, None),)
+    elif engine_kind == "pallas_sparse":
         # (tiles, tile_rows, tile_cols): [R, C, T, bm, bk]-shaped full
         # layout, or [R, C, R, Tr, bm, bk]-shaped ring slices — the two
         # layouts have the same arity, so one body serves both and the
@@ -899,6 +1057,8 @@ def distributed_betweenness_centrality(
     sample_seed: int = 0,
     stop_rule=None,
     full_result: bool = False,
+    weighted: bool = False,
+    delta: float | None = None,
 ):
     """Run the full distributed BC computation on ``mesh``.
 
@@ -987,6 +1147,20 @@ def distributed_betweenness_centrality(
 
     ``full_result`` returns the :class:`~repro.core.driver.BCResult`
     instead of the legacy ``(bc, schedule)`` pair.
+
+    **Weighted graphs.**  ``weighted=True`` runs the bucketed weighted
+    traversal (delta-stepping-style distance buckets of width ``delta``,
+    auto-derived from the weight distribution when None — see
+    :func:`repro.core.operators.auto_delta`).  Requires edge weights on
+    the graph, ``heuristics`` in
+    :data:`repro.core.bc.WEIGHTED_HEURISTICS` (the level-based 2-degree
+    rewrites assume unit edge lengths), no ``num_levels``, integrity
+    ``"off"``/``"audit"`` (the checksum lane is level-synchronous) and
+    ``autotune="off"`` (the micro-bench measures level-synchronous
+    kernels).  ``overlap`` keeps its lockstep role but the collectives
+    run the barrier schedule (ring-pipelined bucket relaxation is future
+    work); the straggler prior prices bucket counts instead of levels
+    (:func:`weighted_prior_levels`).
     """
     from repro.autotune import as_cache, normalize_autotune, plan_autotune, sample_batch
     from repro.distributed.chaos import (
@@ -1029,6 +1203,45 @@ def distributed_betweenness_centrality(
         stop_rule = AdaptiveStopRule()
 
     autotune = normalize_autotune(autotune)
+    integrity = normalize_integrity(integrity)
+    if weighted:
+        from repro.core.bc import WEIGHTED_HEURISTICS
+
+        if graph.w is None:
+            raise ValueError(
+                "weighted=True needs edge weights: build the graph with "
+                "Graph.from_edges(..., weights=) or a weighted generator "
+                "(graphs.generators WEIGHT_MODES)"
+            )
+        if heuristics not in WEIGHTED_HEURISTICS:
+            raise ValueError(
+                f"heuristics={heuristics!r} is level-based (2-degree "
+                f"derivation assumes unit edge lengths); weighted runs "
+                f"accept {WEIGHTED_HEURISTICS}"
+            )
+        if num_levels is not None:
+            raise ValueError(
+                "num_levels is a static level bound for the level-"
+                "synchronous engine; the weighted bucket loop's trip "
+                "count is data-dependent"
+            )
+        if integrity == "checksum":
+            raise ValueError(
+                "integrity='checksum' is a level-synchronous ABFT lane; "
+                "weighted runs support integrity='audit'"
+            )
+        if autotune != "off":
+            raise ValueError(
+                "autotune measures the level-synchronous kernels; run "
+                "weighted with autotune='off'"
+            )
+        if delta is None:
+            delta = auto_delta(graph)
+        delta = float(delta)
+        if not (delta > 0 and np.isfinite(delta)):
+            raise ValueError(f"delta must be positive and finite, got {delta}")
+    elif delta is not None:
+        raise ValueError("delta is only meaningful with weighted=True")
     schedule, prep, residual, omega_i = build_schedule(
         graph, batch_size=batch_size, heuristics=heuristics,
         root_order="eccentricity" if autotune != "off" else "id",
@@ -1077,18 +1290,26 @@ def distributed_betweenness_centrality(
             part, bm, bk, threshold=hybrid_threshold, tile_counts=tile_counts,
             measured=plan.cell_costs if plan is not None else None,
         )
-    overlap = resolve_overlap(
-        overlap, part, engine_kind, batch_size,
-        bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells,
-        measured=plan.overlap_level_s if plan is not None else None,
-    )
+    if weighted:
+        # weighted collectives run the barrier schedule; overlap only
+        # keeps replicas in bucket-loop lockstep, so "auto" has nothing
+        # to price — resolve it to the barrier policy
+        if overlap == "auto":
+            logger.info("overlap='auto' -> 'none' (weighted rounds are barrier-schedule)")
+            overlap = "none"
+        overlap = normalize_overlap(overlap)
+    else:
+        overlap = resolve_overlap(
+            overlap, part, engine_kind, batch_size,
+            bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells,
+            measured=plan.overlap_level_s if plan is not None else None,
+        )
     check_device_memory(
         part, engine_kind, batch_size, hbm_limit_bytes,
-        bm=bm, bk=bk, overlap=overlap, tile_counts=tile_counts,
-        dense_cells=dense_cells,
+        bm=bm, bk=bk, overlap="none" if weighted else overlap,
+        tile_counts=tile_counts, dense_cells=dense_cells,
     )
 
-    integrity = normalize_integrity(integrity)
     round_fn = make_distributed_round_fn(
         part,
         mesh,
@@ -1099,6 +1320,8 @@ def distributed_betweenness_centrality(
         engine_kind=engine_kind,
         overlap=overlap,
         integrity=integrity,
+        weighted=weighted,
+        delta=delta,
     )
 
     omega_pad = np.zeros(part.n_pad, np.float32)
@@ -1108,7 +1331,8 @@ def distributed_betweenness_centrality(
     omega_dev = jnp.asarray(omega_pad)
 
     graph_args = distributed_graph_arrays(
-        part, engine_kind, overlap, tile=tile, dense_cells=dense_cells
+        part, engine_kind, overlap, tile=tile, dense_cells=dense_cells,
+        weights=residual.w if weighted else None,
     )
 
     def block_fn(sources, derived):
@@ -1129,10 +1353,13 @@ def distributed_betweenness_centrality(
                 "replicas; pass replica_axis (a mesh with fr > 1)"
             )
         prior_round_s = prior_round_seconds(
-            part, engine_kind, batch_size, overlap,
+            part, engine_kind, batch_size, "none" if weighted else overlap,
             bm=bm, bk=bk, tile_counts=tile_counts, dense_cells=dense_cells,
             measured_level_s=(
                 plan.level_s_for(overlap) if plan is not None else None
+            ),
+            prior_levels=(
+                weighted_prior_levels(residual.w, delta) if weighted else None
             ),
         )
     if sample_plan.mode != "off":
@@ -1160,11 +1387,18 @@ def distributed_betweenness_centrality(
         dispatch_fn = ChaosRoundFn(block_fn, chaos_plan, sleeper=sleeper)
         fallback_fn = block_fn  # the unwrapped, known-good path
 
+    level_bound = None
+    if weighted:
+        # the audit's "levels" are bucket indices: ≤ ⌈(n-1)·w_max/Δ⌉
+        w_max = float(residual.w.max()) if residual.w.size else 1.0
+        level_bound = int(np.ceil(graph.n * w_max / delta)) + 2
+
     driver = BCDriver(
         dispatch_fn,
         schedule,
         n=graph.n,
         prep=prep,
+        level_bound=level_bound,
         ledger=ledger,
         checkpoint=checkpoint,
         rounds_per_dispatch=fr,

@@ -184,6 +184,10 @@ def traversal_round(
     integrity = normalize_integrity(integrity)
     checksum = integrity == "checksum"
     op = as_operator(operator)
+    if getattr(op, "weighted", False):
+        return _weighted_round(
+            op, sources, derived, omega, num_levels=num_levels, integrity=integrity
+        )
     omega_f = omega.astype(jnp.float32)
     row_ids = op.row_ids()
 
@@ -243,6 +247,82 @@ def traversal_round(
         err = jnp.float32(0.0)
     integ = jnp.stack(
         [jnp.asarray(err, jnp.float32), jnp.asarray(claim, jnp.float32)]
+    )
+    return bc_local, ns, roots, levels, integ
+
+
+def _weighted_round(
+    op,
+    sources: jnp.ndarray,
+    derived: jnp.ndarray,
+    omega: jnp.ndarray,
+    *,
+    num_levels: int | None,
+    integrity: str,
+) -> tuple[jnp.ndarray, ...]:
+    """One *weighted* BC round: the bucket-loop analogue of
+    :func:`traversal_round`, same return contract.
+
+    The round's ``levels`` slot carries the bucket count (the same
+    data-dependent cost signal the straggler scheduler consumes).  The
+    2-degree derivation is level-based and is rejected upstream for
+    weighted runs, so ``derived`` is always all-padding here — the
+    derived columns stay shape-compatible and inert.  ``num_levels``
+    (the static-trip-count dry-run mode) has no weighted analogue: the
+    bucket loop's trip count is data-dependent by construction.
+    """
+    if num_levels is not None:
+        raise ValueError(
+            "num_levels (static trip count) is not supported for weighted "
+            "traversal: the bucket loop's trip count is data-dependent"
+        )
+    if integrity == "checksum":
+        raise ValueError(
+            "integrity='checksum' (ABFT level checksums) is level-"
+            "synchronous and not supported for weighted traversal; use "
+            "integrity='audit'"
+        )
+    omega_f = omega.astype(jnp.float32)
+    row_ids = op.row_ids()
+
+    src_onehot = (
+        (row_ids[:, None] == sources[None, :]) & (sources[None, :] >= 0)
+    ).astype(jnp.float32)
+    fwd = engine.forward_buckets(op, src_onehot)
+
+    # bucket index per (vertex, column): the weighted depth structure
+    from repro.kernels.ops import bucket_index
+
+    bucket = bucket_index(fwd.dist, op.delta)
+
+    # derived columns: always padding under weighted (h2/h3 rejected
+    # upstream) — kept for shape compatibility with the driver contract
+    sigma_c, depth_c = derive_two_degree_columns(
+        fwd.sigma, bucket, derived, row_ids=row_ids
+    )
+    sigma_all = jnp.concatenate([fwd.sigma, sigma_c], axis=1)
+    bucket_all = jnp.concatenate([bucket, depth_c], axis=1)
+
+    grid_max = op.reduce_max_grid(jnp.max(bucket_all))
+    max_bucket = op.reduce_max_sync(grid_max)
+    delta_acc = engine.backward_buckets(op, fwd.sigma, fwd.dist, omega_f, max_bucket)
+    delta_all = jnp.concatenate([delta_acc, jnp.zeros_like(sigma_c)], axis=1)
+
+    roots = jnp.concatenate([sources, derived[:, 0]])
+    omega_root = op.root_omega(roots, omega_f)
+    mult = jnp.where(roots >= 0, omega_root + 1.0, 0.0)
+
+    root_onehot = row_ids[:, None] == roots[None, :]
+    contrib = jnp.where(root_onehot, 0.0, delta_all * mult[None, :])
+    bc_local = contrib.sum(axis=1)
+
+    ns = op.reduce_sum(((bucket_all >= 0) * (1.0 + omega_f)[:, None]).sum(axis=0))
+    levels = (grid_max + 1).astype(jnp.int32)
+    if integrity == "off":
+        return bc_local, ns, roots, levels
+    claim = op.reduce_sum(jnp.sum(bc_local))
+    integ = jnp.stack(
+        [jnp.float32(0.0), jnp.asarray(claim, jnp.float32)]
     )
     return bc_local, ns, roots, levels, integ
 
@@ -398,8 +478,14 @@ class BCDriver:
         clock: Callable[[], float] | None = None,
         sleeper: Callable[[float], None] | None = None,
         stop_rule: Callable[[np.ndarray, int], bool] | None = None,
+        level_bound: int | None = None,
     ):
         self.round_fn = round_fn
+        #: integrity-audit upper bound on a round's reported traversal
+        #: depth.  None = the unweighted structural bound (n + 1 levels).
+        #: Weighted callers pass their bucket-count bound — bucket indices
+        #: scale with (max distance / Δ), not with n.
+        self.level_bound = level_bound
         self.profile = profile
         #: the early-stop seam (repro.serving): a callable
         #: ``(bc_running f64 [n], blocks_done) -> bool`` consulted after
@@ -644,7 +730,8 @@ class BCDriver:
             return f"negative BC contribution (min {mn:.3e})"
         if levels is not None:
             lv = np.asarray(jax.device_get(levels)).reshape(-1)
-            if lv.min() < 0 or lv.max() > self.n + 1:
+            bound = self.level_bound if self.level_bound is not None else self.n + 1
+            if lv.min() < 0 or lv.max() > bound:
                 return f"level bound violation (levels {lv.tolist()})"
         ns_np = np.asarray(jax.device_get(ns), np.float64)
         ns_max = float(ns_np.max()) if ns_np.size else 0.0

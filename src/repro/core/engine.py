@@ -30,6 +30,19 @@ code drives:
 
 ω is the 1-degree reduction weight vector (zeros when the heuristic is
 off); the formulas above then reduce to plain Brandes.
+
+Weighted graphs replace the level loops with *bucket* loops
+(:func:`forward_buckets` / :func:`backward_buckets`): delta-stepping
+distance buckets of width Δ over float32 tentative distances (+inf =
+unreached), driven by the
+:class:`repro.core.operators.WeightedTraversalOperator` protocol.  A
+vertex is *settled* once ``dist < b·Δ`` for the current bucket b; the
+frontier of bucket b is its unsettled span ``b·Δ ≤ dist < (b+1)·Δ``.
+Light edges (w ≤ Δ) relax to a fixpoint inside the bucket, heavy edges
+once after it; σ and δ are recomputed to fixpoints over the
+within-bucket shortest-path DAG with distance-equality masks.  All
+loop-bound agreements (liveness, next nonempty bucket) go through the
+operator's collective hooks so distributed replicas stay in lockstep.
 """
 from __future__ import annotations
 
@@ -52,7 +65,10 @@ __all__ = [
     "make_sparse_operator",
     "forward_counting",
     "backward_accumulation",
+    "forward_buckets",
+    "backward_buckets",
     "ForwardState",
+    "WeightedForwardState",
 ]
 
 
@@ -214,3 +230,165 @@ def backward_accumulation(
         delta, err = jax.lax.fori_loop(0, num_levels - 1, fbody, (delta0, err0))
 
     return (delta, err) if checksum else delta
+
+
+class WeightedForwardState(NamedTuple):
+    sigma: jnp.ndarray  # f32 [n, s] shortest-path counts
+    dist: jnp.ndarray  # f32 [n, s] settled distances (+inf = unreached)
+
+
+def forward_buckets(operator, src_onehot: jnp.ndarray) -> WeightedForwardState:
+    """Multi-source weighted shortest-path counting (delta-stepping).
+
+    The outer while_loop walks nonempty distance buckets.  Per bucket b
+    (span [b·Δ, (b+1)·Δ)):
+
+      1. light-edge relaxation to a fixpoint — the frontier is re-derived
+         from the tentative distances every iteration, so vertices pulled
+         *into* the bucket keep relaxing;
+      2. one heavy-edge pass (bucket-b distances are final after step 1:
+         any heavy relaxation lands at dist > (b+1)·Δ ≥ the bucket bound);
+      3. σ fixpoint with overwrite semantics over the within-bucket
+         predecessor DAG — predecessors in earlier buckets are final,
+         same-bucket chains converge in DAG-depth iterations;
+      4. bucket skip: jump to floor(min unsettled dist / Δ).
+
+    Monotone-min relaxation is globally safe because w > 0: a candidate
+    through any frontier vertex exceeds b·Δ, so settled vertices are
+    never lowered.  The scalar bucket index is shared by all s batch
+    columns (and, through ``reduce_min``/``reduce_any``, by all devices
+    on the operator's loop axes) — columns without mass in the current
+    bucket idle as masked no-ops, which is what keeps distributed
+    replicas' trip counts equal under ``sync_axes``.
+
+    Collective reductions are never evaluated in a while_loop *cond*
+    (the liveness flag travels in the carry), matching
+    :func:`forward_counting`.
+    """
+    op = operator
+    delta_w = jnp.float32(op.delta)
+    inner_cap = op.level_cap()
+    # outer trips are bounded by distinct nonempty buckets across the
+    # whole batch — up to n per column, so scale the safety cap by s
+    outer_cap = op.level_cap() * src_onehot.shape[1] + 1
+    sigma0 = src_onehot.astype(jnp.float32)
+    dist0 = jnp.where(src_onehot > 0, 0.0, jnp.inf).astype(jnp.float32)
+
+    def outer_cond(carry):
+        return carry[3] & (carry[4] <= outer_cap)
+
+    def outer_body(carry):
+        sigma, dist, b, _, trips = carry
+        lo = b.astype(jnp.float32) * delta_w
+        hi = lo + delta_w
+
+        # (1) light-edge relaxation fixpoint over the current bucket
+        def l_cond(c):
+            return c[1] & (c[2] <= inner_cap)
+
+        def l_body(c):
+            d, _, it = c
+            frontier = (d >= lo) & (d < hi)
+            nd = jnp.minimum(d, op.relax(d, frontier, heavy=False))
+            return nd, op.reduce_any(jnp.any(nd < d)), it + 1
+
+        dist, _, _ = jax.lax.while_loop(
+            l_cond, l_body, (dist, jnp.bool_(True), jnp.int32(1))
+        )
+
+        # (2) heavy edges once: bucket-b distances are now final
+        frontier = (dist >= lo) & (dist < hi)
+        dist = jnp.minimum(dist, op.relax(dist, frontier, heavy=True))
+
+        # (3) σ fixpoint (overwrite recompute over the within-bucket DAG);
+        # dist > 0 keeps the roots' σ = 1 (only roots sit at distance 0
+        # because w > 0)
+        in_bucket = (dist >= lo) & (dist < hi) & (dist > 0)
+
+        def s_cond(c):
+            return c[1] & (c[2] <= inner_cap)
+
+        def s_body(c):
+            sg, _, it = c
+            contrib = op.sigma_step(jnp.where(dist < hi, sg, 0.0), dist)
+            ns = jnp.where(in_bucket, contrib, sg)
+            return ns, op.reduce_any(jnp.any(ns != sg)), it + 1
+
+        sigma, _, _ = jax.lax.while_loop(
+            s_cond, s_body, (sigma, jnp.bool_(True), jnp.int32(1))
+        )
+
+        # (4) skip to the next nonempty bucket
+        pending = jnp.where(dist >= hi, dist, jnp.inf)
+        mind = op.reduce_min(jnp.min(pending))
+        alive = jnp.isfinite(mind)
+        nb = jnp.where(
+            alive, jnp.floor(jnp.where(alive, mind, 0.0) / delta_w), b + 1
+        ).astype(jnp.int32)
+        return sigma, dist, nb, alive, trips + 1
+
+    sigma, dist, _, _, _ = jax.lax.while_loop(
+        outer_cond,
+        outer_body,
+        (sigma0, dist0, jnp.int32(0), jnp.bool_(True), jnp.int32(1)),
+    )
+    return WeightedForwardState(sigma=sigma, dist=dist)
+
+
+def backward_buckets(
+    operator,
+    sigma: jnp.ndarray,
+    dist: jnp.ndarray,
+    omega: jnp.ndarray,
+    max_bucket: jnp.ndarray | int,
+) -> jnp.ndarray:
+    """Weighted dependency accumulation in descending bucket order.
+
+    Returns δ f32 [n_rows, s].  ``max_bucket`` must already be the
+    *global* max bucket index (callers on a mesh reduce it with
+    ``op.reduce_max_grid`` / ``reduce_max_sync``), so every replica runs
+    exactly ``max_bucket + 1`` outer trips — there is deliberately no
+    backward bucket skipping, preserving replica lockstep.
+
+    Per bucket (descending): successors in deeper buckets are final in
+    δ, lower buckets are excluded by the ``dist ≥ b·Δ`` mask on g, and
+    same-bucket successor chains converge through the inner fixpoint.
+    The root rows keep δ = 0 through the ``dist > 0`` mask.
+    """
+    op = operator
+    delta_w = jnp.float32(op.delta)
+    inner_cap = op.level_cap()
+    omega_col = omega.astype(jnp.float32)[:, None]
+    safe_sigma = jnp.where(sigma > 0, sigma, 1.0)
+    finite = jnp.isfinite(dist)
+    delta0 = jnp.zeros_like(sigma)
+
+    def cond(carry):
+        return carry[1] >= 0
+
+    def body(carry):
+        dacc, b = carry
+        lo = b.astype(jnp.float32) * delta_w
+        hi = lo + delta_w
+        in_bucket = finite & (dist >= lo) & (dist < hi) & (dist > 0)
+
+        def i_cond(c):
+            return c[1] & (c[2] <= inner_cap)
+
+        def i_body(c):
+            da, _, it = c
+            g = jnp.where(
+                finite & (dist >= lo), (1.0 + da + omega_col) / safe_sigma, 0.0
+            )
+            term = sigma * op.delta_step(g, dist)
+            nd = jnp.where(in_bucket, term, da)
+            return nd, op.reduce_any(jnp.any(nd != da)), it + 1
+
+        dacc, _, _ = jax.lax.while_loop(
+            i_cond, i_body, (dacc, jnp.bool_(True), jnp.int32(1))
+        )
+        return dacc, b - 1
+
+    start = jnp.asarray(max_bucket, jnp.int32)
+    dacc, _ = jax.lax.while_loop(cond, body, (delta0, start))
+    return dacc

@@ -140,7 +140,12 @@ def one_degree_reduce(graph: Graph, exhaustive: bool = False) -> OneDegreeReduct
         removed[us] = True
         alive &= ~(leaf[src] | leaf[dst])
 
-    residual = Graph(n=n, src=src[alive], dst=dst[alive])
+    residual = Graph(
+        n=n,
+        src=src[alive],
+        dst=dst[alive],
+        w=None if graph.w is None else graph.w[alive],
+    )
     return OneDegreeReduction(
         residual=residual,
         omega=S,

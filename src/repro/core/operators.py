@@ -64,10 +64,26 @@ Implementations:
 ``_forward_level`` / ``_backward_level`` below are the *only*
 implementations of the level recurrences in the repository; every
 non-fused operator routes through them.
+
+Weighted graphs swap the level recurrences for *bucket* recurrences
+(delta-stepping, Fan et al. arXiv:1701.05975): the
+:class:`WeightedTraversalOperator` family supplies tentative-distance
+relaxation (``relax``, with the light/heavy edge split inside the
+operator), the path-count equality step (``sigma_step``) and the
+dependency equality step (``delta_step``); the bucket loops live in
+:func:`repro.core.engine.forward_buckets` /
+:func:`repro.core.engine.backward_buckets`.  The distributed weighted
+operators reuse the exact expand/fold collective skeleton (all_gather
+over grid rows, segment/pmin fold over grid columns) under every overlap
+policy — ring-pipelining the bucketed relaxation is future work, so the
+weighted path always runs the barrier schedule internally while keeping
+the replica-lockstep contract (``sync_axes``) of the unweighted engine.
 """
 from __future__ import annotations
 
 from typing import Callable
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +97,13 @@ __all__ = [
     "DistributedPallasOperator",
     "DistributedPallasSparseOperator",
     "DistributedPallasHybridOperator",
+    "WeightedTraversalOperator",
+    "WeightedDenseOperator",
+    "WeightedSparseOperator",
+    "DistributedWeightedOperator",
+    "DistributedWeightedDenseOperator",
     "as_operator",
+    "auto_delta",
     "OVERLAP_POLICIES",
     "normalize_overlap",
 ]
@@ -1037,3 +1059,398 @@ class DistributedPallasHybridOperator(DistributedPallasSparseOperator):
             (x_owned,),
             lambda blk, hand, acc: acc + self._mixed_dense(blk, self.chunk) @ hand[0],
         )
+
+
+# --------------------------------------------------------------------------
+# Weighted traversal (delta-stepping buckets, Fan et al. arXiv:1701.05975)
+# --------------------------------------------------------------------------
+#
+# The weighted operators deliberately ship *no* new Pallas kernels: the
+# bucket recurrences are equality-masked min-plus / sum-product contractions
+# that XLA already fuses well at the block sizes the fake-device CI exercises,
+# and on TPU the dense variants still land on the MXU/VPU through the same
+# [m, k, s] contraction shapes as the unweighted partial kernels.  Fusing the
+# relax/sigma/delta steps into VMEM-resident Pallas kernels (the weighted
+# analogue of kernels/frontier_spmm.py) is the follow-up once real-TPU
+# profiles exist.  Every engine kind therefore accepts ``weighted=`` today;
+# pallas/pallas_bf16/pallas_sparse/pallas_hybrid run their weighted compute
+# on float32 operands (weights are never cast to bf16 — distances feed exact
+# equality masks).
+
+_BIG_DIST = 1e30  # segment_min identity guard: anything above is "unreached"
+
+
+def auto_delta(graph) -> float:
+    """Derive a bucket width from edge-weight statistics (host-side).
+
+    The classic delta-stepping guidance is Δ ≈ Θ(1 / max-degree) scaled by
+    the mean weight — wide enough that a bucket amortizes a relaxation
+    sweep, narrow enough that the light-edge fixpoint stays shallow.  We
+    clamp below by the minimum weight so a bucket always makes progress.
+    Deterministic in the graph (no RNG): the same graph always yields the
+    same Δ, which the reproducibility tests rely on.
+    """
+    w = getattr(graph, "w", None)
+    if w is None or w.size == 0:
+        raise ValueError("auto_delta needs a weighted graph with at least one edge")
+    avg_degree = max(1.0, float(graph.num_arcs) / float(max(1, graph.n)))
+    return float(max(float(w.min()), float(w.mean()) / avg_degree))
+
+
+def _bucket_split(w, delta, heavy: bool):
+    """Per-arc weight with non-selected arcs pushed to +inf.
+
+    Arcs with w <= delta are *light* (relaxed to a fixpoint inside the
+    bucket), w > delta are *heavy* (relaxed once after the bucket
+    settles).  Padding arcs carry w == 0 and are excluded from both.
+    """
+    if heavy:
+        sel = w > delta
+    else:
+        sel = (w > 0) & (w <= delta)
+    return jnp.where(sel, w, jnp.inf)
+
+
+class WeightedTraversalOperator(TraversalOperator):
+    """Single-device weighted operator base: bucket-loop protocol.
+
+    The engine's bucket loops (:func:`repro.core.engine.forward_buckets`,
+    :func:`~repro.core.engine.backward_buckets`) drive three data hooks —
+
+      relax(dist, frontier, heavy)  tentative-distance relaxation: the
+          min over selected arcs (u, v) with u in the frontier of
+          ``dist[u] + w``; +inf where no arc relaxes v.
+      sigma_step(sigma_in, dist)    σ'_v = Σ_{u : d_v = d_u + w} σ_in[u]
+          (shortest-path predecessor counting via the distance-equality
+          mask; overwrite semantics — the engine fixpoints it over the
+          within-bucket predecessor DAG).
+      delta_step(g, dist)           per-vertex Σ_{v : d_v = d_u + w} g[v]
+          (the dependency sum over *successors*; the engine multiplies by
+          σ_u and fixpoints within the bucket).
+
+    — plus ``reduce_min`` for the bucket-skip agreement.  All reductions
+    are identities on a single device.
+    """
+
+    weighted = True
+
+    def __init__(self, delta: float):
+        delta = float(delta)
+        if not (delta > 0.0) or not math.isfinite(delta):
+            raise ValueError(f"bucket width delta must be positive and finite, got {delta}")
+        self.delta = delta
+
+    def reduce_min(self, value):
+        return value
+
+    def relax(self, dist, frontier, heavy):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def sigma_step(self, sigma_in, dist):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def delta_step(self, g, dist):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class WeightedDenseOperator(WeightedTraversalOperator):
+    """[n, n] weight-matrix operator (weight 0 encodes "no edge").
+
+    The relax step is a min-plus contraction, sigma/delta are
+    equality-masked sum contractions — all [n, n, s] broadcasts, the
+    weighted analogue of the dense matmul path (small n only, like
+    :class:`DenseOperator`).
+    """
+
+    def __init__(self, weights: jnp.ndarray, delta: float):
+        super().__init__(delta)
+        self.weights = weights.astype(jnp.float32)
+        self.n_rows = weights.shape[0]
+        self.mask = self.weights > 0
+        self.w_light = _bucket_split(self.weights, self.delta, heavy=False)
+        self.w_heavy = _bucket_split(self.weights, self.delta, heavy=True)
+        self.w_full = jnp.where(self.mask, self.weights, jnp.inf)
+
+    def apply(self, x):
+        # unweighted reachability semantics (parity/debug only)
+        return self.mask.astype(jnp.float32) @ x
+
+    def relax(self, dist, frontier, heavy):
+        wsel = self.w_heavy if heavy else self.w_light
+        d = jnp.where(frontier, dist, jnp.inf)
+        # cand[v, s] = min_u d[u, s] + w[u, v]
+        return jnp.min(d[:, None, :] + wsel[:, :, None], axis=0)
+
+    def _eq(self, dist):
+        # eq[u, v, s]: arc (u, v) lies on a shortest path into v
+        cand = dist[:, None, :] + self.w_full[:, :, None]
+        return self.mask[:, :, None] & jnp.isfinite(cand) & (dist[None, :, :] == cand)
+
+    def sigma_step(self, sigma_in, dist):
+        # dot_general over u (same contraction the unweighted matmul uses,
+        # so unit weights at delta=1 reproduce DenseOperator bitwise)
+        eq = self._eq(dist).astype(jnp.float32)
+        return jnp.einsum("uvs,us->vs", eq, sigma_in)
+
+    def delta_step(self, g, dist):
+        eq = self._eq(dist).astype(jnp.float32)
+        return jnp.einsum("uvs,vs->us", eq, g)
+
+
+class WeightedSparseOperator(WeightedTraversalOperator):
+    """Padded-arc-list weighted operator (gather + segment_min/sum).
+
+    Sentinel arcs point at vertex slot ``n`` with weight 0; every
+    accumulation allocates n+1 segments and discards the sentinel row,
+    exactly like :class:`SparseOperator`.
+    """
+
+    def __init__(self, src, dst, w, n: int, delta: float):
+        super().__init__(delta)
+        self.src = src
+        self.dst = dst
+        self.w = w.astype(jnp.float32)
+        self.n = n
+        self.n_rows = n
+        self.w_light = _bucket_split(self.w, self.delta, heavy=False)
+        self.w_heavy = _bucket_split(self.w, self.delta, heavy=True)
+        self.w_full = jnp.where(self.w > 0, self.w, jnp.inf)
+
+    def apply(self, x):
+        x_pad = jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
+        msgs = x_pad[self.src]
+        return jax.ops.segment_sum(msgs, self.dst, num_segments=self.n + 1)[: self.n]
+
+    def _pad(self, x, fill):
+        return jnp.concatenate([x, jnp.full((1,) + x.shape[1:], fill, x.dtype)], axis=0)
+
+    def relax(self, dist, frontier, heavy):
+        wsel = self.w_heavy if heavy else self.w_light
+        d_pad = self._pad(jnp.where(frontier, dist, jnp.inf), jnp.inf)
+        val = d_pad[self.src] + wsel[:, None]
+        cand = jax.ops.segment_min(val, self.dst, num_segments=self.n + 1)[: self.n]
+        return jnp.where(cand > _BIG_DIST, jnp.inf, cand)
+
+    def _eq(self, dist):
+        d_pad = self._pad(dist, jnp.inf)
+        cand = d_pad[self.src] + self.w_full[:, None]
+        return jnp.isfinite(cand) & (d_pad[self.dst] == cand), d_pad
+
+    def sigma_step(self, sigma_in, dist):
+        eq, _ = self._eq(dist)
+        s_pad = self._pad(sigma_in, 0.0)
+        contrib = jnp.where(eq, s_pad[self.src], 0.0)
+        return jax.ops.segment_sum(contrib, self.dst, num_segments=self.n + 1)[: self.n]
+
+    def delta_step(self, g, dist):
+        # successor test from the dst side: the symmetric arc list serves
+        # both directions, so accumulate g over arcs (y, x) with
+        # d_y = d_x + w into x
+        d_pad = self._pad(dist, jnp.inf)
+        cand = d_pad[self.dst] + self.w_full[:, None]
+        eq = jnp.isfinite(cand) & (d_pad[self.src] == cand)
+        g_pad = self._pad(g, 0.0)
+        contrib = jnp.where(eq, g_pad[self.src], 0.0)
+        return jax.ops.segment_sum(contrib, self.dst, num_segments=self.n + 1)[: self.n]
+
+
+class DistributedWeightedOperator(DistributedOperator):
+    """2-D-decomposed weighted operator, arc-list local compute.
+
+    Collective skeleton per relax: expand the frontier's (masked)
+    distances over ``row_axis`` (all_gather), per-arc min-plus into the
+    [C·chunk] partial (segment_min), then a *min-fold*: ``pmin`` over
+    ``col_axis`` followed by slicing the device's owned chunk — the
+    min-plus analogue of the psum_scatter fold.  sigma/delta steps are
+    equality-masked segment sums folded with the usual psum_scatter; the
+    equality test needs the *output-side* distances, replicated with an
+    all_gather over ``col_axis`` (fold-order blocks, matching
+    ``dst_local``'s partial indexing).
+
+    Always the barrier schedule internally (ring-pipelining bucketed
+    relaxation is future work); ``sync_axes`` still applies so replicas
+    stay in loop-bound lockstep on sub-cluster meshes.
+
+    weighted = True
+    """
+
+    weighted = True
+
+    def __init__(
+        self,
+        src_local,
+        dst_local,
+        w_local,
+        *,
+        delta: float,
+        chunk: int,
+        R: int,
+        C: int,
+        row_axis: str,
+        col_axis: str,
+        sync_axes: tuple[str, ...] = (),
+    ):
+        super().__init__(
+            src_local,
+            dst_local,
+            chunk=chunk,
+            R=R,
+            C=C,
+            row_axis=row_axis,
+            col_axis=col_axis,
+            overlap="none",
+            sync_axes=sync_axes,
+        )
+        if not (delta > 0):
+            raise ValueError(f"bucket width delta must be positive, got {delta}")
+        self.delta = float(delta)
+        self.w_local = w_local.astype(jnp.float32)
+        self.w_light = _bucket_split(self.w_local, self.delta, heavy=False)
+        self.w_heavy = _bucket_split(self.w_local, self.delta, heavy=True)
+        self.w_full = jnp.where(self.w_local > 0, self.w_local, jnp.inf)
+
+    # ------------------------------------------------ collective pieces
+    def _expand_out(self, x_owned):
+        """Replicate owned chunks along the *fold* dimension: [chunk, s]
+        -> [C·chunk, s] with block j holding device (i, j)'s chunk — the
+        layout ``dst_local`` indexes (psum_scatter's scatter order)."""
+        return jax.lax.all_gather(x_owned, self.col_axis, tiled=True)
+
+    def _min_fold(self, partial):
+        """Elementwise-min fold of the [C·chunk, s] partial: pmin over the
+        column axis, then slice the owned block."""
+        folded = jax.lax.pmin(partial, self.col_axis)
+        j = jax.lax.axis_index(self.col_axis)
+        return jax.lax.dynamic_slice_in_dim(folded, j * self.chunk, self.chunk, axis=0)
+
+    def reduce_min(self, value):
+        return jax.lax.pmin(value, self.loop_axes)
+
+    # ------------------------------------------------------ bucket hooks
+    def relax(self, dist, frontier, heavy):
+        wsel = self.w_heavy if heavy else self.w_light
+        d_col = self._expand(jnp.where(frontier, dist, jnp.inf))  # [R*chunk, s]
+        val = d_col[self.src_local] + wsel[:, None]
+        partial = jax.ops.segment_min(
+            val, self.dst_local, num_segments=self.C * self.chunk + 1
+        )[: self.C * self.chunk]
+        partial = jnp.where(partial > _BIG_DIST, jnp.inf, partial)
+        return self._min_fold(partial)
+
+    def _pad_out(self, x_out, fill):
+        return jnp.concatenate(
+            [x_out, jnp.full((1,) + x_out.shape[1:], fill, x_out.dtype)], axis=0
+        )
+
+    def sigma_step(self, sigma_in, dist):
+        s_col = self._expand(sigma_in)
+        d_col = self._expand(dist)
+        d_out = self._pad_out(self._expand_out(dist), jnp.inf)
+        cand = d_col[self.src_local] + self.w_full[:, None]
+        eq = jnp.isfinite(cand) & (d_out[self.dst_local] == cand)
+        contrib = jnp.where(eq, s_col[self.src_local], 0.0)
+        partial = jax.ops.segment_sum(
+            contrib, self.dst_local, num_segments=self.C * self.chunk + 1
+        )[: self.C * self.chunk]
+        return self._fold(partial)
+
+    def delta_step(self, g, dist):
+        g_col = self._expand(g)
+        d_col = self._expand(dist)
+        d_out = self._pad_out(self._expand_out(dist), jnp.inf)
+        cand = d_out[self.dst_local] + self.w_full[:, None]
+        eq = jnp.isfinite(cand) & (d_col[self.src_local] == cand)
+        contrib = jnp.where(eq, g_col[self.src_local], 0.0)
+        partial = jax.ops.segment_sum(
+            contrib, self.dst_local, num_segments=self.C * self.chunk + 1
+        )[: self.C * self.chunk]
+        return self._fold(partial)
+
+
+class DistributedWeightedDenseOperator(DistributedOperator):
+    """2-D-decomposed weighted operator on a dense weight block.
+
+    The device holds W[rows_i, cols_j] as [C·chunk, R·chunk] float32
+    (weight 0 = no edge) — the weighted analogue of
+    :class:`DistributedPallasOperator`'s adjacency block; the engine
+    kinds pallas / pallas_bf16 / pallas_sparse / pallas_hybrid all route
+    their weighted compute through this operator (BCSR/hybrid layouts
+    are densified per device cell inside the shard_map body — see
+    ``repro.core.distributed``).  Compute is XLA [m, k, s] contractions;
+    fused Pallas bucket kernels are the documented follow-up.
+
+    weighted = True
+    """
+
+    weighted = True
+
+    def __init__(
+        self,
+        weight_block,
+        *,
+        delta: float,
+        chunk: int,
+        R: int,
+        C: int,
+        row_axis: str,
+        col_axis: str,
+        sync_axes: tuple[str, ...] = (),
+    ):
+        super().__init__(
+            None,
+            None,
+            chunk=chunk,
+            R=R,
+            C=C,
+            row_axis=row_axis,
+            col_axis=col_axis,
+            overlap="none",
+            sync_axes=sync_axes,
+        )
+        if not (delta > 0):
+            raise ValueError(f"bucket width delta must be positive, got {delta}")
+        self.delta = float(delta)
+        self.weight_block = weight_block.astype(jnp.float32)  # [C*chunk, R*chunk]
+        self.mask = self.weight_block > 0
+        self.w_light = _bucket_split(self.weight_block, self.delta, heavy=False)
+        self.w_heavy = _bucket_split(self.weight_block, self.delta, heavy=True)
+        self.w_full = jnp.where(self.mask, self.weight_block, jnp.inf)
+
+    def _expand_out(self, x_owned):
+        return jax.lax.all_gather(x_owned, self.col_axis, tiled=True)
+
+    def _min_fold(self, partial):
+        folded = jax.lax.pmin(partial, self.col_axis)
+        j = jax.lax.axis_index(self.col_axis)
+        return jax.lax.dynamic_slice_in_dim(folded, j * self.chunk, self.chunk, axis=0)
+
+    def reduce_min(self, value):
+        return jax.lax.pmin(value, self.loop_axes)
+
+    def _local(self, x_col):
+        # unweighted reachability semantics (parity/debug only)
+        return self.mask.astype(jnp.float32) @ x_col
+
+    def relax(self, dist, frontier, heavy):
+        wsel = self.w_heavy if heavy else self.w_light
+        d_col = self._expand(jnp.where(frontier, dist, jnp.inf))  # [k, s]
+        partial = jnp.min(wsel[:, :, None] + d_col[None, :, :], axis=1)  # [m, s]
+        return self._min_fold(partial)
+
+    def sigma_step(self, sigma_in, dist):
+        s_col = self._expand(sigma_in)
+        d_col = self._expand(dist)
+        d_out = self._expand_out(dist)  # [m, s]
+        cand = d_col[None, :, :] + self.w_full[:, :, None]  # [m, k, s]
+        eq = self.mask[:, :, None] & jnp.isfinite(cand) & (d_out[:, None, :] == cand)
+        partial = jnp.sum(jnp.where(eq, s_col[None, :, :], 0.0), axis=1)
+        return self._fold(partial)
+
+    def delta_step(self, g, dist):
+        g_col = self._expand(g)
+        d_col = self._expand(dist)
+        d_out = self._expand_out(dist)
+        cand = d_out[:, None, :] + self.w_full[:, :, None]
+        eq = self.mask[:, :, None] & jnp.isfinite(cand) & (d_col[None, :, :] == cand)
+        partial = jnp.sum(jnp.where(eq, g_col[None, :, :], 0.0), axis=1)
+        return self._fold(partial)

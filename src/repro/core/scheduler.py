@@ -72,13 +72,19 @@ ROOT_ORDERS = ("id", "eccentricity")
 MXU_LANES = 128
 
 
-def validate_batch_size(batch_size: int, *, lanes: int = MXU_LANES) -> int:
+def validate_batch_size(
+    batch_size: int, *, lanes: int = MXU_LANES, population: int | None = None
+) -> int:
     """Validate the multi-source batch width (both entrypoints funnel
     through :func:`build_schedule`, so this covers them all).
 
     Rejects ``< 1`` outright; logs a hint when the padded column width
     wastes more than half an MXU tile (e.g. ``batch_size=48`` pads to
-    128 and masks 80 dead lanes every matmul).
+    128 and masks 80 dead lanes every matmul).  ``population`` is the
+    root-pool size actually being scheduled (e.g. a sampled run's
+    ``sample_k``): when it is the binding constraint — no wider batch
+    could ever fill — the hint is suppressed rather than nagging the
+    user to raise a number that cannot help.
     """
     batch_size = int(batch_size)
     if batch_size < 1:
@@ -87,7 +93,7 @@ def validate_batch_size(batch_size: int, *, lanes: int = MXU_LANES) -> int:
             "at least one explicit source column"
         )
     pad = (-batch_size) % lanes
-    if pad > lanes // 2:
+    if pad > lanes // 2 and (population is None or population > batch_size):
         better = batch_size - (batch_size % lanes) or lanes
         logger.warning(
             "batch_size=%d pads the source dimension to %d (%d wasted MXU "
@@ -243,7 +249,9 @@ def build_schedule(
         raise ValueError(
             f"unknown root_order {root_order!r}; expected one of {ROOT_ORDERS}"
         )
-    batch_size = validate_batch_size(batch_size)
+    batch_size = validate_batch_size(
+        batch_size, population=None if roots is None else len(roots)
+    )
     if roots is not None and heuristics != "h0":
         raise ValueError(
             "a root subset (source sampling) requires heuristics='h0': "

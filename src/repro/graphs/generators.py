@@ -6,6 +6,18 @@ structured generators (path/cycle/star/complete/grid) have closed-form
 betweenness scores and anchor the property tests; ``road_like_graph``
 mimics the road-network regime (long diameter, many 1- and 2-degree
 vertices) that the paper's heuristics target.
+
+Weighted variants: ``rmat_graph(..., weights=)`` and
+``road_like_graph(..., weights=)`` sample per-edge weights (and any graph
+can be weighted after the fact with :func:`weighted_copy`).  The weight
+modes live in :data:`WEIGHT_MODES`:
+
+* ``"none"``   — unweighted (``Graph.w is None``)
+* ``"unit"``   — every edge weight exactly 1.0 (the reduction check:
+  unit weights must reproduce the unweighted result)
+* ``"dyadic"`` — seeded draws from {0.25, 0.5, …, 4.0}.  Dyadic weights
+  make float32 distance sums *exact*, so the engines' bucket/equality
+  masks agree bit-for-bit with the float64 Dijkstra oracle.
 """
 from __future__ import annotations
 
@@ -14,6 +26,7 @@ import numpy as np
 from repro.graphs.graph import Graph
 
 __all__ = [
+    "WEIGHT_MODES",
     "rmat_graph",
     "path_graph",
     "cycle_graph",
@@ -25,7 +38,37 @@ __all__ = [
     "road_like_graph",
     "suburb_graph",
     "skewed_depth_graph",
+    "weighted_copy",
 ]
+
+WEIGHT_MODES = ("none", "unit", "dyadic")
+
+
+def sample_weights(
+    rng: np.random.Generator, count: int, weights: str
+) -> np.ndarray | None:
+    """Draw ``count`` edge weights for a :data:`WEIGHT_MODES` mode."""
+    if weights not in WEIGHT_MODES:
+        raise ValueError(f"weights must be one of {WEIGHT_MODES}, got {weights!r}")
+    if weights == "none":
+        return None
+    if weights == "unit":
+        return np.ones(count, dtype=np.float32)
+    # dyadic: k/4 for k in 1..16 — exactly representable, exact f32 sums
+    return (rng.integers(1, 17, size=count) * 0.25).astype(np.float32)
+
+
+def weighted_copy(graph: Graph, weights: str = "dyadic", seed: int = 0) -> Graph:
+    """Attach sampled edge weights to an existing (unweighted) graph.
+
+    Deterministic in ``seed``; both arcs of each undirected edge share
+    one weight.
+    """
+    keep = graph.src < graph.dst  # each undirected edge once
+    edges = np.stack([graph.src[keep], graph.dst[keep]], axis=1)
+    rng = np.random.default_rng(seed)
+    w = sample_weights(rng, edges.shape[0], weights)
+    return Graph.from_edges(graph.n, edges, weights=w)
 
 
 def rmat_graph(
@@ -35,11 +78,14 @@ def rmat_graph(
     a: float = 0.57,
     b: float = 0.19,
     c: float = 0.19,
+    weights: str = "none",
 ) -> Graph:
     """R-MAT generator (Chakrabarti et al.), paper parameters by default.
 
     n = 2**scale vertices, m = edge_factor * n undirected edge samples
     (duplicates / self-loops dropped, as in Graph500 practice).
+    ``weights`` picks a :data:`WEIGHT_MODES` mode; duplicate samples keep
+    the first draw's weight.
     """
     n = 1 << scale
     m = edge_factor * n
@@ -55,7 +101,8 @@ def rmat_graph(
         dst |= dst_bit.astype(np.int64) << bit
     # permute vertex ids so degree is not correlated with id
     perm = rng.permutation(n)
-    return Graph.from_edges(n, np.stack([perm[src], perm[dst]], axis=1))
+    w = sample_weights(rng, m, weights)
+    return Graph.from_edges(n, np.stack([perm[src], perm[dst]], axis=1), weights=w)
 
 
 def path_graph(n: int) -> Graph:
@@ -125,10 +172,18 @@ def skewed_depth_graph(pairs: int, block: int) -> Graph:
     return disjoint_union(*parts)
 
 
-def road_like_graph(rows: int, cols: int, spur_fraction: float = 0.3, seed: int = 0) -> Graph:
+def road_like_graph(
+    rows: int,
+    cols: int,
+    spur_fraction: float = 0.3,
+    seed: int = 0,
+    weights: str = "none",
+) -> Graph:
     """Grid backbone + dangling spur paths: long diameter, rich in
     1-degree (spur tips) and 2-degree (spur interior, grid edges) vertices
-    — the regime of Table 5 / Fig. 12 in the paper."""
+    — the regime of Table 5 / Fig. 12 in the paper.  With ``weights`` a
+    non-"none" :data:`WEIGHT_MODES` mode this is the weighted road-network
+    regime (varying segment lengths over a long-diameter backbone)."""
     rng = np.random.default_rng(seed)
     base = grid_graph(rows, cols)
     n = base.n
@@ -143,7 +198,9 @@ def road_like_graph(rows: int, cols: int, spur_fraction: float = 0.3, seed: int 
             edges.append(np.array([[prev, nxt]]))
             prev = nxt
             nxt += 1
-    return Graph.from_edges(nxt, np.concatenate(edges))
+    all_edges = np.concatenate(edges)
+    w = sample_weights(rng, all_edges.shape[0], weights)
+    return Graph.from_edges(nxt, all_edges, weights=w)
 
 
 def suburb_graph(rows: int, cols: int, leaf_fraction: float = 0.5, seed: int = 0) -> Graph:

@@ -1,13 +1,19 @@
-"""Undirected, unweighted graph container.
+"""Undirected graph container (optionally edge-weighted).
 
-The paper (and therefore this framework) works on undirected, unweighted
-graphs.  We store the graph as a *symmetric directed edge list*: every
-undirected edge {u, v} appears as both (u, v) and (v, u).  This is the
-layout consumed by every traversal formulation in :mod:`repro.core`:
+The paper (and therefore this framework) works on undirected graphs.  We
+store the graph as a *symmetric directed edge list*: every undirected
+edge {u, v} appears as both (u, v) and (v, u).  This is the layout
+consumed by every traversal formulation in :mod:`repro.core`:
 
 * dense path      — ``graph.dense_adjacency()`` (small n, MXU-friendly)
 * sparse path     — ``graph.src / graph.dst`` + ``jax.ops.segment_sum``
 * distributed 2-D — :func:`repro.graphs.partition.partition_2d`
+
+Edge weights (``w``, float32 per arc, symmetric like the arc list) feed
+the bucketed weighted traversal (`weighted=` on the BC entry points).
+Weights must be strictly positive and finite: the delta-stepping bucket
+loop relies on ``w > 0`` for its settled-mask invariant, and the dense
+layouts encode "no edge" as weight 0.
 """
 from __future__ import annotations
 
@@ -28,23 +34,51 @@ class Graph:
       dst:  int32 [m2] destination endpoint of each directed arc.
             ``m2 == 2 * num_undirected_edges``; the arc list is symmetric
             and sorted by (src, dst).
+      w:    optional float32 [m2] arc weights, aligned with src/dst and
+            symmetric (both arcs of an undirected edge share one weight).
+            ``None`` means unweighted; weights are strictly positive.
     """
 
     n: int
     src: np.ndarray
     dst: np.ndarray
+    w: np.ndarray | None = None
 
     # ------------------------------------------------------------- build
     @staticmethod
-    def from_edges(n: int, edges: np.ndarray) -> "Graph":
+    def from_edges(
+        n: int, edges: np.ndarray, weights: np.ndarray | None = None
+    ) -> "Graph":
         """Build from an [e, 2] array of (possibly duplicated, possibly
-        self-looped, possibly one-directional) undirected edge pairs."""
+        self-looped, possibly one-directional) undirected edge pairs.
+
+        ``weights`` (optional [e] floats, one per input edge row) must be
+        strictly positive and finite; duplicate undirected pairs keep the
+        weight of the first occurrence.
+        """
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if weights is not None:
+            weights = np.asarray(weights, dtype=np.float32).reshape(-1)
+            if weights.shape[0] != edges.shape[0]:
+                raise ValueError(
+                    f"weights has {weights.shape[0]} entries for "
+                    f"{edges.shape[0]} edges"
+                )
+            if weights.size and (not np.all(np.isfinite(weights)) or weights.min() <= 0):
+                raise ValueError(
+                    "edge weights must be strictly positive and finite: the "
+                    "bucketed weighted traversal relies on w > 0 (a zero-"
+                    "weight edge would put its endpoints in the same bucket "
+                    "forever and the dense layouts reserve 0 for 'no edge')"
+                )
         if edges.size:
             if edges.min() < 0 or edges.max() >= n:
                 raise ValueError("edge endpoint out of range")
         # drop self loops
-        edges = edges[edges[:, 0] != edges[:, 1]]
+        keep = edges[:, 0] != edges[:, 1]
+        edges = edges[keep]
+        if weights is not None:
+            weights = weights[keep]
         # canonicalize + dedupe undirected pairs
         lo = np.minimum(edges[:, 0], edges[:, 1])
         hi = np.maximum(edges[:, 0], edges[:, 1])
@@ -55,7 +89,11 @@ class Graph:
         src = np.concatenate([lo, hi]).astype(np.int32)
         dst = np.concatenate([hi, lo]).astype(np.int32)
         order = np.lexsort((dst, src))
-        return Graph(n=n, src=src[order], dst=dst[order])
+        if weights is None:
+            return Graph(n=n, src=src[order], dst=dst[order])
+        wu = weights[idx]
+        w = np.concatenate([wu, wu]).astype(np.float32)
+        return Graph(n=n, src=src[order], dst=dst[order], w=w[order])
 
     # ---------------------------------------------------------- derived
     @property
@@ -68,6 +106,11 @@ class Graph:
         """Number of undirected edges."""
         return self.num_arcs // 2
 
+    @property
+    def weighted(self) -> bool:
+        """True when the graph carries per-arc weights."""
+        return self.w is not None
+
     def degrees(self) -> np.ndarray:
         """int64 [n] vertex degrees."""
         return np.bincount(self.src, minlength=self.n).astype(np.int64)
@@ -78,6 +121,15 @@ class Graph:
         a[self.src, self.dst] = 1
         return a
 
+    def dense_weights(self, dtype=np.float32) -> np.ndarray:
+        """[n, n] symmetric weight matrix; 0 encodes "no edge" (sound
+        because weights are strictly positive).  Weighted graphs only."""
+        if self.w is None:
+            raise ValueError("dense_weights() requires a weighted graph")
+        a = np.zeros((self.n, self.n), dtype=dtype)
+        a[self.src, self.dst] = self.w
+        return a
+
     def adjacency_lists(self) -> list[np.ndarray]:
         """Per-vertex sorted neighbor arrays (oracle / sampler use)."""
         order = np.argsort(self.src, kind="stable")
@@ -85,6 +137,16 @@ class Graph:
         starts = np.searchsorted(src, np.arange(self.n))
         ends = np.searchsorted(src, np.arange(self.n), side="right")
         return [dst[s:e] for s, e in zip(starts, ends)]
+
+    def weighted_adjacency_lists(self) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Per-vertex (neighbors, weights) pairs (Dijkstra oracle use)."""
+        if self.w is None:
+            raise ValueError("weighted_adjacency_lists() requires a weighted graph")
+        order = np.argsort(self.src, kind="stable")
+        src, dst, w = self.src[order], self.dst[order], self.w[order]
+        starts = np.searchsorted(src, np.arange(self.n))
+        ends = np.searchsorted(src, np.arange(self.n), side="right")
+        return [(dst[s:e], w[s:e]) for s, e in zip(starts, ends)]
 
     def csr(self) -> tuple[np.ndarray, np.ndarray]:
         """(row_ptr int64 [n+1], col_idx int32 [m2]) CSR view."""
@@ -117,7 +179,8 @@ class Graph:
     def subgraph_mask(self, keep_arc: np.ndarray) -> "Graph":
         """Graph with only the arcs where ``keep_arc`` is True (the arc
         list must stay symmetric — caller's responsibility)."""
-        return Graph(n=self.n, src=self.src[keep_arc], dst=self.dst[keep_arc])
+        w = None if self.w is None else self.w[keep_arc]
+        return Graph(n=self.n, src=self.src[keep_arc], dst=self.dst[keep_arc], w=w)
 
     def padded_arcs(self, multiple: int) -> tuple[np.ndarray, np.ndarray, int]:
         """Arc list padded to a multiple with self-referencing sentinel
@@ -128,3 +191,11 @@ class Graph:
         src = np.concatenate([self.src, np.full(pad, self.n, np.int32)])
         dst = np.concatenate([self.dst, np.full(pad, self.n, np.int32)])
         return src, dst, m2
+
+    def padded_arc_weights(self, multiple: int) -> np.ndarray:
+        """Weights aligned with :meth:`padded_arcs`; sentinel arcs get
+        weight 0 (their dst row is discarded anyway)."""
+        if self.w is None:
+            raise ValueError("padded_arc_weights() requires a weighted graph")
+        pad = (-self.num_arcs) % multiple
+        return np.concatenate([self.w, np.zeros(pad, np.float32)]).astype(np.float32)

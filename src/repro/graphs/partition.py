@@ -261,7 +261,24 @@ class TwoDPartition:
                     ring_dst[i, j, r, : d_r.size] = d_r
         return ring_src, ring_dst
 
-    def dense_blocks(self, dtype=np.float32) -> np.ndarray:
+    def arc_weights(self, w: np.ndarray) -> np.ndarray:
+        """Per-arc weight payload in the partitioned slot layout.
+
+        ``w`` is the graph's f32 [num_arcs] weight array; the result is
+        f32 [R, C, max_arcs] aligned with ``src_local``/``dst_local``,
+        with weight 0 at padding slots — the same "0 = no arc" encoding
+        the dense layouts use, so the distributed weighted operators can
+        mask on ``w > 0`` uniformly.  Requires ``arc_perm``.
+        """
+        if self.arc_perm is None:
+            raise ValueError("arc_weights needs arc_perm (partition_arcs_2d output)")
+        w = np.asarray(w, np.float32)
+        valid = self.arc_perm >= 0
+        return np.where(
+            valid, w[np.clip(self.arc_perm, 0, None)], np.float32(0)
+        ).astype(np.float32)
+
+    def dense_blocks(self, dtype=np.float32, weights: np.ndarray | None = None) -> np.ndarray:
         """Dense per-device adjacency blocks [R, C, C·chunk, R·chunk].
 
         Block (i, j) is A[rows_i, cols_j] in the local index spaces the
@@ -270,15 +287,22 @@ class TwoDPartition:
         Pallas dense-block engine (operators.DistributedPallasOperator);
         memory is (n_pad²/p)·dtype per device, so it is the dense-regime
         counterpart of the arc-list layout, not a replacement.
+
+        With ``weights`` (f32 [num_arcs], graph arc order) the blocks
+        hold edge weights instead of 0/1 — the bucketed-traversal
+        operand, where 0 encodes "no arc" (weights are validated > 0 at
+        graph construction).
         """
         sentinel = self.C * self.chunk
         blocks = np.zeros(
             (self.R, self.C, self.C * self.chunk, self.R * self.chunk), dtype
         )
+        wrc = None if weights is None else self.arc_weights(weights)
         for i in range(self.R):
             for j in range(self.C):
                 valid = self.dst_local[i, j] != sentinel
-                blocks[i, j, self.dst_local[i, j, valid], self.src_local[i, j, valid]] = 1
+                val = 1 if wrc is None else wrc[i, j, valid]
+                blocks[i, j, self.dst_local[i, j, valid], self.src_local[i, j, valid]] = val
         return blocks
 
     def _cell_arcs(self, i: int, j: int) -> tuple[np.ndarray, np.ndarray]:
@@ -445,6 +469,7 @@ class TwoDPartition:
         ring: bool = False,
         dtype=np.float32,
         cells: np.ndarray | None = None,
+        weights: np.ndarray | None = None,
     ) -> BlockedSparseLayout:
         """Build the tiled block-compressed layout (see BlockedSparseLayout).
 
@@ -463,7 +488,18 @@ class TwoDPartition:
         cells; deselected cells materialize like empty ones (the minimal
         row-complete filler list) — the hybrid engine's sparse side,
         where dense-chosen cells must not inflate the tile padding.
+
+        ``weights`` (f32 [num_arcs], graph arc order) stores edge
+        weights instead of 0/1 tile values (0 = no arc) — the bucketed
+        traversal operand.  Only the full form carries weights; the
+        ring-sliced form belongs to the pipelined unweighted expand
+        (weighted rounds run the barrier schedule).
         """
+        if weights is not None and ring:
+            raise ValueError(
+                "weighted tiles are barrier-schedule only (ring pipelining of "
+                "the bucketed relaxation is not implemented); build with ring=False"
+            )
         bm, bk = self._tile_dims(bm, bk)
         R, C, chunk = self.R, self.C, self.chunk
         num_tr = C * chunk // bm
@@ -472,6 +508,7 @@ class TwoDPartition:
             np.ones((R, C), bool) if cells is None else np.asarray(cells, bool)
         )
         pass_cells = self._tile_pass(bm, bk)
+        wrc = None if weights is None else self.arc_weights(weights)
 
         def row_complete(r_u, c_u, d_u):
             """Insert one zero filler tile into every absent tile-row so
@@ -498,7 +535,8 @@ class TwoDPartition:
                     r_u, c_u, inv = pass_cells[i][j]
                     d, s = self._cell_arcs(i, j)
                     data = np.zeros((r_u.size, bm, bk), dtype)
-                    data[inv, d % bm, s % bk] = 1
+                    valid = self.dst_local[i, j] != C * chunk
+                    data[inv, d % bm, s % bk] = 1 if wrc is None else wrc[i, j, valid]
                     nnz[i, j] = r_u.size
                 else:
                     r_u = c_u = np.zeros(0, np.int64)
@@ -548,6 +586,7 @@ class TwoDPartition:
         dense_cells: np.ndarray,
         ring: bool = False,
         dtype=np.float32,
+        weights: np.ndarray | None = None,
     ) -> HybridLayout:
         """Build the mixed dense/sparse per-cell layout (see HybridLayout).
 
@@ -556,7 +595,8 @@ class TwoDPartition:
         data is written only into the dense-chosen cells' block slots;
         the sparse side is :meth:`blocked_sparse` restricted to the
         complementary cells, so each representation is materialized
-        exactly where it is streamed.
+        exactly where it is streamed.  ``weights`` threads the bucketed
+        traversal's edge weights into both sides (0 = no arc).
         """
         dense_cells = np.asarray(dense_cells, bool)
         if dense_cells.shape != (self.R, self.C):
@@ -564,15 +604,20 @@ class TwoDPartition:
                 f"dense_cells shape {dense_cells.shape} != grid {(self.R, self.C)}"
             )
         sparse = self.blocked_sparse(
-            bm, bk, ring=ring, dtype=dtype, cells=~dense_cells
+            bm, bk, ring=ring, dtype=dtype, cells=~dense_cells, weights=weights
         )
+        wrc = None if weights is None else self.arc_weights(weights)
         m, k = self.C * self.chunk, self.R * self.chunk
         blocks = np.zeros((self.R, self.C, m, k), np.float32)
         for i in range(self.R):
             for j in range(self.C):
                 if dense_cells[i, j]:
                     d, s = self._cell_arcs(i, j)
-                    blocks[i, j, d, s] = 1
+                    if wrc is None:
+                        blocks[i, j, d, s] = 1
+                    else:
+                        valid = self.dst_local[i, j] != self.C * self.chunk
+                        blocks[i, j, d, s] = wrc[i, j, valid]
         return HybridLayout(dense_cells=dense_cells, blocks=blocks, sparse=sparse)
 
 

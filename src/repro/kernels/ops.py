@@ -41,6 +41,7 @@ __all__ = [
     "segment_bag",
     "checksum_append",
     "checksum_residual",
+    "bucket_index",
     "on_tpu",
 ]
 
@@ -86,6 +87,23 @@ def _pad_cols(bs: int, *pairs):
     ``None`` arrays pass through (the optional ring ``acc``)."""
     return tuple(
         None if a is None else _pad_to(a, 1, bs, fill=f) for a, f in pairs
+    )
+
+
+def bucket_index(dist: jnp.ndarray, delta: float, unreached: int = -1) -> jnp.ndarray:
+    """i32 bucket ids ``⌊d/Δ⌋`` of a tentative-distance array.
+
+    Unreached vertices carry ``+inf`` distance; casting ``inf/Δ`` to int
+    is undefined, so the floor is computed on a 0-substituted copy and
+    masked back to ``unreached`` (the bucketed traversal's analogue of
+    the level array's -1).  Shared by the weighted round's 2-degree
+    depth derivation and its max-bucket reduction (core/driver.py).
+    """
+    delta_w = jnp.float32(delta)
+    finite = jnp.isfinite(dist)
+    safe = jnp.where(finite, dist, 0.0)
+    return jnp.where(
+        finite, jnp.floor(safe / delta_w).astype(jnp.int32), jnp.int32(unreached)
     )
 
 

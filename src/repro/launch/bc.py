@@ -6,6 +6,15 @@
         --mesh 2x4 --engine pallas --ckpt-dir /tmp/bc_ckpt
     PYTHONPATH=src python -m repro.launch.bc --rmat-scale 8 --mesh 2x2x2 \
         --overlap expand --straggler redeal
+    PYTHONPATH=src python -m repro.launch.bc --road 20x20 --weights dyadic \
+        --weighted --mesh 2x4 --engine pallas
+
+``--weighted`` swaps the level-synchronous traversal for the bucketed
+weighted one (distance buckets of width ``--delta``, auto-derived when
+unset); ``--weights unit|dyadic`` samples edge weights onto the
+generated graph (dyadic = k/4, k=1..16 — exactly representable, so f32
+distance sums are exact).  Weighted runs restrict ``--heuristics`` to
+the weight-sound modes (h0/h1/h1t).
 
 Supports single-device and distributed execution; every engine of the
 unified traversal stack is selectable with ``--engine`` (single-device:
@@ -100,6 +109,7 @@ from repro.core.distributed import (
 )
 from repro.distributed.fault_tolerance import BCCheckpoint
 from repro.graphs import grid_graph, rmat_graph, road_like_graph
+from repro.graphs.generators import WEIGHT_MODES, weighted_copy
 from repro.serving import SAMPLING_MODES
 
 
@@ -280,6 +290,32 @@ def main() -> None:
         help="seed of the root draw; the same seed gives nested "
         "samples as k grows (serving refinement extends evidence)",
     )
+    ap.add_argument(
+        "--weighted",
+        action="store_true",
+        help="weighted BC via the bucketed (delta-stepping-style) "
+        "traversal instead of the level-synchronous loop.  Needs edge "
+        "weights on the graph: pass --weights to sample them on the "
+        "generated graph.  Restricts --heuristics to the weight-sound "
+        "modes (h0/h1/h1t)",
+    )
+    ap.add_argument(
+        "--weights",
+        default="none",
+        choices=list(WEIGHT_MODES),
+        help="edge-weight mode of the generated graph: 'unit' (all 1.0; "
+        "reproduces the unweighted run exactly at --delta 1) or 'dyadic' "
+        "(k/4, k=1..16 — exactly representable, so distance sums are "
+        "exact in f32).  Implies nothing by itself; pair with --weighted",
+    )
+    ap.add_argument(
+        "--delta",
+        type=float,
+        default=None,
+        help="bucket width of the weighted traversal (needs --weighted; "
+        "default: derived from the weight distribution, see "
+        "repro.core.operators.auto_delta)",
+    )
     ap.add_argument("--ckpt-dir", default=None, help="round-ledger resume dir")
     ap.add_argument("--out", default=None)
     ap.add_argument("--top", type=int, default=10)
@@ -287,18 +323,29 @@ def main() -> None:
     logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
 
     if args.rmat_scale is not None:
-        graph = rmat_graph(args.rmat_scale, args.edge_factor, seed=1)
+        graph = rmat_graph(
+            args.rmat_scale, args.edge_factor, seed=1, weights=args.weights
+        )
         name = f"rmat_s{args.rmat_scale}_ef{args.edge_factor}"
     elif args.grid:
         r, c = map(int, args.grid.split("x"))
         graph = grid_graph(r, c)
+        if args.weights != "none":
+            graph = weighted_copy(graph, weights=args.weights, seed=1)
         name = f"grid_{r}x{c}"
     elif args.road:
         r, c = map(int, args.road.split("x"))
-        graph = road_like_graph(r, c, seed=1)
+        graph = road_like_graph(r, c, seed=1, weights=args.weights)
         name = f"road_{r}x{c}"
     else:
         raise SystemExit("pick --rmat-scale, --grid or --road")
+
+    if args.weighted and graph.w is None:
+        raise SystemExit(
+            "--weighted needs edge weights; pass --weights unit|dyadic"
+        )
+    if args.delta is not None and not args.weighted:
+        raise SystemExit("--delta sizes the weighted buckets; pass --weighted")
 
     checkpoint = None
     if args.ckpt_dir:
@@ -389,6 +436,7 @@ def main() -> None:
         f"heuristics={args.heuristics} engine={args.engine} "
         f"overlap={args.overlap} straggler={args.straggler} "
         f"sampling={args.sampling}"
+        + (f" weighted(delta={args.delta or 'auto'})" if args.weighted else "")
     )
     t0 = time.time()
     if mesh_shape is not None:
@@ -428,6 +476,8 @@ def main() -> None:
             autotune_cache=args.autotune_cache,
             chaos=args.chaos,
             full_result=True,
+            weighted=args.weighted,
+            delta=args.delta,
             **robust_kw,
             **sampling_kw,
         )
@@ -479,6 +529,8 @@ def main() -> None:
             heuristics=args.heuristics,
             engine_kind=args.engine,
             checkpoint=checkpoint,
+            weighted=args.weighted,
+            delta=args.delta,
             **sampling_kw,
         )
         bc, rounds = res.bc, res.rounds_run

@@ -1,0 +1,167 @@
+"""Distributed weighted (bucketed) BC == Dijkstra oracle, 8-device mesh.
+
+The acceptance matrix from the weighted-traversal work: every
+distributed engine kind × overlap policy on 2x4, 4x2 and a replicated
+sub-cluster mesh must match ``brandes_reference`` (which runs Dijkstra
+when the graph carries weights).  Dyadic weights make every shortest
+distance an exact f32 sum, so the tolerance is tight (1e-6).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import brandes_reference
+from repro.core.distributed import (
+    DIST_ENGINE_KINDS,
+    distributed_betweenness_centrality,
+    weighted_prior_levels,
+)
+from repro.core.operators import OVERLAP_POLICIES
+from repro.graphs import rmat_graph, road_like_graph
+from repro.graphs.generators import weighted_copy
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8, reason="needs 8 host devices"
+)
+
+
+def _mesh(shape, names):
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh(shape, names)
+
+
+def _check(graph, mesh_shape=(2, 4), replica=False, tol=1e-6, **kw):
+    kw.setdefault("batch_size", 8)
+    if replica:
+        mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+        bc, _ = distributed_betweenness_centrality(
+            graph, mesh, replica_axis="pod", weighted=True, **kw
+        )
+    else:
+        mesh = _mesh(mesh_shape, ("data", "model"))
+        bc, _ = distributed_betweenness_centrality(
+            graph, mesh, weighted=True, **kw
+        )
+    expected = brandes_reference(graph)
+    np.testing.assert_allclose(bc, expected, rtol=tol, atol=tol)
+    return bc
+
+
+def _graph(seed=7):
+    return rmat_graph(5, 3, seed=seed, weights="dyadic")
+
+
+# --------------------------------------------- full engine×overlap matrix
+
+
+@pytest.mark.parametrize("overlap", OVERLAP_POLICIES)
+@pytest.mark.parametrize("engine_kind", DIST_ENGINE_KINDS)
+def test_weighted_matrix_2x4(engine_kind, overlap):
+    _check(_graph(), (2, 4), engine_kind=engine_kind, overlap=overlap)
+
+
+@pytest.mark.parametrize("engine_kind", DIST_ENGINE_KINDS)
+def test_weighted_4x2(engine_kind):
+    _check(_graph(seed=11), (4, 2), engine_kind=engine_kind)
+
+
+@pytest.mark.parametrize("engine_kind", ["sparse", "pallas"])
+def test_weighted_subcluster(engine_kind):
+    _check(_graph(seed=5), replica=True, engine_kind=engine_kind,
+           overlap="expand")
+
+
+def test_weighted_road_like_explicit_delta():
+    g = road_like_graph(4, 6, seed=2, weights="dyadic")
+    _check(g, (2, 4), engine_kind="pallas_sparse", delta=0.5)
+
+
+def test_weighted_heuristics_h1():
+    _check(_graph(seed=3), (2, 4), engine_kind="sparse", heuristics="h1")
+
+
+# ------------------------------------------------------ unit-weight exact
+
+
+@pytest.mark.parametrize("engine_kind", ["sparse", "pallas"])
+def test_unit_weights_match_unweighted_distributed(engine_kind):
+    g = rmat_graph(5, 3, seed=3, weights="unit")
+    mesh = _mesh((2, 4), ("data", "model"))
+    bare = type(g)(n=g.n, src=g.src, dst=g.dst)
+    bc_u, _ = distributed_betweenness_centrality(
+        bare, mesh, engine_kind=engine_kind, batch_size=8
+    )
+    bc_w, _ = distributed_betweenness_centrality(
+        g, mesh, engine_kind=engine_kind, weighted=True, delta=1.0,
+        batch_size=8,
+    )
+    np.testing.assert_array_equal(np.asarray(bc_u), np.asarray(bc_w))
+
+
+# ------------------------------------------------------- bucket tie cases
+
+
+def test_bucket_boundary_ties_deterministic_across_dist_engines():
+    from repro.graphs.graph import Graph
+
+    edges = np.array([[0, 1], [1, 2], [2, 3], [0, 3], [1, 3], [2, 4], [4, 0]])
+    w = np.array([0.5, 0.5, 0.5, 1.0, 1.0, 0.5, 1.0], np.float32)
+    g = Graph.from_edges(5, edges, weights=w)
+    results = [
+        np.asarray(_check(g, (2, 4), engine_kind=ek, delta=0.5, batch_size=5))
+        for ek in DIST_ENGINE_KINDS
+    ]
+    for other in results[1:]:
+        np.testing.assert_array_equal(results[0], other)
+
+
+def test_weighted_copy_grid_parity():
+    from repro.graphs import grid_graph
+
+    g = weighted_copy(grid_graph(5, 5), weights="dyadic", seed=1)
+    _check(g, (2, 4), engine_kind="pallas_hybrid")
+
+
+# ------------------------------------------------------------------ gates
+
+
+def test_weighted_rejects_checksum_integrity():
+    mesh = _mesh((2, 4), ("data", "model"))
+    with pytest.raises(ValueError, match="checksum"):
+        distributed_betweenness_centrality(
+            _graph(), mesh, weighted=True, integrity="checksum", batch_size=8
+        )
+
+
+def test_weighted_rejects_autotune():
+    mesh = _mesh((2, 4), ("data", "model"))
+    with pytest.raises(ValueError, match="autotune"):
+        distributed_betweenness_centrality(
+            _graph(), mesh, weighted=True, autotune="measure", batch_size=8
+        )
+
+
+def test_weighted_needs_graph_weights():
+    mesh = _mesh((2, 4), ("data", "model"))
+    with pytest.raises(ValueError, match="edge weights"):
+        distributed_betweenness_centrality(
+            rmat_graph(5, 3, seed=0), mesh, weighted=True, batch_size=8
+        )
+
+
+def test_delta_requires_weighted_distributed():
+    mesh = _mesh((2, 4), ("data", "model"))
+    with pytest.raises(ValueError, match="weighted=True"):
+        distributed_betweenness_centrality(
+            _graph(), mesh, delta=0.5, batch_size=8
+        )
+
+
+def test_weighted_prior_levels_scales_with_bucket_count():
+    w = np.full(10, 4.0, np.float32)
+    wide = weighted_prior_levels(w, 0.25)   # mean/delta = 16x buckets
+    tight = weighted_prior_levels(w, 4.0)   # one weight per bucket
+    assert wide > tight
+    assert tight >= 1

@@ -1,0 +1,267 @@
+"""Weighted (bucketed-traversal) BC == Dijkstra oracle, single device.
+
+Covers the weighted operator family end-to-end through the public
+``betweenness_centrality(weighted=True)`` seam: hand-checked graphs,
+random dyadic-weighted parity across every engine × weight-sound
+heuristic, exact unit-weight reduction to the unweighted engine, the
+weight/delta validation gates, and the bucket edge cases (boundary
+ties, zero-weight rejection, delta auto-derivation determinism).
+"""
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core.bc import ENGINE_KINDS, WEIGHTED_HEURISTICS, betweenness_centrality
+from repro.core.brandes_ref import brandes_reference
+from repro.core.operators import (
+    WeightedDenseOperator,
+    WeightedSparseOperator,
+    auto_delta,
+)
+from repro.core.scheduler import validate_batch_size
+from repro.graphs.generators import (
+    WEIGHT_MODES,
+    rmat_graph,
+    road_like_graph,
+    sample_weights,
+    weighted_copy,
+)
+from repro.graphs.graph import Graph
+
+
+def _weighted_path():
+    # 0 -1.0- 1 -2.0- 2: all pairs route through 1 -> BC = [0, 2, 0]
+    return Graph.from_edges(
+        3, np.array([[0, 1], [1, 2]]), weights=np.array([1.0, 2.0], np.float32)
+    )
+
+
+def _weighted_square():
+    # unit square + a 0-2 shortcut of weight 2 that TIES the two
+    # two-hop routes: sigma(0,2)=3, so the tie-splitting is exercised.
+    # Hand-derived: BC = [1, 2/3, 1, 2/3].
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 0], [0, 2]])
+    w = np.array([1.0, 1.0, 1.0, 1.0, 2.0], np.float32)
+    return Graph.from_edges(4, edges, weights=w)
+
+
+# ------------------------------------------------------------ hand-checked
+
+
+def test_weighted_path_hand_checked():
+    g = _weighted_path()
+    got = betweenness_centrality(g, weighted=True, batch_size=3)
+    np.testing.assert_allclose(got.bc, [0.0, 2.0, 0.0], atol=1e-6)
+
+
+def test_weighted_square_tie_splitting():
+    g = _weighted_square()
+    got = betweenness_centrality(g, weighted=True, batch_size=4)
+    np.testing.assert_allclose(
+        got.bc, [1.0, 2.0 / 3.0, 1.0, 2.0 / 3.0], rtol=1e-6
+    )
+    np.testing.assert_allclose(got.bc, brandes_reference(g), rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- oracle parity, engines
+
+
+@pytest.mark.parametrize("engine_kind", ENGINE_KINDS)
+@pytest.mark.parametrize("heuristics", WEIGHTED_HEURISTICS)
+def test_weighted_parity_engines_heuristics(engine_kind, heuristics):
+    g = rmat_graph(5, 3, seed=7, weights="dyadic")
+    got = betweenness_centrality(
+        g, engine_kind=engine_kind, heuristics=heuristics, weighted=True,
+        batch_size=8,
+    )
+    np.testing.assert_allclose(got.bc, brandes_reference(g), rtol=1e-5, atol=1e-5)
+
+
+def test_weighted_road_like_parity():
+    g = road_like_graph(4, 5, seed=3, weights="dyadic")
+    got = betweenness_centrality(g, weighted=True, heuristics="h1", batch_size=8)
+    np.testing.assert_allclose(got.bc, brandes_reference(g), rtol=1e-5, atol=1e-5)
+
+
+def test_weighted_explicit_delta_parity():
+    g = rmat_graph(5, 3, seed=9, weights="dyadic")
+    ref = brandes_reference(g)
+    # delta below the min weight (every bucket a single settled front),
+    # at the dyadic quantum, and above the max weight (one giant bucket,
+    # pure within-bucket fixpoint) must all agree
+    for delta in (0.125, 0.25, 1.0, 8.0):
+        got = betweenness_centrality(g, weighted=True, delta=delta, batch_size=8)
+        np.testing.assert_allclose(got.bc, ref, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ unit-weight exact
+
+
+@pytest.mark.parametrize("engine_kind", ENGINE_KINDS)
+def test_unit_weights_reproduce_unweighted_exactly(engine_kind):
+    g = rmat_graph(5, 3, seed=3, weights="unit")
+    unweighted = betweenness_centrality(
+        Graph(n=g.n, src=g.src, dst=g.dst), engine_kind=engine_kind, batch_size=8
+    )
+    weighted = betweenness_centrality(
+        g, engine_kind=engine_kind, weighted=True, delta=1.0, batch_size=8
+    )
+    # bitwise, not approximate: at delta=1 the bucket loop visits the
+    # same frontiers and the dense sigma/delta contractions are the
+    # same dot_generals the level-synchronous engine runs
+    np.testing.assert_array_equal(
+        np.asarray(unweighted.bc), np.asarray(weighted.bc)
+    )
+
+
+# ------------------------------------------------------------------ gates
+
+
+def test_weighted_needs_weights():
+    g = rmat_graph(4, 2, seed=0)
+    with pytest.raises(ValueError, match="edge weights"):
+        betweenness_centrality(g, weighted=True, batch_size=4)
+
+
+def test_delta_needs_weighted():
+    g = rmat_graph(4, 2, seed=0, weights="dyadic")
+    with pytest.raises(ValueError, match="weighted=True"):
+        betweenness_centrality(g, delta=0.5, batch_size=4)
+
+
+@pytest.mark.parametrize("heuristics", ["h2", "h3", "h3t"])
+def test_weighted_rejects_level_based_heuristics(heuristics):
+    g = rmat_graph(4, 2, seed=0, weights="dyadic")
+    with pytest.raises(ValueError, match="unit edge lengths"):
+        betweenness_centrality(g, weighted=True, heuristics=heuristics, batch_size=4)
+
+
+def test_weighted_rejects_num_levels():
+    g = rmat_graph(4, 2, seed=0, weights="dyadic")
+    with pytest.raises(ValueError, match="data-dependent"):
+        betweenness_centrality(g, weighted=True, num_levels=4, batch_size=4)
+
+
+def test_weighted_rejects_bad_delta():
+    g = rmat_graph(4, 2, seed=0, weights="dyadic")
+    for bad in (0.0, -1.0, float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="delta"):
+            betweenness_centrality(g, weighted=True, delta=bad, batch_size=4)
+
+
+# ------------------------------------------------------- weight edge cases
+
+
+def test_zero_weight_edges_rejected():
+    with pytest.raises(ValueError, match="strictly positive"):
+        Graph.from_edges(
+            3, np.array([[0, 1], [1, 2]]), weights=np.array([1.0, 0.0])
+        )
+
+
+def test_negative_and_nonfinite_weights_rejected():
+    edges = np.array([[0, 1]])
+    for bad in (-0.5, float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="strictly positive"):
+            Graph.from_edges(2, edges, weights=np.array([bad]))
+
+
+def test_weight_modes_constant():
+    assert WEIGHT_MODES == ("none", "unit", "dyadic")
+    rng = np.random.default_rng(0)
+    w = sample_weights(rng, 1000, "dyadic")
+    assert w.dtype == np.float32
+    # dyadic = k/4 for k in 1..16: exactly representable, never zero
+    np.testing.assert_array_equal(w, np.round(w * 4) / 4)
+    assert w.min() >= 0.25 and w.max() <= 4.0
+    np.testing.assert_array_equal(sample_weights(rng, 10, "unit"), 1.0)
+    with pytest.raises(ValueError, match="weight"):
+        sample_weights(rng, 4, "bogus")
+
+
+def test_bucket_boundary_ties_deterministic_across_engines():
+    # weights sitting exactly ON the light/heavy boundary (w == delta)
+    # and exactly at a bucket edge (dist lands on k*delta): every engine
+    # must classify them identically and agree with the oracle
+    edges = np.array([[0, 1], [1, 2], [2, 3], [0, 3], [1, 3]])
+    w = np.array([0.5, 0.5, 0.5, 1.0, 1.0], np.float32)
+    g = Graph.from_edges(4, edges, weights=w)
+    ref = brandes_reference(g)
+    results = []
+    for ek in ENGINE_KINDS:
+        got = betweenness_centrality(
+            g, engine_kind=ek, weighted=True, delta=0.5, batch_size=4
+        )
+        np.testing.assert_allclose(got.bc, ref, rtol=1e-6, atol=1e-6)
+        results.append(np.asarray(got.bc))
+    for other in results[1:]:
+        np.testing.assert_array_equal(results[0], other)
+
+
+def test_auto_delta_deterministic_and_positive():
+    g1 = rmat_graph(5, 3, seed=42, weights="dyadic")
+    g2 = rmat_graph(5, 3, seed=42, weights="dyadic")
+    d1, d2 = auto_delta(g1), auto_delta(g2)
+    assert d1 == d2  # same seed -> bit-identical derivation
+    assert d1 > 0 and np.isfinite(d1)
+    assert d1 >= float(g1.w.min())  # never below the min weight
+    with pytest.raises(ValueError, match="weight"):
+        auto_delta(Graph(n=2, src=np.array([0, 1]), dst=np.array([1, 0])))
+
+
+def test_weighted_copy_deterministic():
+    g = rmat_graph(5, 3, seed=1)
+    a = weighted_copy(g, weights="dyadic", seed=5)
+    b = weighted_copy(g, weights="dyadic", seed=5)
+    np.testing.assert_array_equal(a.w, b.w)
+    assert a.w is not None and a.w.min() > 0
+    np.testing.assert_array_equal(a.src, g.src)
+    np.testing.assert_array_equal(a.dst, g.dst)
+
+
+# -------------------------------------------------- operator-level checks
+
+
+def test_weighted_operator_rejects_bad_delta():
+    w = np.ones((3, 3), np.float32)
+    for bad in (0.0, -2.0, float("inf")):
+        with pytest.raises(ValueError, match="delta"):
+            WeightedDenseOperator(np.asarray(w), bad)
+    with pytest.raises(ValueError, match="delta"):
+        WeightedSparseOperator(
+            np.array([0]), np.array([1]), np.array([1.0], np.float32), 2, 0.0
+        )
+
+
+# ------------------------------------------- batch-size hint suppression
+
+
+def test_mxu_hint_fires_without_population(caplog):
+    with caplog.at_level(logging.WARNING, logger="repro.core.scheduler"):
+        validate_batch_size(48)
+    assert any("wasted MXU" in r.message for r in caplog.records)
+
+
+def test_mxu_hint_suppressed_when_population_binds(caplog):
+    # sampled run with sample_k=32 < batch_size=48: no wider batch could
+    # ever fill, so the hint would nag about an unfixable number
+    with caplog.at_level(logging.WARNING, logger="repro.core.scheduler"):
+        validate_batch_size(48, population=32)
+    assert not any("wasted MXU" in r.message for r in caplog.records)
+
+
+def test_mxu_hint_kept_when_population_is_wide(caplog):
+    with caplog.at_level(logging.WARNING, logger="repro.core.scheduler"):
+        validate_batch_size(48, population=500)
+    assert any("wasted MXU" in r.message for r in caplog.records)
+
+
+def test_sampled_run_with_small_k_no_hint(caplog):
+    # end-to-end: the binding constraint is the sampled root pool
+    g = rmat_graph(5, 3, seed=2)
+    with caplog.at_level(logging.WARNING, logger="repro.core.scheduler"):
+        betweenness_centrality(
+            g, batch_size=48, sampling="fixed", sample_k=16, sample_seed=0
+        )
+    assert not any("wasted MXU" in r.message for r in caplog.records)

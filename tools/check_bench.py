@@ -79,6 +79,9 @@ STRUCTURAL_MARKERS = (
     "deal",
     "batch_size",
     "total_levels",
+    # the weighted section's bucket width: auto_delta is a deterministic
+    # function of the graph (weight statistics), a code property
+    "delta",
 )
 
 #: parity-error metrics: near-exact floats (the oracle comparison is

@@ -4,7 +4,7 @@ README.md and ARCHITECTURE.md document the engine × overlap × heuristics
 × straggler configuration matrix.  Those lists have single sources of
 truth in code (`ENGINE_KINDS`, `DIST_ENGINE_KINDS`, `OVERLAP_POLICIES`,
 `HEURISTICS_MODES`, `STRAGGLER_POLICIES`, `AUTOTUNE_MODES`,
-`FAULT_KINDS`, `INTEGRITY_MODES`); this check
+`FAULT_KINDS`, `INTEGRITY_MODES`, `WEIGHT_MODES`); this check
 fails CI when a
 constant gains a value the docs never mention — the failure mode where a
 new engine/policy ships undocumented.  (The reverse — docs mentioning a
@@ -37,6 +37,7 @@ def main() -> int:
     from repro.core.operators import OVERLAP_POLICIES
     from repro.core.scheduler import HEURISTICS_MODES
     from repro.distributed.chaos import FAULT_KINDS
+    from repro.graphs.generators import WEIGHT_MODES
     from repro.serving import SAMPLING_MODES
 
     overlap_choices = tuple(OVERLAP_POLICIES) + ("auto",)  # CLI surface
@@ -51,6 +52,7 @@ def main() -> int:
             "chaos (FAULT_KINDS)": FAULT_KINDS,
             "integrity (INTEGRITY_MODES)": INTEGRITY_MODES,
             "sampling (SAMPLING_MODES)": SAMPLING_MODES,
+            "weights (WEIGHT_MODES)": WEIGHT_MODES,
         },
         "ARCHITECTURE.md": {
             "engine_kind (distributed DIST_ENGINE_KINDS)": DIST_ENGINE_KINDS,
@@ -60,6 +62,7 @@ def main() -> int:
             "chaos (FAULT_KINDS)": FAULT_KINDS,
             "integrity (INTEGRITY_MODES)": INTEGRITY_MODES,
             "sampling (SAMPLING_MODES)": SAMPLING_MODES,
+            "weights (WEIGHT_MODES)": WEIGHT_MODES,
         },
     }
     failures: list[str] = []
